@@ -1,0 +1,139 @@
+"""Shared benchmark utilities: tiny configs, BC pre-training (the
+OpenVLA-OFT supervised stand-in), timing helpers, and result I/O."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ModelConfig, RLConfig, RuntimeConfig
+from repro.envs.toy_manipulation import ManipulationEnv
+from repro.models.policy import init_policy_params, policy_forward
+from repro.models.transformer import FRONTEND_DIM
+from repro.optim import adamw
+
+OUT_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "bench"
+
+
+def tiny_cfg(arch: str = "deepseek-7b", layers: int = 2,
+             d_model: int = 128) -> ModelConfig:
+    import dataclasses
+    cfg = reduced(get_config(arch), layers=layers, d_model=d_model)
+    return dataclasses.replace(cfg, num_prefix_tokens=1)
+
+
+def save(name: str, result: Dict) -> None:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    (OUT_DIR / f"{name}.json").write_text(json.dumps(result, indent=1,
+                                                     default=str))
+
+
+def frames_to_prefix(frames: np.ndarray) -> np.ndarray:
+    """[..., F_env] -> [..., 1, FRONTEND_DIM]."""
+    out = np.zeros(frames.shape[:-1] + (1, FRONTEND_DIM), np.float32)
+    out[..., 0, :frames.shape[-1]] = frames
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Behavior cloning on oracle demonstrations — the supervised (OpenVLA-OFT)
+# baseline / the "suboptimal checkpoint" initialisation of Fig. 4b.
+# ---------------------------------------------------------------------------
+
+def collect_demos(suite: str, cfg: ModelConfig, *, episodes: int,
+                  max_steps: int = 14, seed: int = 0,
+                  noise: float = 0.05) -> List[Dict]:
+    env = ManipulationEnv(suite=suite, action_vocab=cfg.action_vocab_size,
+                          action_dim=cfg.action_dim, max_steps=max_steps,
+                          seed=seed)
+    env._rng = np.random.default_rng(seed)      # oracle noise source
+    rng = np.random.default_rng(seed + 1)
+    demos = []
+    for ep in range(episodes):
+        obs = env.reset(int(rng.integers(0, 10)))
+        done = False
+        while not done:
+            a = env.oracle_action()
+            demos.append({"tokens": obs["tokens"], "frame": obs["frame"],
+                          "step": obs["step"], "actions": a})
+            obs, _, done, _ = env.step(a)
+    return demos
+
+
+def bc_train(cfg: ModelConfig, demos: List[Dict], *, steps: int = 150,
+             batch: int = 32, lr: float = 3e-4, seed: int = 0):
+    """Supervised fine-tuning baseline: CE on oracle action tokens."""
+    params = init_policy_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw.init(params)
+    rng = np.random.default_rng(seed)
+
+    def loss_fn(p, tokens, prefix, step_t, actions):
+        out = policy_forward(cfg, p, tokens, actions, step_t,
+                             prefix_embeds=prefix)
+        logp = jax.nn.log_softmax(out.logits, axis=-1)
+        tgt = jnp.take_along_axis(logp, actions[..., None], axis=-1)
+        return -tgt.mean()
+
+    @jax.jit
+    def step(p, o, tokens, prefix, step_t, actions):
+        l, g = jax.value_and_grad(loss_fn)(p, tokens, prefix, step_t,
+                                           actions)
+        p, o, _ = adamw.update(g, o, p, jnp.asarray(lr))
+        return p, o, l
+
+    losses = []
+    n = len(demos)
+    for it in range(steps):
+        idx = rng.integers(0, n, batch)
+        tokens = np.stack([demos[i]["tokens"] for i in idx])
+        prefix = frames_to_prefix(
+            np.stack([demos[i]["frame"] for i in idx]))
+        step_t = np.array([demos[i]["step"] for i in idx], np.int32)
+        actions = np.stack([demos[i]["actions"] for i in idx])
+        params, opt, l = step(params, opt, tokens, prefix, step_t, actions)
+        losses.append(float(l))
+    return params, losses
+
+
+def eval_policy(cfg: ModelConfig, params, suite: str, *, episodes: int = 20,
+                max_steps: int = 14, temperature: float = 0.3,
+                seed: int = 321) -> Dict:
+    from repro.models.policy import make_inference_fn
+    fn = make_inference_fn(cfg, temperature=temperature)
+    env = ManipulationEnv(suite=suite, action_vocab=cfg.action_vocab_size,
+                          action_dim=cfg.action_dim, max_steps=max_steps,
+                          seed=seed)
+    key = jax.random.PRNGKey(seed)
+    succ, rets = 0, []
+    for ep in range(episodes):
+        obs = env.reset(ep % 10)
+        done, ep_ret = False, 0.0
+        while not done:
+            key, sub = jax.random.split(key)
+            toks, _, _ = fn(params, sub, obs["tokens"][None],
+                            np.array([obs["step"]], np.int32),
+                            frames_to_prefix(obs["frame"][None]))
+            obs, r, done, info = env.step(np.asarray(toks[0]))
+            ep_ret += r
+        succ += int(info["success"])
+        rets.append(ep_ret)
+    return {"success_rate": succ / episodes,
+            "mean_return": float(np.mean(rets))}
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall seconds per call (blocks on jax results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))

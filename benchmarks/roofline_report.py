@@ -1,0 +1,85 @@
+"""Deliverable (g): render the roofline table from the dry-run artifacts.
+
+Reads experiments/dryrun/<mesh>/*.json (produced by
+``python -m repro.launch.dryrun --all [--multi-pod]``) and prints/writes the
+per-(arch × shape) three-term roofline with the dominant bottleneck,
+MODEL_FLOPS ratio, and per-device HBM, plus a one-line "what would move the
+dominant term" note derived from the collective mix.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / "experiments"
+
+
+def _advice(rec: Dict) -> str:
+    r = rec["roofline"]
+    dom = r["dominant"]
+    coll = {k: v for k, v in r["coll_by_kind"].items() if k != "counts"}
+    top_coll = max(coll, key=coll.get) if any(coll.values()) else "none"
+    if dom == "collective":
+        return (f"cut {top_coll} volume (resharding of "
+                f"{'experts/FSDP params' if rec.get('fsdp') else 'activations/KV'})")
+    if dom == "memory":
+        return "reduce bytes: fuse/bf16 more intermediates, larger blocks"
+    return "already compute-bound: raise MFU via layout/fusion"
+
+
+def load(mesh: str = "16x16") -> List[Dict]:
+    d = OUT / "dryrun" / mesh
+    recs = []
+    for f in sorted(d.glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def render(mesh: str = "16x16") -> str:
+    recs = load(mesh)
+    lines = [
+        f"### Roofline — mesh {mesh}",
+        "",
+        "| arch | shape | variant | compute s | memory s | collective s | "
+        "dominant | MODEL/HLO | HBM GiB/dev (state) | fix |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    ok = fail = 0
+    for rec in recs:
+        if "error" in rec:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | "
+                         f"{rec.get('variant', '?')} | — | — | — | "
+                         f"FAILED: {rec['error'][:60]} | — | — | — |")
+            fail += 1
+            continue
+        r = rec["roofline"]
+        hbm = rec["memory"]["total_hbm_bytes"] / 2**30
+        state = rec.get("state_bytes_per_dev")
+        hbm_s = f"{hbm:.2f}" + (f" ({state/2**30:.2f})" if state else "")
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec.get('variant', '')} | "
+            f"{r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | {hbm_s} | "
+            f"{_advice(rec)} |")
+        ok += 1
+    lines.append("")
+    lines.append(f"{ok} ok / {fail} failed of {ok + fail} pairs.")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True) -> Dict:
+    out = {}
+    for mesh in ("16x16", "2x16x16"):
+        if (OUT / "dryrun" / mesh).exists():
+            text = render(mesh)
+            print(text)
+            out[mesh] = text
+    (OUT / "roofline_report.md").write_text(
+        "\n\n".join(out.values()) if out else "no dry-run artifacts yet\n")
+    return {"meshes": list(out)}
+
+
+if __name__ == "__main__":
+    run()

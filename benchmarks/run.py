@@ -1,0 +1,51 @@
+"""Benchmark driver — one module per paper table/figure (DESIGN.md §6).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+| module            | paper artifact                                   |
+|-------------------|--------------------------------------------------|
+| throughput        | Table 1, Fig. 3 (+ eq. 1 batching window)        |
+| task_success      | Table 2 (RL vs supervised, four suites)          |
+| gipo_ablation     | Fig. 8, Table 9 (GIPO vs PPO under staleness)    |
+| value_recompute   | Fig. 7, App. C.1 (fused JIT-GAE, ~30% speedup)   |
+| sync_overhead     | Table 8 (weight-sync transports, policy lag)     |
+| sample_efficiency | Fig. 4b (WM vs model-free real-step efficiency)  |
+| roofline_report   | deliverable (g): dry-run roofline table          |
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+MODULES = ("value_recompute", "gipo_ablation", "sync_overhead",
+           "throughput", "task_success", "sample_efficiency",
+           "roofline_report")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="long runs (default: quick)")
+    ap.add_argument("--only", choices=MODULES)
+    args = ap.parse_args()
+
+    mods = [args.only] if args.only else list(MODULES)
+    failures = []
+    for name in mods:
+        print(f"\n=== {name} " + "=" * max(60 - len(name), 0), flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run(quick=not args.full)
+            print(f"--- {name} done in {time.time() - t0:.1f}s")
+        except Exception:  # noqa: BLE001 — keep the suite going
+            traceback.print_exc()
+            failures.append(name)
+    print(f"\n{len(mods) - len(failures)}/{len(mods)} benchmarks OK"
+          + (f"; FAILED: {failures}" if failures else ""))
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Table 8: weight-synchronization overhead across transport paths.
+
+Three transports (App. G.3): NCCL-analogue direct reference swap,
+host-mediated serialize/deserialize (PCIe path), and shared-storage
+checkpoint reload (AReaL-style). Measures publish→acquire latency and the
+resulting policy lag in a live async run.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from benchmarks.common import save, tiny_cfg
+from repro.configs.base import RLConfig, RuntimeConfig
+from repro.models.policy import init_policy_params
+from repro.runtime import (AcceRLSystem, DirectTransport, DiskTransport,
+                           SerializedTransport, VersionedWeightStore)
+
+
+def sync_latency(transport, params, iters: int = 5) -> Dict:
+    store = VersionedWeightStore(transport=transport)
+    lat = []
+    for v in range(iters):
+        t0 = time.perf_counter()
+        store.begin_publish()
+        store.publish(params, v)
+        got = store.acquire(newer_than=v - 1, timeout=10.0)
+        assert got is not None
+        jax.block_until_ready(got[0])
+        lat.append(time.perf_counter() - t0)
+    return {"median_ms": float(np.median(lat) * 1e3),
+            "p90_ms": float(np.percentile(lat, 90) * 1e3)}
+
+
+def live_policy_lag(transport, wall: float, seed: int = 0) -> float:
+    cfg = tiny_cfg(layers=2, d_model=64)
+    rl = RLConfig(grad_accum=1, lr_policy=1e-4, lr_value=1e-3)
+    rt = RuntimeConfig(num_rollout_workers=4, inference_batch=4)
+    sys_ = AcceRLSystem(cfg, rl, rt, suite="spatial", segment_horizon=4,
+                        max_episode_steps=10, batch_episodes=4,
+                        transport=transport, seed=seed)
+    m = sys_.run_async(train_steps=10_000, wall_timeout_s=wall)
+    return m["mean_policy_lag"]
+
+
+def run(quick: bool = True) -> Dict:
+    # a mid-size parameter tree so serialization/disk costs are visible
+    cfg = tiny_cfg(layers=4, d_model=256)
+    params = init_policy_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(np.prod(x.shape) for x in jax.tree.leaves(params))
+    wall = 20.0 if quick else 60.0
+
+    result: Dict = {"n_params": int(n_params)}
+    for name, t in (("nccl_direct", DirectTransport()),
+                    ("host_serialized", SerializedTransport()),
+                    ("shared_storage", DiskTransport())):
+        lat = sync_latency(t, params)
+        result[name] = {"latency": lat}
+        print(f"  {name:16s}: publish->acquire {lat['median_ms']:8.2f} ms")
+    for name, t in (("nccl_direct", DirectTransport()),
+                    ("shared_storage", DiskTransport())):
+        lag = live_policy_lag(t, wall)
+        result[name]["policy_lag"] = lag
+        print(f"  {name:16s}: live policy lag {lag:.3f} versions")
+
+    save("sync_overhead", result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

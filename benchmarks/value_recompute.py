@@ -1,0 +1,96 @@
+"""Paper Figure 7 + App. C.1: the value-recomputation mechanism.
+
+  (a) Step-time: the fused JIT-GAE step vs the traditional pipeline with a
+      SEPARATE value re-inference pass (the paper reports ~30% end-to-end
+      speedup from fusing it into the training forward).
+  (b) Stability: short stale-data training with recompute ON vs OFF
+      (OFF uses collection-time values for GAE — misaligned targets).
+  (c) Equivalence: within a frozen-parameter accumulation window the fused
+      advantages match a forced re-inference exactly (eq. 7 argument).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import numpy as np
+
+from benchmarks.common import save, timeit, tiny_cfg
+from repro.configs.base import RLConfig
+from repro.core.train_step import (TrainState, _score_batch,
+                                   init_train_state, make_train_step)
+from repro.data.trajectory import dummy_batch
+
+
+def run(quick: bool = True) -> Dict:
+    cfg = tiny_cfg(layers=2, d_model=128)
+    rl_on = RLConfig(grad_accum=2, value_recompute=True)
+    rl_off = RLConfig(grad_accum=2, value_recompute=False)
+    batch = dummy_batch(8, 6, 12, cfg.action_dim, cfg.vocab_size,
+                        cfg.action_vocab_size, num_prefix=1)
+
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    fused = make_train_step(cfg, rl_on, donate=False)
+
+    # traditional pipeline: a full extra value forward over the batch,
+    # then the same train step (values recomputed separately).
+    score = jax.jit(functools.partial(_score_batch, cfg, remat=False))
+
+    def separate(state, batch):
+        _, values, _ = score(state.params, batch)
+        batch = batch._replace(behavior_value=values)
+        return fused(state, batch)
+
+    t_fused = timeit(lambda: fused(state, batch), iters=5)
+    t_sep = timeit(lambda: separate(state, batch), iters=5)
+    speedup = (t_sep - t_fused) / t_sep
+    print(f"  fused {t_fused*1e3:.1f} ms vs separate {t_sep*1e3:.1f} ms "
+          f"-> {speedup*100:.1f}% step-time saving (paper: ~30% e2e)")
+
+    # --- (c) equivalence within the frozen-param window ---------------------
+    from repro.core import gae
+    _, values, _ = _score_batch(cfg, state.params, batch, remat=False)
+    adv_fused, _ = gae.jit_gae_from_forward(
+        values, batch.rewards, batch.dones, rl_on.discount,
+        rl_on.gae_lambda)
+    # "forced re-inference": same params (frozen window) — must be identical
+    _, values2, _ = _score_batch(cfg, state.params, batch, remat=False)
+    adv_reinfer, _ = gae.jit_gae_from_forward(
+        values2, batch.rewards, batch.dones, rl_on.discount,
+        rl_on.gae_lambda)
+    equiv_err = float(np.abs(np.asarray(adv_fused)
+                             - np.asarray(adv_reinfer)).max())
+    print(f"  fused-vs-reinference advantage max err: {equiv_err:.2e}")
+
+    # --- (b) stability: recompute ON vs OFF on drifting values --------------
+    steps = 30 if quick else 120
+    curves = {}
+    for name, rl in (("revalue_on", rl_on), ("revalue_off", rl_off)):
+        st = init_train_state(cfg, jax.random.PRNGKey(1))
+        step_fn = make_train_step(cfg, rl, donate=False)
+        rng = np.random.default_rng(0)
+        losses = []
+        for it in range(steps):
+            b = dummy_batch(8, 6, 12, cfg.action_dim, cfg.vocab_size,
+                            cfg.action_vocab_size, num_prefix=1,
+                            seed=it)
+            # stale values: behavior_value drifts from truth as it ages
+            b = b._replace(behavior_value=b.behavior_value
+                           + rng.normal(0, 0.5 + 0.05 * it,
+                                        b.behavior_value.shape
+                                        ).astype(np.float32))
+            st, m = step_fn(st, b)
+            losses.append(float(m["value_loss"]))
+        curves[name] = losses
+        print(f"  {name}: final value-loss {np.mean(losses[-5:]):.4f}")
+
+    result = {"t_fused_ms": t_fused * 1e3, "t_separate_ms": t_sep * 1e3,
+              "step_time_saving": speedup, "equivalence_max_err": equiv_err,
+              "stability_value_loss": curves}
+    save("value_recompute", result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

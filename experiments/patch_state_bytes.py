@@ -1,0 +1,42 @@
+"""Back-fill ``state_bytes_per_dev`` (analytic params+cache residency) into
+existing dry-run records — no recompilation needed.
+
+    PYTHONPATH=src python experiments/patch_state_bytes.py [mesh ...]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+import pathlib
+import sys
+
+from repro.configs import get_config, get_shape
+from repro.launch import steps
+from repro.launch.dryrun import _sharded_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.sharding.rules import FSDP_PARAM_THRESHOLD
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+for mesh_tag in (sys.argv[1:] or ["16x16", "2x16x16"]):
+    d = HERE / "dryrun" / mesh_tag
+    if not d.exists():
+        continue
+    mesh = make_production_mesh(multi_pod=mesh_tag == "2x16x16")
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if "error" in rec or rec.get("kind") == "train":
+            continue
+        cfg = get_config(rec["arch"])
+        shape = get_shape(rec["shape"])
+        fsdp = cfg.param_count() > FSDP_PARAM_THRESHOLD
+        builder = (steps.prefill_specs if shape.kind == "prefill"
+                   else steps.serve_specs)
+        with mesh:
+            sp = builder(cfg, shape, mesh, fsdp=fsdp)
+        rec["state_bytes_per_dev"] = (
+            _sharded_bytes(sp["params"], sp["shardings"]["params"])
+            + _sharded_bytes(sp["cache"], sp["shardings"]["cache"]))
+        f.write_text(json.dumps(rec, indent=1))
+        print(f"{mesh_tag} {rec['arch']} {rec['shape']}: "
+              f"state {rec['state_bytes_per_dev']/2**30:.2f} GiB")

@@ -1,0 +1,253 @@
+"""Configuration dataclasses for the AcceRL reproduction.
+
+Every selectable architecture (``--arch <id>``) is a :class:`ModelConfig`;
+the RL pipeline, world model, and distribution settings have their own
+dataclasses so the launcher can compose them freely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings (GShard-style capacity dispatch)."""
+
+    num_experts: int
+    top_k: int
+    d_ff: int                       # per-expert hidden width
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    load_balance_coef: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) settings."""
+
+    state_dim: int = 128            # N
+    head_dim: int = 64              # P
+    expand: int = 2                 # d_inner = expand * d_model
+    conv_dim: int = 4               # depthwise causal conv kernel
+    chunk: int = 128                # SSD chunk length
+    n_groups: int = 1               # B/C groups (shared across heads)
+    # Hillclimb (§Perf, mamba2): split the fused in_proj into three
+    # independently-sharded projections so the z/xBC/dt split never
+    # crosses shard boundaries (kills a per-layer all-gather).
+    fused_in_proj: bool = True
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def num_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style hybrid: Mamba2 trunk + a single *shared* attention block
+    applied every ``shared_every`` layers (weights tied across applications)."""
+
+    shared_every: int = 6
+    shared_d_ff: int = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A policy-backbone architecture.
+
+    ``arch_type`` in {dense, moe, ssm, hybrid, audio, vlm}. ``audio`` and
+    ``vlm`` use the same decoder stack as ``dense`` but accept precomputed
+    modality embeddings from the (stubbed) frontend via ``prefix_embeds``.
+    """
+
+    name: str
+    arch_type: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    source: str = ""                # citation / model card
+
+    # -- action head (paper App. D.1 vocabulary slimming) --------------------
+    action_vocab_size: int = 256    # slimmed output head
+    action_dim: int = 7             # action tokens emitted per env step
+    max_episode_steps: int = 512    # for the value-head step embedding
+
+    # -- attention ------------------------------------------------------------
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    sliding_window: Optional[int] = None      # normal operation
+    long_context_window: int = 8192           # long_500k fallback for dense
+    head_dim_override: Optional[int] = None
+
+    # -- optional sub-configs ---------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+
+    # -- multimodal stub frontend ----------------------------------------------
+    num_prefix_tokens: int = 0       # vision patches / audio frames per sample
+
+    # -- numerics ---------------------------------------------------------------
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+
+    @property
+    def head_dim(self) -> int:
+        if self.head_dim_override is not None:
+            return self.head_dim_override
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.arch_type == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Natively sub-quadratic in context length (SSM state / window)."""
+        return self.arch_type in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks + action head)."""
+        d, L = self.d_model, self.num_layers
+        total = self.vocab_size * d                    # embedding
+        total += self.action_vocab_size * d            # slimmed head
+        if self.arch_type == "ssm":
+            assert self.ssm is not None
+            di = self.ssm.d_inner(d)
+            nh = self.ssm.num_heads(d)
+            g = self.ssm.n_groups
+            per = (
+                d * (2 * di + 2 * g * self.ssm.state_dim + nh)  # in_proj
+                + self.ssm.conv_dim * (di + 2 * g * self.ssm.state_dim)
+                + nh                                   # A_log
+                + nh                                   # dt bias
+                + di                                   # gated norm
+                + di * d                               # out_proj
+                + d                                    # pre-norm
+            )
+            return total + L * per
+        kvh = self.num_kv_heads
+        hd = self.head_dim
+        attn = d * self.num_heads * hd + 2 * d * kvh * hd + self.num_heads * hd * d
+        if self.arch_type == "moe":
+            assert self.moe is not None
+            ff = 3 * d * self.moe.d_ff * self.moe.num_experts
+            ff += d * self.moe.num_experts             # router
+        else:
+            ff = 3 * d * self.d_ff
+        per = attn + ff + 2 * d                        # two norms
+        total += L * per
+        if self.arch_type == "hybrid":
+            assert self.ssm is not None and self.hybrid is not None
+            di = self.ssm.d_inner(d)
+            nh = self.ssm.num_heads(d)
+            g = self.ssm.n_groups
+            per = (
+                d * (2 * di + 2 * g * self.ssm.state_dim + nh)
+                + self.ssm.conv_dim * (di + 2 * g * self.ssm.state_dim)
+                + 2 * nh + di + di * d + d
+            )
+            shared = attn + 3 * d * self.hybrid.shared_d_ff + 2 * d
+            total = self.vocab_size * d + self.action_vocab_size * d
+            total += L * per + shared
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts)."""
+        if self.arch_type != "moe":
+            return self.param_count()
+        assert self.moe is not None
+        d, L = self.d_model, self.num_layers
+        dense_share = self.param_count() - L * 3 * d * self.moe.d_ff * self.moe.num_experts
+        return dense_share + L * 3 * d * self.moe.d_ff * self.moe.top_k
+
+
+@dataclasses.dataclass(frozen=True)
+class RLConfig:
+    """GIPO / PPO training settings (paper Table 3/5/6)."""
+
+    algo: str = "gipo"               # {"gipo", "ppo"}
+    gipo_sigma: float = 0.2
+    ppo_clip: float = 0.2
+    discount: float = 0.99
+    gae_lambda: float = 0.95
+    value_coef: float = 0.5
+    kl_coef: float = 0.1
+    entropy_coef: float = 0.0
+    lr_policy: float = 3e-6
+    lr_value: float = 3e-5
+    warmup_steps: int = 500
+    micro_batch: int = 16
+    grad_accum: int = 2
+    value_recompute: bool = True     # JIT-GAE fused into the train step
+    adv_norm: str = "lagged_global"  # {"lagged_global", "batch", "none"}
+    max_grad_norm: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class WMConfig:
+    """World model settings (paper §4, Table 4/5)."""
+
+    imagine_horizon: int = 2
+    frame_embed_dim: int = 256       # pixel-interface embedding width (stub codec)
+    frame_tokens: int = 16           # patches per frame
+    denoiser_layers: int = 4
+    denoiser_d_model: int = 256
+    denoiser_heads: int = 4
+    history_frames: int = 4          # conditioning context ("step conditions")
+    diffusion_steps: int = 8         # sampling steps at rollout time
+    reward_train_interval: int = 15
+    obs_train_interval: int = 3
+    reward_scale: float = 5.0
+    sigma_data: float = 0.5          # EDM preconditioning
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Asynchronous runtime (paper §3, eq. 1)."""
+
+    num_rollout_workers: int = 6
+    num_inference_workers: int = 1
+    num_trainer_workers: int = 1
+    inference_batch: int = 8         # B in eq. 1
+    inference_max_wait_s: float = 0.01   # T_max in eq. 1
+    replay_capacity: int = 3000      # episodes
+    wm_replay_capacity: int = 50_000
+    img_replay_capacity: int = 10_000
+    min_buffer_episodes: int = 4
+    sync_mode: bool = False          # True reproduces the synchronous baseline
+    weight_sync_interval: int = 1    # trainer steps between publishes
+    drain: bool = True               # inference-drain protocol (App. D.6)
+    prefetch_depth: int = 2
+    batch_buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)  # TPU-friendly pads
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the four assigned input shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # {"train", "prefill", "decode"}
+
+
+INPUT_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in INPUT_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown input shape {name!r}; have "
+                   f"{[s.name for s in INPUT_SHAPES]}")

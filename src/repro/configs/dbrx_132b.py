@@ -1,0 +1,15 @@
+"""dbrx-132b — fine-grained MoE, 16 experts top-4. [hf:databricks/dbrx-base]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    arch_type="moe",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    moe=MoEConfig(num_experts=16, top_k=4, d_ff=10752),
+    source="hf:databricks/dbrx-base",
+)

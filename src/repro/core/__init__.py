@@ -1,0 +1,14 @@
+"""The paper's primary contribution: GIPO, just-in-time GAE value
+recomputation, lagged global advantage normalization, the trainer step, and
+dynamic weighted resampling. The asynchronous scheduler lives in
+``repro.runtime``; this package holds the math."""
+from repro.core import advnorm, gae, gipo, resampler, train_step  # noqa: F401
+from repro.core.advnorm import AdvNormState, init_adv_state  # noqa: F401
+from repro.core.resampler import DynamicWeightedResampler  # noqa: F401
+from repro.core.train_step import (  # noqa: F401
+    TrainState,
+    init_train_state,
+    loss_fn,
+    make_train_step,
+    train_step,
+)

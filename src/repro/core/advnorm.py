@@ -1,0 +1,87 @@
+"""Lagged global advantage normalization (paper eq. 8 + App. C.1/C.2).
+
+The paper hides the all-reduce of advantage statistics behind
+backpropagation: the *current* batch is normalized with the *previous*
+optimizer step's global moving statistics; the current batch's local
+(sum, sum², count) triple is aggregated with ONE packed collective at the
+gradient-accumulation boundary and folded into a running Welford state.
+
+``psum_stats`` is the collective (``jax.lax.psum`` of a packed (3,) vector
+— the JAX-native twin of the paper's single ``dist.all_reduce``); under
+GSPMD/jit outside shard_map, ``jnp.sum`` over the sharded batch produces
+the same all-reduce, so both paths are provided.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdvNormState(NamedTuple):
+    """Welford running state of the advantage distribution."""
+
+    count: jnp.ndarray   # f32 scalar
+    mean: jnp.ndarray    # f32 scalar
+    m2: jnp.ndarray      # f32 scalar (sum of squared deviations)
+
+    @property
+    def std(self) -> jnp.ndarray:
+        var = jnp.where(self.count > 1, self.m2 / jnp.maximum(self.count, 1.0),
+                        1.0)
+        return jnp.sqrt(jnp.clip(var, 1e-12, None))
+
+
+def init_adv_state() -> AdvNormState:
+    return AdvNormState(count=jnp.zeros(()), mean=jnp.zeros(()),
+                        m2=jnp.zeros(()))
+
+
+def local_stats(adv: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Packed (sum, sum², count) — the single tensor that gets all-reduced."""
+    s = jnp.sum(adv * mask)
+    sq = jnp.sum(jnp.square(adv) * mask)
+    n = jnp.sum(mask)
+    return jnp.stack([s, sq, n])
+
+
+def psum_stats(stats: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """One packed collective across data shards (inside shard_map/pmap)."""
+    return jax.lax.psum(stats, axis_name)
+
+
+def welford_update(state: AdvNormState,
+                   global_stats: jnp.ndarray) -> AdvNormState:
+    """Chan's parallel Welford merge of a batch (from its packed stats)."""
+    s, sq, n = global_stats[0], global_stats[1], global_stats[2]
+    n = jnp.maximum(n, 1e-9)
+    batch_mean = s / n
+    batch_m2 = sq - n * jnp.square(batch_mean)
+
+    total = state.count + n
+    delta = batch_mean - state.mean
+    new_mean = state.mean + delta * n / total
+    new_m2 = state.m2 + batch_m2 + jnp.square(delta) * state.count * n / total
+    return AdvNormState(count=total, mean=new_mean, m2=new_m2)
+
+
+def normalize_lagged(adv: jnp.ndarray, state: AdvNormState,
+                     eps: float = 1e-8) -> jnp.ndarray:
+    """Â_t = (A_t − μ_{t−1}) / (σ_{t−1} + ε)   (eq. 8). On the very first
+    step (count == 0) the advantages pass through unnormalized."""
+    has_stats = state.count > 0
+    mean = jnp.where(has_stats, state.mean, 0.0)
+    std = jnp.where(has_stats, state.std, 1.0)
+    return (adv - mean) / (std + eps)
+
+
+def normalize_batch(adv: jnp.ndarray, mask: jnp.ndarray,
+                    eps: float = 1e-8) -> jnp.ndarray:
+    """Synchronous (non-lagged) global normalization — the App. C.2
+    pseudo-code, used as the baseline in the value-recompute benchmark."""
+    stats = local_stats(adv, mask)
+    n = jnp.maximum(stats[2], 1.0)
+    mean = stats[0] / n
+    var = jnp.clip(stats[1] / n - jnp.square(mean), 0.0, None)
+    return (adv - mean) / (jnp.sqrt(var) + eps)

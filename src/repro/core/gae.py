@@ -1,0 +1,75 @@
+"""Generalized Advantage Estimation with just-in-time value recomputation.
+
+Paper §5 + App. C.1: instead of a separate re-inference pass over the
+dataset, GAE runs on the values produced by the *training* forward pass,
+inside the micro-batch step. Because parameters are frozen within a
+gradient-accumulation window (eq. 7), this is exactly equivalent to a
+forced re-inference pass — ``tests/test_gae.py`` asserts the equivalence.
+
+Segment layout (paper eq. 2): arrays carry T+1 entries; index T holds the
+bootstrap observation o_{T+1}. Its value feeds GAE as the bootstrap target
+only — it is detached from the graph and excluded from every loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gae(values: jnp.ndarray, rewards: jnp.ndarray, dones: jnp.ndarray,
+        discount: float, lam: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """values: [B, T+1] (index T = bootstrap ṽ_{T+1}, caller detaches);
+    rewards, dones: [B, T]. Returns (advantages [B, T], returns [B, T]).
+
+    ``dones`` marks *natural* termination after step t — the bootstrap is
+    masked there (no value flows across episode boundaries).
+    """
+    t = rewards.shape[1]
+    v_now = values[:, :t]
+    v_next = values[:, 1:t + 1]
+    nonterm = 1.0 - dones.astype(jnp.float32)
+    deltas = rewards + discount * nonterm * v_next - v_now      # [B, T]
+
+    def body(carry, xs):
+        delta, nt = xs
+        adv = delta + discount * lam * nt * carry
+        return adv, adv
+
+    _, advs = jax.lax.scan(
+        body, jnp.zeros_like(deltas[:, 0]),
+        (deltas.T, nonterm.T), reverse=True)
+    advantages = advs.T                                          # [B, T]
+    returns = advantages + v_now
+    return advantages, returns
+
+
+def gae_reference(values, rewards, dones, discount, lam):
+    """Slow python-loop oracle for tests."""
+    import numpy as np
+    values = np.asarray(values, np.float64)
+    rewards = np.asarray(rewards, np.float64)
+    dones = np.asarray(dones, np.float64)
+    b, t = rewards.shape
+    adv = np.zeros((b, t))
+    for i in range(b):
+        acc = 0.0
+        for j in reversed(range(t)):
+            nonterm = 1.0 - dones[i, j]
+            delta = rewards[i, j] + discount * nonterm * values[i, j + 1] \
+                - values[i, j]
+            acc = delta + discount * lam * nonterm * acc
+            adv[i, j] = acc
+    return adv, adv + values[:, :t]
+
+
+def jit_gae_from_forward(values_with_bootstrap: jnp.ndarray,
+                         rewards: jnp.ndarray, dones: jnp.ndarray,
+                         discount: float, lam: float
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The paper's low-overhead pipeline: values come straight from the
+    training forward pass; the bootstrap column is detached here (App. C.1
+    'the target value node must be detached from the computation graph')."""
+    values = jax.lax.stop_gradient(values_with_bootstrap)
+    return gae(values, rewards, dones, discount, lam)

@@ -1,0 +1,87 @@
+"""Policy-gradient objectives: GIPO (paper eqs. 5–6, 9) and the PPO baseline.
+
+Token-level optimization (App. D.3): each action token is an independent
+decision point; the importance ratio, trust weight and surrogate are all
+computed per token, with the step advantage broadcast across the step's
+action tokens. This avoids the vanishing-product instability of chunk-level
+ratios and keeps gradient signal when single tokens go stale.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gaussian_trust_weight(log_ratio_sg: jnp.ndarray,
+                          sigma: float) -> jnp.ndarray:
+    """ω(ρ̄; σ) = exp(−½ (log ρ̄ / σ)²)   (eq. 5). Input is stop-gradient
+    log-ratio."""
+    return jnp.exp(-0.5 * jnp.square(log_ratio_sg / sigma))
+
+
+def gipo_loss(logp_new: jnp.ndarray, logp_old: jnp.ndarray,
+              advantages: jnp.ndarray, mask: jnp.ndarray,
+              sigma: float) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Token-level GIPO surrogate (eq. 6).
+
+    logp_new/logp_old: [B, T, A]; advantages: [B, T] (broadcast over A);
+    mask: [B, T]. Returns (scalar loss, metrics).
+    """
+    log_ratio = logp_new - logp_old                       # [B, T, A]
+    ratio = jnp.exp(log_ratio)
+    log_ratio_sg = jax.lax.stop_gradient(log_ratio)
+    omega = gaussian_trust_weight(log_ratio_sg, sigma)
+    adv = advantages[..., None]                           # [B, T, 1]
+    per_token = -(omega * ratio * adv)                    # eq. 6
+    m = mask[..., None]
+    denom = jnp.maximum(m.sum() * per_token.shape[-1], 1.0)
+    loss = jnp.sum(per_token * m) / denom
+    metrics = {
+        "ratio_mean": jnp.sum(ratio * m) / denom,
+        "omega_mean": jnp.sum(omega * m) / denom,
+        "stale_frac": jnp.sum((jnp.abs(log_ratio_sg) > 2 * sigma) * m) / denom,
+    }
+    return loss, metrics
+
+
+def ppo_loss(logp_new: jnp.ndarray, logp_old: jnp.ndarray,
+             advantages: jnp.ndarray, mask: jnp.ndarray,
+             clip_eps: float) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Token-level PPO-clip baseline (the ablation's comparison point)."""
+    ratio = jnp.exp(logp_new - logp_old)
+    adv = advantages[..., None]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    per_token = -jnp.minimum(unclipped, clipped)
+    m = mask[..., None]
+    denom = jnp.maximum(m.sum() * per_token.shape[-1], 1.0)
+    loss = jnp.sum(per_token * m) / denom
+    clip_frac = jnp.sum((jnp.abs(ratio - 1.0) > clip_eps) * m) / denom
+    return loss, {"ratio_mean": jnp.sum(ratio * m) / denom,
+                  "clip_frac": clip_frac}
+
+
+def kl_penalty(logp_new: jnp.ndarray, logp_old: jnp.ndarray,
+               mask: jnp.ndarray) -> jnp.ndarray:
+    """k3 estimator of KL(μ ‖ π): (ρ⁻¹ − 1) + log ρ ≥ 0, low variance."""
+    log_ratio = logp_new - logp_old
+    k3 = jnp.expm1(-log_ratio) + log_ratio
+    m = mask[..., None]
+    return jnp.sum(k3 * m) / jnp.maximum(m.sum() * k3.shape[-1], 1.0)
+
+
+def entropy_bonus(logits: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean policy entropy over valid action tokens. logits: [B, T, A, V]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)         # [B, T, A]
+    m = mask[..., None]
+    return jnp.sum(ent * m) / jnp.maximum(m.sum() * ent.shape[-1], 1.0)
+
+
+def value_loss(values: jnp.ndarray, targets: jnp.ndarray,
+               mask: jnp.ndarray) -> jnp.ndarray:
+    """0.5 (V − R)² over valid steps; targets are detached by the caller."""
+    err = 0.5 * jnp.square(values - targets)
+    return jnp.sum(err * mask) / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,3 @@
+from repro.data.prefetch import Prefetcher  # noqa: F401
+from repro.data.replay import FIFOReplayBuffer, RingReplayBuffer  # noqa: F401
+from repro.data.trajectory import TrajectoryBatch, dummy_batch, stack_batches  # noqa: F401

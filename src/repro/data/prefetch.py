@@ -1,0 +1,57 @@
+"""Asynchronous parallel data prefetching (paper App. D.5).
+
+A background producer thread watches the FIFO replay buffer, assembles
+ready-to-train super-batches (tensorization + batching off the critical
+path), and parks them in a bounded local cache; the trainer pops fully
+formed batches. While the accelerator runs step ``k``, the prefetcher
+prepares the data for step ``k+1``.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Optional
+
+from repro.data.replay import FIFOReplayBuffer
+
+
+class Prefetcher:
+    def __init__(self, buffer: FIFOReplayBuffer, batch_size: int,
+                 collate: Callable, depth: int = 2):
+        self.buffer = buffer
+        self.batch_size = batch_size
+        self.collate = collate
+        self._cache: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="prefetcher")
+        self.batches_built = 0
+
+    def start(self) -> "Prefetcher":
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            segments = self.buffer.pop_batch(self.batch_size, timeout=0.1)
+            if segments is None:
+                continue
+            batch = self.collate(segments)
+            self.batches_built += 1
+            while not self._stop.is_set():
+                try:
+                    self._cache.put(batch, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def get(self, timeout: Optional[float] = None):
+        """Pop a ready super-batch (None on timeout)."""
+        try:
+            return self._cache.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,91 @@
+"""Replay buffers (paper §3.1, §4): the non-blocking FIFO trajectory buffer
+``B`` feeding the trainer (single-epoch consumption), plus the ring buffer
+``B_wm`` of real transitions for world-model training and the FIFO ``B_img``
+of imagined segments.
+
+All buffers are host-side, thread-safe, and hold numpy pytrees (trajectory
+segments). The trainer-side batching/tensorization happens in the
+prefetcher so the training critical path stays clean (App. D.5).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, List, Optional
+
+import numpy as np
+
+
+class FIFOReplayBuffer:
+    """Non-blocking FIFO segment queue (the paper's ``B``).
+
+    Producers ``push`` trajectory segments as episodes complete; the trainer
+    ``pop_batch``es the oldest segments (single-epoch semantics — each
+    segment is trained on once). When full, the oldest data is dropped so
+    rollout workers never block (full asynchrony).
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._q: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self.total_pushed = 0
+        self.total_dropped = 0
+
+    def push(self, segment: Any) -> None:
+        with self._lock:
+            if len(self._q) >= self.capacity:
+                self._q.popleft()
+                self.total_dropped += 1
+            self._q.append(segment)
+            self.total_pushed += 1
+            self._not_empty.notify_all()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._q)
+
+    def pop_batch(self, n: int, timeout: Optional[float] = None
+                  ) -> Optional[List[Any]]:
+        """Pop the n oldest segments; blocks until available (or timeout)."""
+        with self._not_empty:
+            if not self._not_empty.wait_for(lambda: len(self._q) >= n,
+                                            timeout=timeout):
+                return None
+            return [self._q.popleft() for _ in range(n)]
+
+    def peek_depth(self) -> int:
+        return len(self)
+
+
+class RingReplayBuffer:
+    """Uniform-sampling ring buffer (the paper's ``B_wm``)."""
+
+    def __init__(self, capacity: int, seed: int = 0):
+        self.capacity = capacity
+        self._items: List[Any] = []
+        self._ptr = 0
+        self._lock = threading.Lock()
+        self._rng = np.random.default_rng(seed)
+        self.total_pushed = 0
+
+    def push(self, item: Any) -> None:
+        with self._lock:
+            if len(self._items) < self.capacity:
+                self._items.append(item)
+            else:
+                self._items[self._ptr] = item
+                self._ptr = (self._ptr + 1) % self.capacity
+            self.total_pushed += 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    def sample(self, n: int) -> Optional[List[Any]]:
+        with self._lock:
+            if not self._items:
+                return None
+            idx = self._rng.integers(0, len(self._items), size=n)
+            return [self._items[i] for i in idx]

@@ -1,0 +1,74 @@
+"""Trajectory pytrees — the wire format between rollout, buffer, and trainer.
+
+Paper eq. 2:  τ = (o_{1:T+1}, a_{1:T}, r_{1:T}, μ_{1:T}, v_{1:T}, ṽ_{T+1}, done)
+Paper eq. 3:  τ̂ = the same with hats, fixed horizon H (imagined).
+
+Arrays indexed 0..T carry T+1 entries; index T is the bootstrap slot
+(observation o_{T+1}; its action/logp entries are padding). ``mask`` marks
+valid *steps* (0..T−1) so FIFO segments of ragged episodes batch cleanly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TrajectoryBatch(NamedTuple):
+    obs_tokens: jnp.ndarray          # [B, T+1, T_obs] i32
+    actions: jnp.ndarray             # [B, T+1, A] i32 (index T = padding)
+    behavior_logp: jnp.ndarray       # [B, T+1, A] f32  (μ)
+    behavior_value: jnp.ndarray      # [B, T+1] f32     (v at collection)
+    rewards: jnp.ndarray             # [B, T] f32
+    dones: jnp.ndarray               # [B, T] f32 (natural termination)
+    steps: jnp.ndarray               # [B, T+1] i32 episode-step index
+    mask: jnp.ndarray                # [B, T] f32 valid steps
+    policy_version: jnp.ndarray      # [B] i32 — version of μ (staleness)
+    prefix_embeds: Optional[jnp.ndarray] = None   # [B, T+1, P, F] f32
+
+    @property
+    def horizon(self) -> int:
+        return self.rewards.shape[1]
+
+    def num_steps(self) -> jnp.ndarray:
+        return self.mask.sum()
+
+
+def stack_batches(batches):
+    """Concatenate TrajectoryBatch list along the batch axis (host-side)."""
+    def cat(*xs):
+        if xs[0] is None:
+            return None
+        return np.concatenate([np.asarray(x) for x in xs], axis=0)
+    return jax.tree.map(cat, *batches,
+                        is_leaf=lambda x: x is None or hasattr(x, "shape"))
+
+
+def dummy_batch(batch: int, horizon: int, t_obs: int, action_dim: int,
+                vocab: int, action_vocab: int,
+                num_prefix: int = 0, frontend_dim: int = 1024,
+                seed: int = 0) -> TrajectoryBatch:
+    """Random but well-formed batch for tests/benchmarks."""
+    rng = np.random.default_rng(seed)
+    tp1 = horizon + 1
+    prefix = None
+    if num_prefix:
+        prefix = rng.standard_normal(
+            (batch, tp1, num_prefix, frontend_dim)).astype(np.float32)
+    return TrajectoryBatch(
+        obs_tokens=rng.integers(0, vocab, (batch, tp1, t_obs)).astype(np.int32),
+        actions=rng.integers(0, action_vocab,
+                             (batch, tp1, action_dim)).astype(np.int32),
+        behavior_logp=np.log(
+            rng.uniform(0.05, 0.9, (batch, tp1, action_dim))
+        ).astype(np.float32),
+        behavior_value=rng.standard_normal((batch, tp1)).astype(np.float32),
+        rewards=rng.uniform(-1, 1, (batch, horizon)).astype(np.float32),
+        dones=(rng.uniform(size=(batch, horizon)) < 0.05).astype(np.float32),
+        steps=np.tile(np.arange(tp1, dtype=np.int32), (batch, 1)),
+        mask=np.ones((batch, horizon), np.float32),
+        policy_version=np.zeros((batch,), np.int32),
+        prefix_embeds=prefix,
+    )

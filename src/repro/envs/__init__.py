@@ -1,0 +1,9 @@
+from repro.envs.toy_manipulation import (  # noqa: F401
+    FRAME_DIM,
+    GRID,
+    SUITES,
+    T_OBS,
+    TASKS_PER_SUITE,
+    ManipulationEnv,
+    lognormal_latency,
+)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the framework's compute hot-spots (DESIGN.md §7):
+flash attention (prefill/decode), the fused token-level GIPO loss, and the
+Mamba2 SSD chunked scan. Each ships a jit'd wrapper (``ops``) and a
+pure-jnp oracle (``ref``); interpret-mode tests sweep shapes and dtypes."""
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.gipo_loss import gipo_loss_fused  # noqa: F401
+from repro.kernels.ssd_scan import ssd_scan  # noqa: F401
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,137 @@
+"""Flash attention as a Pallas TPU kernel (DESIGN.md §7).
+
+Inference-worker prefill/decode dominates rollout latency (paper §3.2) —
+this is the hot spot the framework optimizes. TPU adaptation of the
+flash-attention algorithm:
+
+  * grid = (batch, q-heads, q-blocks, kv-blocks); the LAST grid axis is
+    iterated sequentially on TPU ("arbitrary" dimension semantics), so the
+    online-softmax state (m, l, acc) lives in VMEM scratch across kv-block
+    steps and is finalized on the last step;
+  * BlockSpecs tile Q/K/V into MXU-aligned [block, head_dim] tiles resident
+    in VMEM; ``head_dim`` and the default blocks are multiples of 128;
+  * GQA is handled by mapping each q-head grid index to its kv head
+    (h // group) in the K/V index maps — no KV duplication in HBM;
+  * causal + sliding-window masking from absolute positions.
+
+Validated in interpret mode against ``ref.reference_attention`` (CPU); on
+real TPUs the same ``pl.pallas_call`` lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, block_q: int, block_k: int, seq_k: int,
+                 causal: bool, window: Optional[int]):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :]                              # [bq, D]
+    k = k_ref[0, :, 0, :]                              # [bk, D]
+    v = v_ref[0, :, 0, :]                              # [bk, D]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = kpos < seq_k
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                # [bq, 1]
+    m_new = jnp.maximum(m_prev[:, 0], s.max(axis=-1))[:, None]
+    corr = jnp.exp(m_prev - m_new)                     # [bq, 1]
+    p = jnp.exp(s - m_new)                             # [bq, bk]
+    l_new = l_scr[...] * corr + p.sum(axis=-1)[:, None]
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _final():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: [B, T, H, D]; k/v: [B, S, KV, D] with H % KV == 0 → [B, T, H, D].
+
+    T and S are padded to block multiples internally; the causal mask uses
+    unpadded absolute positions, and key padding is masked out.
+    """
+    b, t, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    scale = d ** -0.5
+
+    tp = math.ceil(t / block_q) * block_q
+    sp = math.ceil(s / block_k) * block_k
+    if tp != t:
+        q = jnp.pad(q, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    if sp != s:
+        k = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+
+    grid = (b, h, tp // block_q, sp // block_k)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        seq_k=s, causal=causal, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d),
+                         lambda bi, hi, qi, kj: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, qi, kj, g=group: (bi, kj, hi // g, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, qi, kj, g=group: (bi, kj, hi // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda bi, hi, qi, kj: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, tp, h, d), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, 1), jnp.float32),      # running max m
+            _vmem((block_q, 1), jnp.float32),      # running sum l
+            _vmem((block_q, d), jnp.float32),      # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :t]
+
+
+def _vmem(shape, dtype):
+    """VMEM scratch allocation (TPU); plain scratch in interpret mode."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.VMEM(shape, dtype)
+    except Exception:   # pragma: no cover — interpret-only environments
+        import jax
+        return jax.ShapeDtypeStruct(shape, dtype)

@@ -1,0 +1,100 @@
+"""Fused token-level GIPO loss as a Pallas TPU kernel (DESIGN.md §7).
+
+The naive objective touches the [N, V_action] logit tensor three times
+(log-softmax, gather, ratio product). The kernel streams token blocks
+through VMEM once: per block it fuses row-max → log-sum-exp → target
+gather → Gaussian trust weight (eq. 5) → surrogate (eq. 6) → partial
+reductions, emitting one (loss, ratio, omega, count) quadruple per block.
+The host-side wrapper sums the partials — no [N, V] intermediate ever
+returns to HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention import _vmem
+
+
+def _gipo_kernel(logits_ref, targets_ref, logp_old_ref, adv_ref, mask_ref,
+                 out_ref, *, sigma: float, block_n: int, valid_n: int):
+    i = pl.program_id(0)
+    logits = logits_ref[...].astype(jnp.float32)        # [bn, V]
+    targets = targets_ref[...]                          # [bn]
+    logp_old = logp_old_ref[...]
+    adv = adv_ref[...]
+    mask = mask_ref[...]
+
+    # mask out padded rows
+    rows = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    mask = jnp.where(rows < valid_n, mask, 0.0)
+
+    # fused log-softmax + gather
+    row_max = logits.max(axis=-1, keepdims=True)
+    shifted = logits - row_max
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))   # [bn]
+    v = logits.shape[-1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (block_n, v), 1)
+              == targets[:, None])
+    tgt_logit = jnp.sum(jnp.where(onehot, shifted, 0.0), axis=-1)
+    logp_new = tgt_logit - lse                          # [bn]
+
+    log_ratio = logp_new - logp_old
+    ratio = jnp.exp(log_ratio)
+    omega = jnp.exp(-0.5 * jnp.square(log_ratio / sigma))   # eq. 5
+    per_token = -(omega * ratio * adv)                       # eq. 6
+
+    out_ref[0, 0] = jnp.sum(per_token * mask)
+    out_ref[0, 1] = jnp.sum(ratio * mask)
+    out_ref[0, 2] = jnp.sum(omega * mask)
+    out_ref[0, 3] = jnp.sum(mask)
+
+
+def gipo_loss_fused(logits: jnp.ndarray, targets: jnp.ndarray,
+                    logp_old: jnp.ndarray, advantages: jnp.ndarray,
+                    mask: jnp.ndarray, sigma: float, *,
+                    block_n: int = 256,
+                    interpret: bool = False
+                    ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """logits: [N, V]; targets/logp_old/advantages/mask: [N].
+
+    Returns (scalar loss, metrics) matching ``ref.reference_gipo_loss``.
+    """
+    n, v = logits.shape
+    np_ = math.ceil(n / block_n) * block_n
+    if np_ != n:
+        pad = np_ - n
+        logits = jnp.pad(logits, ((0, pad), (0, 0)))
+        targets = jnp.pad(targets, (0, pad))
+        logp_old = jnp.pad(logp_old, (0, pad))
+        advantages = jnp.pad(advantages, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+
+    grid = (np_ // block_n,)
+    kernel = functools.partial(_gipo_kernel, sigma=sigma, block_n=block_n,
+                               valid_n=n)
+    partials = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, v), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_ // block_n, 4), jnp.float32),
+        interpret=interpret,
+    )(logits, targets, logp_old, advantages, mask)
+
+    sums = partials.sum(axis=0)
+    denom = jnp.maximum(sums[3], 1.0)
+    loss = sums[0] / denom
+    return loss, {"ratio_mean": sums[1] / denom,
+                  "omega_mean": sums[2] / denom}

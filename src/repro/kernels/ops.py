@@ -1,0 +1,49 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python for correctness validation; on TPU backends the same
+``pl.pallas_call`` lowers to Mosaic. ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gipo_loss import gipo_loss_fused
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True,
+                       window: Optional[int] = None, block_q: int = 128,
+                       block_k: int = 128,
+                       interpret: Optional[bool] = None):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "block_n", "interpret"))
+def gipo_loss_op(logits, targets, logp_old, advantages, mask, *,
+                 sigma: float = 0.2, block_n: int = 256,
+                 interpret: Optional[bool] = None):
+    return gipo_loss_fused(logits, targets, logp_old, advantages, mask,
+                           sigma, block_n=block_n,
+                           interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_op(x, dt, A, Bm, Cm, *, chunk: int = 128,
+                interpret: Optional[bool] = None):
+    return ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                    interpret=_auto_interpret(interpret))

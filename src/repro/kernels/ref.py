@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def reference_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jnp.ndarray:
+    """Dense GQA attention. q: [B,T,H,D]; k/v: [B,S,KV,D] -> [B,T,H,D]."""
+    b, t, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, t, kv, group, d).astype(jnp.float32)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg,
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def reference_gipo_loss(logits: jnp.ndarray, targets: jnp.ndarray,
+                        logp_old: jnp.ndarray, advantages: jnp.ndarray,
+                        mask: jnp.ndarray, sigma: float
+                        ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Unfused token-level GIPO (eqs. 5–6). logits: [N, V]; rest [N]."""
+    logp_all = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    logp_new = jnp.take_along_axis(logp_all, targets[:, None],
+                                   axis=-1)[:, 0]
+    log_ratio = logp_new - logp_old
+    ratio = jnp.exp(log_ratio)
+    omega = jnp.exp(-0.5 * jnp.square(
+        jax.lax.stop_gradient(log_ratio) / sigma))
+    per_token = -(omega * ratio * advantages)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = jnp.sum(per_token * mask) / denom
+    metrics = {
+        "ratio_mean": jnp.sum(ratio * mask) / denom,
+        "omega_mean": jnp.sum(omega * mask) / denom,
+    }
+    return loss, metrics
+
+
+def reference_ssd(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                  Bm: jnp.ndarray, Cm: jnp.ndarray,
+                  init_state: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stepwise SSD recurrence oracle (the "linear form" of SSD duality).
+
+    x: [B,T,H,P]; dt: [B,T,H] (post-softplus); A: [H] (negative);
+    Bm/Cm: [B,T,N]. Returns (y [B,T,H,P] f32, final state [B,H,P,N] f32).
+    """
+    b, t, h, p = x.shape
+    n = Bm.shape[-1]
+    state = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+             else init_state.astype(jnp.float32))
+
+    def step(state, inputs):
+        x_t, dt_t, b_t, c_t = inputs
+        dA = jnp.exp(dt_t * A[None, :])                     # [B,H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t,
+                         x_t.astype(jnp.float32), b_t.astype(jnp.float32))
+        state = dA[:, :, None, None] * state + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, c_t.astype(jnp.float32))
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state

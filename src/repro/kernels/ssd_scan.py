@@ -1,0 +1,110 @@
+"""Chunked Mamba2 SSD scan as a Pallas TPU kernel (DESIGN.md §7).
+
+The SSD dual form splits the recurrence into MXU-friendly intra-chunk
+matmuls and a tiny inter-chunk state recurrence. TPU mapping:
+
+  * grid = (batch, heads, chunks); chunks are the LAST (sequential) axis so
+    the running state S [P, N] persists in VMEM scratch across chunk steps;
+  * per chunk, the [q, q] decay-masked attention-like matrix and the
+    [q, P/N] tiles are dense dots on the MXU;
+  * everything is fp32 inside the kernel (the state recurrence is
+    numerically delicate); inputs may be bf16.
+
+Matches ``ref.reference_ssd`` (the stepwise linear-form oracle) — the SSD
+"duality" is exactly what the allclose test asserts.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention import _vmem
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_final_ref,
+                state_scr, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)            # [q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)             # [q]
+    a = a_ref[0]                                         # scalar (negative)
+    bm = b_ref[0, :, :].astype(jnp.float32)              # [q, N]
+    cm = c_ref[0, :, :].astype(jnp.float32)              # [q, N]
+
+    dA = dt * a                                          # [q] (<= 0)
+    cum = jnp.cumsum(dA)                                 # inclusive
+    cum_total = cum[-1]
+
+    # intra-chunk: y[i] = Σ_{j<=i} (C_i·B_j) exp(cum_i − cum_j) dt_j x_j
+    q = chunk
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    g = jnp.where(jj <= ii, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)   # [q, q]
+    w = cb * g * dt[None, :]
+    y = jnp.dot(w, x, preferred_element_type=jnp.float32)        # [q, P]
+
+    # inter-chunk: y[i] += exp(cum_i) · C_i · S_enterᵀ
+    state = state_scr[...]                                       # [P, N]
+    y += jnp.exp(cum)[:, None] * jnp.dot(
+        cm, state.T, preferred_element_type=jnp.float32)
+
+    # state update: S ← exp(cum_total)·S + Σ_j exp(cum_total−cum_j) dt_j x_j B_jᵀ
+    decay_in = jnp.exp(cum_total - cum) * dt                     # [q]
+    s_new = jnp.exp(cum_total) * state + jnp.dot(
+        (x * decay_in[:, None]).T, bm, preferred_element_type=jnp.float32)
+    state_scr[...] = s_new
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        s_final_ref[0, 0, :, :] = s_new.astype(s_final_ref.dtype)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             Bm: jnp.ndarray, Cm: jnp.ndarray, *, chunk: int = 128,
+             interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B,T,H,P]; dt: [B,T,H]; A: [H]; Bm/Cm: [B,T,N] (single group).
+
+    Returns (y [B,T,H,P] f32, final_state [B,H,P,N] f32); T % chunk == 0.
+    """
+    b, t, h, p = x.shape
+    n = Bm.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+
+    grid = (b, h, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, Cm)
+    return y, s_final

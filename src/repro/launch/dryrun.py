@@ -1,0 +1,369 @@
+"""Multi-pod dry-run driver (deliverable (e)).
+
+For every (architecture × input shape × mesh): lower the step program with
+production in/out shardings, ``.compile()`` it, and record
+``memory_analysis()`` + ``cost_analysis()`` + the parsed collective
+schedule.  The 512 placeholder host devices exist ONLY here — the two
+os.environ lines below run before any jax-touching import so jax locks
+onto them.
+
+Cost methodology (see EXPERIMENTS.md §Roofline): ``cost_analysis`` counts a
+``lax.scan`` while-body ONCE regardless of trip count, so roofline terms
+come from a **layer-delta extrapolation**: two small surrogate programs
+(1 layer-unit and 2 layer-units, attention KV loops unrolled) are compiled
+and the exact per-unit delta is scaled to the full depth; trains
+additionally scale by the gradient-accumulation factor (micro-programs of
+one window are identical). The FULL production program is still lowered,
+compiled, and memory-analysed — that is the fit proof.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json; cached
+pairs are skipped so interrupted sweeps resume for free (--force recomputes).
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ the VERY FIRST executable statements — before any jax-touching import,
+#   since jax locks the device count on first init.
+
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, get_shape
+from repro.configs.base import ModelConfig, RLConfig, ShapeConfig
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh, num_chips
+from repro.roofline.analysis import (
+    combine_layer_delta,
+    roofline_from_terms,
+    terms_from_compiled,
+)
+from repro.sharding.rules import FSDP_PARAM_THRESHOLD
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _sharded_bytes(structs, shardings) -> float:
+    """Exact per-device bytes of a pytree under its NamedShardings."""
+    import numpy as _np
+    total = 0
+    for st, sh in zip(jax.tree.leaves(structs), jax.tree.leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "num_devices"))):
+        n = int(_np.prod(st.shape)) if st.shape else 1
+        shard = sh.num_devices_in_shard if hasattr(
+            sh, "num_devices_in_shard") else None
+        # divide by the product of mesh-axis sizes used in the spec
+        spec = sh.spec
+        div = 1
+        for ax in spec:
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                div *= sh.mesh.shape[a]
+        total += n * st.dtype.itemsize / div
+    return float(total)
+
+
+def _mem_dict(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "alias_size_in_bytes",
+            "temp_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    out["total_hbm_bytes"] = (
+        out.get("argument_size_in_bytes", 0.0)
+        + out.get("output_size_in_bytes", 0.0)
+        - out.get("alias_size_in_bytes", 0.0)
+        + out.get("temp_size_in_bytes", 0.0))
+    return out
+
+
+def _layer_units(cfg: ModelConfig) -> Tuple[int, float]:
+    """(layers per delta-unit, number of units incl. fractional remainder).
+
+    Hybrids repeat in macro groups of ``shared_every`` Mamba2 layers behind
+    one shared-attention application, so the unit is one macro group."""
+    if cfg.arch_type == "hybrid":
+        g = cfg.hybrid.shared_every
+        n_macro, rem = divmod(cfg.num_layers, g)
+        # the remainder triggers one extra shared-attn application + rem
+        # SSM layers ≈ (rem + weight of one attn) / g of a unit
+        return g, n_macro + (rem / g if rem else 0.0)
+    return 1, float(cfg.num_layers)
+
+
+def _surrogate(cfg: ModelConfig, n_units: int, unit: int) -> ModelConfig:
+    return dataclasses.replace(cfg, num_layers=n_units * unit)
+
+
+# --- §Perf hillclimb variants (EXPERIMENTS.md) ------------------------------
+# each entry: (description, cfg transform, rules/step toggles)
+VARIANTS = {
+    "baseline": {},
+    # musicgen: heads (24) don't divide model (16) -> baseline shards the
+    # head_dim CONTRACTION of every attention dot (all-reduce per KV block);
+    # prefer sharding d_model instead (one all-reduce per projection).
+    "attn_dshard": {"attn_prefer_dmodel": True},
+    # mamba2: the fused in_proj's z/xBC/dt split crosses shard boundaries
+    # (per-layer all-gather of the full projection); split the projection
+    # into three shard-aligned tensors.
+    "split_inproj": {"split_inproj": True},
+    # decode: lockstep serving -> scalar-slot dynamic-update-slice instead
+    # of a batched scatter (the scatter forces cache replication).
+    "uniform_decode": {"uniform_decode": True},
+    "uniform+dshard": {"uniform_decode": True, "attn_prefer_dmodel": True},
+    # musicgen: 24 heads don't divide the model axis, so scores stay
+    # REPLICATED per device (O(T²·H) bytes each) and contract a sharded
+    # head_dim (giant all-reduces). MaxText-style fix: zero-pad heads to
+    # 32 so they shard 16-way (+33% attn FLOPs, ÷16 score bytes).
+    "pad_heads": {"pad_heads": 32},
+    # mamba2 (2.7B fits per chip): drop tensor parallelism entirely —
+    # batch over BOTH mesh axes; only the gradient all-reduce remains.
+    # zero2_grads reduce-scatters gradients into the ZeRO moment layout
+    # (the paper's actual ZeRO-2 semantics) so f32 grads never live
+    # replicated.
+    "pure_dp": {"pure_dp": True, "zero2_grads": True},
+    "pure_dp_chunk64": {"pure_dp": True, "zero2_grads": True, "chunk": 64},
+    "zero2_grads": {"zero2_grads": True},
+    # ZeRO-3 over the model axis: params/grads/moments sharded, batch on
+    # data — per-layer param all-gather replaces per-token TP collectives.
+    "fsdp_model": {"fsdp_model": True, "zero2_grads": True,
+                   "split_inproj": True},
+    # batch over BOTH axes + ZeRO-3 params over data: per-layer param
+    # all-gather (~11 GB/step) replaces ALL per-token TP collectives AND
+    # the replicated f32 grad tree (reduce-scattered instead).
+    "pure_dp_zero3": {"pure_dp": True, "zero2_grads": True,
+                      "zero3_axis": "data"},
+    # decode: shard the KV cache SEQUENCE over model (flash-decoding
+    # context parallelism) — softmax combines partial (max, sum, acc).
+    "cache_seqshard": {"cache_seqshard": True, "uniform_decode": True},
+}
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              rl: Optional[RLConfig] = None,
+              variant: str = "baseline",
+              rules_override=None) -> Dict:
+    """Lower + compile one (arch, shape, mesh); return the record."""
+    from repro.sharding import rules as rules_mod
+    opts = VARIANTS[variant]
+    cfg = get_config(arch)
+    if opts.get("split_inproj") and cfg.ssm is not None:
+        cfg = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, fused_in_proj=False))
+    if opts.get("pad_heads"):
+        hp = opts["pad_heads"]
+        cfg = dataclasses.replace(
+            cfg, num_heads=hp,
+            num_kv_heads=hp if cfg.num_kv_heads == cfg.num_heads
+            else cfg.num_kv_heads,
+            head_dim_override=cfg.head_dim)
+    if opts.get("chunk") and cfg.ssm is not None:
+        cfg = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, chunk=opts["chunk"]))
+    pure_dp = bool(opts.get("pure_dp"))
+    zero3_axis = opts.get("zero3_axis")
+    fsdp_model = bool(opts.get("fsdp_model"))
+    zero2_grads = bool(opts.get("zero2_grads"))
+    cache_seqshard = bool(opts.get("cache_seqshard"))
+    rules_mod.ATTN_PREFER_DMODEL = bool(opts.get("attn_prefer_dmodel"))
+    uniform_decode = bool(opts.get("uniform_decode"))
+    shape = get_shape(shape_name)
+    rl = rl or RLConfig()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = num_chips(mesh)
+    fsdp = cfg.param_count() > FSDP_PARAM_THRESHOLD
+    t0 = time.time()
+    extra: Dict = {}
+
+    def build_train(c: ModelConfig, accum: int, unroll: bool):
+        # surrogate cost programs run ONE micro-batch (scaled by ``accum``
+        # afterwards); the production program runs the full window
+        eff_shape = dataclasses.replace(
+            shape, global_batch=shape.global_batch // max(accum, 1)) \
+            if unroll else shape
+        use_accum = 1 if unroll else accum
+        state, batch, sspec, bspec = steps.train_specs(
+            c, eff_shape, mesh, accum=use_accum, fsdp=fsdp,
+            pure_dp=pure_dp, fsdp_model=fsdp_model,
+            zero3_axis=zero3_axis)
+        act_sh = None
+        if cfg.param_count() > 10e9 and c.d_model % mesh.shape["model"] == 0:
+            # pin the remat carry layout on big models: batch on data,
+            # d_model on model — otherwise GSPMD may replicate the batch
+            # axis of the saved residual stack (16x memory blow-up)
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            from repro.sharding.rules import batch_axes
+            dp = batch_axes(mesh)
+            act_sh = NamedSharding(
+                mesh, P(dp if len(dp) > 1 else dp[0], None, "model"))
+        fn = functools.partial(steps.seq_train_step, cfg=c, rl=rl,
+                               accum=use_accum, unroll=unroll,
+                               grad_shardings=sspec.opt.mu if zero2_grads
+                               else sspec.params,
+                               act_sharding=act_sh)
+        jfn = jax.jit(fn, in_shardings=(sspec, bspec),
+                      out_shardings=(sspec, None), donate_argnums=(0,))
+        return jfn.lower(state, batch)
+
+    def build_prefill(c: ModelConfig, unroll: bool):
+        sp = steps.prefill_specs(c, shape, mesh, fsdp=fsdp)
+        sh = sp["shardings"]
+        blk = max(steps.ATTN_BLOCK, shape.seq_len // 16) if unroll \
+            else steps.ATTN_BLOCK
+        fn = functools.partial(steps.prefill_step, cfg=c,
+                               window=sp["window"],
+                               cache_len=sp["cache_len"], block=blk,
+                               unroll=unroll)
+        jfn = jax.jit(fn, in_shardings=(sh["params"], sh["tokens"],
+                                        sh["prefix"]),
+                      out_shardings=(None, sh["cache"]))
+        return jfn.lower(sp["params"], sp["tokens"], sp["prefix"])
+
+    def build_serve(c: ModelConfig, unroll: bool):
+        sp = steps.serve_specs(c, shape, mesh, fsdp=fsdp,
+                               seq_shard=cache_seqshard)
+        sh = sp["shardings"]
+        fn = functools.partial(steps.serve_step, cfg=c,
+                               window=sp["window"], unroll=unroll,
+                               uniform=uniform_decode)
+        jfn = jax.jit(fn, in_shardings=(sh["params"], sh["token"],
+                                        sh["cache"]),
+                      out_shardings=(None, sh["cache"]),
+                      donate_argnums=(2,))
+        return jfn.lower(sp["params"], sp["token"], sp["cache"])
+
+    with mesh:
+        accum = steps.choose_accum(cfg, shape, mesh, pure_dp=pure_dp) \
+            if shape.kind == "train" else 1
+        build = {"train": lambda c, u: build_train(c, accum, u),
+                 "prefill": build_prefill,
+                 "decode": build_serve}[shape.kind]
+
+        # --- (a) production program: the compile + memory-fit proof -------
+        lowered = build(cfg, False)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        # --- (b) roofline cost via layer-delta surrogates ------------------
+        t1 = time.time()
+        unit, n_units = _layer_units(cfg)
+        t_one = terms_from_compiled(build(_surrogate(cfg, 1, unit),
+                                          True).compile())
+        t_two = terms_from_compiled(build(_surrogate(cfg, 2, unit),
+                                          True).compile())
+        rules_mod.ATTN_PREFER_DMODEL = False   # reset the toggle
+        cost_terms = combine_layer_delta(t_one, t_two, n_units)
+        extra["cost_compile_s"] = round(time.time() - t1, 2)
+        if shape.kind == "train":
+            extra["accum"] = accum
+        terms = roofline_from_terms(cost_terms, cfg, shape, chips,
+                                    scale=accum)
+
+    if shape.kind in ("prefill", "decode"):
+        # exact analytic resident state (params + cache) under the specs —
+        # the TPU-true floor; the CPU-measured total above is an upper
+        # bound inflated by the CPU backend's bf16→f32 normalization of
+        # while-loop buffers (EXPERIMENTS.md §Dry-run).
+        builder = (steps.prefill_specs if shape.kind == "prefill"
+                   else steps.serve_specs)
+        with mesh:
+            sp2 = builder(cfg, shape, mesh, fsdp=fsdp)
+        extra["state_bytes_per_dev"] = (
+            _sharded_bytes(sp2["params"], sp2["shardings"]["params"])
+            + _sharded_bytes(sp2["cache"], sp2["shardings"]["cache"]))
+
+    mem = _mem_dict(compiled)
+    rec = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "kind": shape.kind, "fsdp": fsdp,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "roofline": terms.as_dict(),
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        **extra,
+    }
+    return rec
+
+
+def run_and_save(arch: str, shape_name: str, *, multi_pod: bool,
+                 force: bool = False, variant: str = "baseline") -> Dict:
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    out_dir = OUT_DIR / mesh_tag
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    path = out_dir / f"{arch}__{shape_name}{suffix}.json"
+    if path.exists() and not force:
+        rec = json.loads(path.read_text())
+        if "error" not in rec:
+            print(f"[skip] {arch} × {shape_name} ({mesh_tag}) — cached")
+            return rec
+    print(f"[dryrun] {arch} × {shape_name} ({mesh_tag}) ...", flush=True)
+    try:
+        rec = lower_one(arch, shape_name, multi_pod=multi_pod,
+                        variant=variant)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "variant": variant, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        path.write_text(json.dumps(rec, indent=1))
+        print(f"[FAIL] {arch} × {shape_name}: {e}")
+        return rec
+    path.write_text(json.dumps(rec, indent=1))
+    r = rec["roofline"]
+    print(f"  ok: compile {rec['compile_s']}s+{rec['cost_compile_s']}s | "
+          f"compute {r['compute_s']:.3e}s memory {r['memory_s']:.3e}s "
+          f"collective {r['collective_s']:.3e}s -> {r['dominant']}-bound | "
+          f"useful {r['useful_ratio']:.2f} | "
+          f"hbm/dev {rec['memory']['total_hbm_bytes']/2**30:.2f} GiB")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED_ARCHS + ["openvla-7b"])
+    ap.add_argument("--shape", choices=[s.name for s in INPUT_SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    args = ap.parse_args()
+
+    if args.all:
+        pairs = [(a, s.name) for a in ASSIGNED_ARCHS for s in INPUT_SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in pairs:
+        rec = run_and_save(arch, shape, multi_pod=args.multi_pod,
+                           force=args.force, variant=args.variant)
+        failures += "error" in rec
+    print(f"\n{len(pairs) - failures}/{len(pairs)} lowered+compiled OK")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Production serving launcher: prefill + decode against the sharded
+KV/state cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b \
+        --tokens 16 --local
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, get_config, get_shape, reduced
+from repro.launch import steps
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b",
+                    choices=ASSIGNED_ARCHS)
+    ap.add_argument("--shape", default="decode_32k",
+                    choices=("decode_32k", "long_500k"))
+    ap.add_argument("--tokens", type=int, default=8,
+                    help="tokens to decode")
+    ap.add_argument("--local", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = get_shape(args.shape)
+    if args.local:
+        cfg = reduced(cfg, layers=2, d_model=128)
+        shape = dataclasses.replace(shape, seq_len=64, global_batch=2)
+        mesh = make_local_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    window = steps.long_context_window(cfg, shape)
+    cache_len = steps.effective_cache_len(cfg, shape)
+    print(f"arch {cfg.name} | cache_len {cache_len} | "
+          f"window {window} | batch {shape.global_batch}")
+
+    with mesh:
+        sp = steps.serve_specs(cfg, shape, mesh)
+        sh = sp["shardings"]
+        dfn = jax.jit(functools.partial(steps.serve_step, cfg=cfg,
+                                        window=window),
+                      in_shardings=(sh["params"], sh["token"], sh["cache"]),
+                      out_shardings=(None, sh["cache"]),
+                      donate_argnums=(2,))
+        from repro.models import transformer
+        params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+        params = jax.device_put(params, sh["params"])
+        cache = transformer.init_decode_cache(cfg, shape.global_batch,
+                                              cache_len, window=window)
+        cache = jax.device_put(cache, sh["cache"])
+        token = jax.device_put(
+            jnp.zeros((shape.global_batch,), jnp.int32), sh["token"])
+        for i in range(args.tokens):
+            t0 = time.perf_counter()
+            logits, cache = dfn(params, token, cache)
+            token = jnp.argmax(logits, -1).astype(jnp.int32)
+            token = jax.device_put(token, sh["token"])
+            jax.block_until_ready(logits)
+            print(f"decode {i}: token[0]={int(token[0])} "
+                  f"({(time.perf_counter()-t0)*1e3:.1f} ms)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,360 @@
+"""The three lowered step programs of the dry-run (DESIGN.md §5):
+
+  * ``train_step``  (train_4k)    — teacher-forced GIPO + JIT-GAE + lagged
+    advantage normalization + AdamW(ZeRO-2) over a [B, S] token batch. The
+    sequence IS the stream of action tokens (the paper's token-level
+    optimization, App. D.3, with A folded into S).
+  * ``prefill_step`` (prefill_32k) — prompt pass emitting the decode cache.
+  * ``serve_step``  (decode_32k / long_500k) — ONE new token against a
+    KV/state cache of ``seq_len``.
+
+Each ``make_*`` returns ``(fn, input_specs, shardings)`` so the dry-run and
+the real launchers share the exact same program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RLConfig, ShapeConfig
+from repro.core import advnorm, gae, gipo
+from repro.core.advnorm import AdvNormState
+from repro.models import transformer
+from repro.models.layers import Params
+from repro.optim import adamw
+from repro.sharding import rules
+
+ATTN_BLOCK = 1024      # online-softmax KV block (perf knob, §Perf)
+
+
+class SeqTrainState(NamedTuple):
+    """Trainer state for the sequence-granularity production train step."""
+
+    params: Any
+    opt: adamw.AdamWState
+    adv_norm: AdvNormState
+
+
+def _value_mlp(vh: Params, hidden: jnp.ndarray,
+               positions: jnp.ndarray) -> jnp.ndarray:
+    """Per-position value estimate reusing the action-aware value head's
+    parameters (single-token pooling ⇒ attention weight ≡ 1; step
+    embedding indexed by episode-step = position mod max_steps)."""
+    h = jax.lax.stop_gradient(hidden).astype(jnp.float32)
+    max_steps = vh["step_emb"].shape[0]
+    e_step = jnp.take(vh["step_emb"], positions % max_steps, axis=0)
+    x = h + e_step[None]
+    x = jax.nn.gelu(x @ vh["mlp_w1"] + vh["mlp_b1"])
+    return (x @ vh["mlp_w2"] + vh["mlp_b2"])[..., 0]    # [B, S]
+
+
+def seq_loss_fn(params, batch: Dict[str, jnp.ndarray], adv_state,
+                cfg: ModelConfig, rl: RLConfig, *, remat: bool = True,
+                block: Optional[int] = ATTN_BLOCK, unroll: bool = False,
+                act_sharding=None):
+    """Token-level GIPO over a [B, S] sequence with JIT value recomputation.
+
+    batch: tokens [B,S] i32, behavior_logp [B,S] f32, rewards [B,S-1] f32,
+    dones [B,S-1] f32, mask [B,S-1] f32, prefix (optional [B,P,F]).
+    Tokens are unified ids; a token's action-bin id is ``token mod Va``
+    (the slimmed head scores only the action vocabulary, App. D.1).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    window = cfg.sliding_window
+    out = transformer.forward(cfg, params, tokens,
+                              batch.get("prefix"), window=window,
+                              remat=remat, block=block, unroll=unroll,
+                              act_sharding=act_sharding)
+    # next-token factorization: logits[:, t] scores tokens[:, t+1]
+    p = out["hidden"].shape[1] - s          # prefix length
+    hidden = out["hidden"][:, p:]
+    logits = out["logits"][:, p:][:, :-1]                       # [B,S-1,Va]
+    targets = tokens[:, 1:] % cfg.action_vocab_size
+    logp_all = jax.nn.log_softmax(logits, axis=-1)
+    logp_new = jnp.take_along_axis(
+        logp_all, targets[..., None], axis=-1)[..., 0]          # [B,S-1]
+
+    # --- JIT value recomputation (App. C.1): values from THIS forward ----
+    positions = jnp.arange(s)
+    values = _value_mlp(params["value_head"], hidden, positions)  # [B,S]
+    adv, returns = gae.jit_gae_from_forward(
+        values, batch["rewards"], batch["dones"], rl.discount,
+        rl.gae_lambda)
+    stats = advnorm.local_stats(adv, batch["mask"])
+    adv_n = jax.lax.stop_gradient(advnorm.normalize_lagged(adv, adv_state))
+
+    mask = batch["mask"]
+    logp_old = batch["behavior_logp"][:, 1:]
+    if rl.algo == "gipo":
+        pg, pg_m = gipo.gipo_loss(logp_new[..., None], logp_old[..., None],
+                                  adv_n, mask, rl.gipo_sigma)
+    else:
+        pg, pg_m = gipo.ppo_loss(logp_new[..., None], logp_old[..., None],
+                                 adv_n, mask, rl.ppo_clip)
+    v_loss = gipo.value_loss(values[:, :-1], jax.lax.stop_gradient(returns),
+                             mask)
+    kl = gipo.kl_penalty(logp_new[..., None], logp_old[..., None], mask)
+    total = pg + rl.value_coef * v_loss + rl.kl_coef * kl
+    if cfg.arch_type == "moe":
+        total = total + out["aux"]["load_balance"] + out["aux"]["router_z"]
+    metrics = {"loss": total, "pg_loss": pg, "value_loss": v_loss,
+               "kl": kl, **pg_m}
+    return total, (metrics, stats)
+
+
+def seq_train_step(state: SeqTrainState, batch, *, cfg: ModelConfig,
+                   rl: RLConfig, remat: bool = True,
+                   block: Optional[int] = ATTN_BLOCK,
+                   accum: int = 1, unroll: bool = False,
+                   grad_shardings=None,
+                   act_sharding=None) -> Tuple[SeqTrainState, Dict]:
+    """One optimizer step = ``accum`` sequential micro-batch passes (App.
+    C.1: contiguous slicing, params frozen within the accumulation window,
+    single deferred stats aggregation)."""
+    grad_fn = jax.grad(
+        functools.partial(seq_loss_fn, cfg=cfg, rl=rl, remat=remat,
+                          block=block, unroll=unroll,
+                          act_sharding=act_sharding), has_aux=True)
+
+    if accum == 1:
+        grads, (metrics, stats) = grad_fn(state.params, batch,
+                                          state.adv_norm)
+    else:
+        # batch leaves carry a leading [accum] micro-batch axis (UNsharded;
+        # the batch axis proper is axis 1) — scanning over it is the
+        # paper's sequential contiguous slicing, and keeps every slice on
+        # its home device (a dynamic-slice along the *sharded* batch axis
+        # would force GSPMD to replicate the whole batch).
+        def body(carry, mbatch):
+            g_acc, s_acc = carry
+            grads, (metrics, stats) = grad_fn(state.params, mbatch,
+                                              state.adv_norm)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / accum, g_acc, grads)
+            return (g_acc, s_acc + stats), metrics
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             state.params)
+        (grads, stats), metrics = jax.lax.scan(
+            body, (zeros, jnp.zeros((3,))), batch)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+    if grad_shardings is not None:
+        grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+    lr = adamw.warmup_schedule(rl.lr_policy, rl.warmup_steps)(state.opt.step)
+    new_params, new_opt, gnorm = adamw.update(
+        grads, state.opt, state.params, lr, max_grad_norm=rl.max_grad_norm)
+    new_adv = advnorm.welford_update(state.adv_norm, stats)
+    metrics["grad_norm"] = gnorm
+    return SeqTrainState(new_params, new_opt, new_adv), metrics
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def choose_accum(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 *, carry_budget_bytes: float = 3 * 2**30,
+                 pure_dp: bool = False) -> int:
+    """Pick gradient-accumulation steps so the remat-saved layer carries of
+    one micro-batch stay under ``carry_budget_bytes`` per device
+    (carries = L × mb_local × S × d_model × 2 bytes)."""
+    dp = tuple(rules.batch_axes(mesh)) + (("model",) if pure_dp else ())
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    local_b = max(shape.global_batch // dp_size, 1)
+    per_seq = cfg.num_layers * shape.seq_len * cfg.d_model * 2
+    mb = max(int(carry_budget_bytes // max(per_seq, 1)), 1)
+    accum = 1
+    while local_b // accum > mb and accum < local_b:
+        accum *= 2
+    return accum
+
+
+def prefill_step(params, tokens, prefix, *, cfg: ModelConfig,
+                 window: Optional[int], cache_len: int,
+                 block: Optional[int] = ATTN_BLOCK, unroll: bool = False):
+    out, cache = transformer.prefill(cfg, params, tokens, prefix,
+                                     cache_len=cache_len, window=window,
+                                     block=block, unroll=unroll)
+    return out["logits"][:, -1], cache
+
+
+def serve_step(params, token, cache, *, cfg: ModelConfig,
+               window: Optional[int], unroll: bool = False,
+               uniform: bool = False):
+    out, cache = transformer.decode(cfg, params, token, cache, window=window,
+                                    unroll=unroll, uniform=uniform)
+    return out["logits"][:, -1], cache
+
+
+# ---------------------------------------------------------------------------
+# Spec builders — ShapeDtypeStructs + NamedShardings per (arch × shape)
+# ---------------------------------------------------------------------------
+
+def long_context_window(cfg: ModelConfig, shape: ShapeConfig) -> Optional[int]:
+    """Sliding-window fallback for dense archs at 500k (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.subquadratic \
+            and not cfg.is_attention_free:
+        return cfg.long_context_window
+    return cfg.sliding_window
+
+
+def effective_cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    window = long_context_window(cfg, shape)
+    return min(shape.seq_len, window) if window else shape.seq_len
+
+
+def param_structs(cfg: ModelConfig, *, with_value_head: bool = True):
+    def init(key):
+        if with_value_head:
+            from repro.models.policy import init_policy_params
+            return init_policy_params(cfg, key)
+        return transformer.init_params(cfg, key)
+    return jax.eval_shape(init, jax.random.PRNGKey(0))
+
+
+def state_structs(cfg: ModelConfig):
+    p = param_structs(cfg)
+    f32 = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    opt = adamw.AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32), mu=f32(p), nu=f32(p))
+    advs = AdvNormState(*(jax.ShapeDtypeStruct((), jnp.float32),) * 3)
+    return SeqTrainState(params=p, opt=opt, adv_norm=advs)
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                accum: int = 1, fsdp=None, pure_dp: bool = False,
+                fsdp_model: bool = False, zero3_axis=None):
+    """(state_structs, batch_structs, state_shardings, batch_shardings).
+
+    With ``accum > 1`` every batch leaf gains a LEADING unsharded
+    [accum] micro-batch axis and the batch axis proper moves to axis 1
+    (sequential micro-batch slicing, App. C.1)."""
+    b, s = shape.global_batch, shape.seq_len
+    state = state_structs(cfg)
+    if fsdp_model or zero3_axis:
+        # ZeRO-3 (§Perf): every tensor's largest divisible axis shards
+        # over the chosen axis (params gathered per layer inside the
+        # scan); combined with pure_dp batch this leaves ONLY param
+        # gathers + grad reduce-scatters as collectives.
+        from repro.optim import zero
+        ax = zero3_axis or "model"
+        repl = jax.tree.map(lambda l: P(*([None] * len(l.shape))),
+                            state.params)
+        pspec = zero.shard_moments_spec(state.params, repl,
+                                        data_axis=ax,
+                                        data_size=mesh.shape[ax])
+    else:
+        pspec = rules.param_specs(cfg, state.params, mesh, fsdp=fsdp,
+                                  tp=not pure_dp)
+    mspec = _moments_specs(state.params, pspec, mesh)
+    scalar = P()
+    state_spec = SeqTrainState(
+        params=pspec,
+        opt=adamw.AdamWState(step=scalar, mu=mspec,
+                             nu=jax.tree.map(lambda x: x, mspec)),
+        adv_norm=AdvNormState(scalar, scalar, scalar))
+
+    mb = b // accum
+    lead = (accum, mb) if accum > 1 else (b,)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct(lead + (s,), jnp.int32),
+        "behavior_logp": jax.ShapeDtypeStruct(lead + (s,), jnp.float32),
+        "rewards": jax.ShapeDtypeStruct(lead + (s - 1,), jnp.float32),
+        "dones": jax.ShapeDtypeStruct(lead + (s - 1,), jnp.float32),
+        "mask": jax.ShapeDtypeStruct(lead + (s - 1,), jnp.float32),
+    }
+    if cfg.num_prefix_tokens:
+        batch["prefix"] = jax.ShapeDtypeStruct(
+            lead + (cfg.num_prefix_tokens, transformer.FRONTEND_DIM),
+            jnp.float32)
+
+    def bspec_for(v):
+        nd = v.ndim - (1 if accum > 1 else 0)
+        if pure_dp:
+            # batch over BOTH mesh axes — no tensor parallelism at all
+            dp = rules.batch_axes(mesh)
+            axes = tuple(dp) + ("model",)
+            spec = P(*((axes,) + (None,) * (nd - 1))) \
+                if mb % _axes_size(mesh, axes) == 0 else P(*([None] * nd))
+        else:
+            spec = rules.data_spec(mesh, mb, nd)
+        if accum > 1:
+            spec = P(None, *spec)
+        return spec
+    bspec = {k: bspec_for(v) for k, v in batch.items()}
+    return state, batch, _ns(mesh, state_spec), _ns(mesh, bspec)
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                  fsdp=None):
+    b, s = shape.global_batch, shape.seq_len
+    window = long_context_window(cfg, shape)
+    cache_len = effective_cache_len(cfg, shape)
+    params = param_structs(cfg, with_value_head=False)
+    pspec = rules.param_specs(cfg, params, mesh, fsdp=fsdp)
+    tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    tspec = rules.data_spec(mesh, b, 2, seq_axis=1, seq_len=s)
+    prefix = None
+    prefix_spec = None
+    if cfg.num_prefix_tokens:
+        prefix = jax.ShapeDtypeStruct(
+            (b, cfg.num_prefix_tokens, transformer.FRONTEND_DIM),
+            jnp.float32)
+        prefix_spec = rules.data_spec(mesh, b, 3)
+    cache = jax.eval_shape(
+        lambda: transformer.init_decode_cache(cfg, b, cache_len,
+                                              window=window))
+    cspec = rules.cache_specs(cfg, cache, mesh, b, cache_len)
+    return dict(params=params, tokens=tokens, prefix=prefix, cache=cache,
+                window=window, cache_len=cache_len,
+                shardings=dict(params=_ns(mesh, pspec),
+                               tokens=_ns(mesh, tspec),
+                               prefix=_ns(mesh, prefix_spec)
+                               if prefix is not None else None,
+                               cache=_ns(mesh, cspec)))
+
+
+def serve_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                fsdp=None, seq_shard: bool = False):
+    b = shape.global_batch
+    window = long_context_window(cfg, shape)
+    cache_len = effective_cache_len(cfg, shape)
+    params = param_structs(cfg, with_value_head=False)
+    pspec = rules.param_specs(cfg, params, mesh, fsdp=fsdp)
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tok_spec = rules.data_spec(mesh, b, 1)
+    cache = jax.eval_shape(
+        lambda: transformer.init_decode_cache(cfg, b, cache_len,
+                                              window=window))
+    cspec = rules.cache_specs(cfg, cache, mesh, b, cache_len,
+                              seq_shard_model=seq_shard)
+    return dict(params=params, token=token, cache=cache, window=window,
+                cache_len=cache_len,
+                shardings=dict(params=_ns(mesh, pspec),
+                               token=_ns(mesh, tok_spec),
+                               cache=_ns(mesh, cspec)))
+
+
+def _moments_specs(param_structs_tree, pspec, mesh: Mesh):
+    """ZeRO-2: Adam moments additionally sharded over ``data``."""
+    from repro.optim import zero
+    return zero.shard_moments_spec(
+        param_structs_tree, pspec, data_axis="data",
+        data_size=mesh.shape["data"])
+
+
+def _ns(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

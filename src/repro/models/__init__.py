@@ -1,0 +1,1 @@
+from repro.models import attention, layers, moe, policy, ssm, transformer, value_head  # noqa: F401

@@ -1,0 +1,103 @@
+"""Top-k mixture-of-experts with GShard-style grouped capacity dispatch.
+
+Dispatch is expressed as dense einsums over a per-group
+[tokens, experts, capacity] one-hot combine tensor so GSPMD can turn the
+expert dimension into an all-to-all when experts are sharded over the
+``model`` mesh axis. Tokens are processed in fixed-size groups
+(``group_tokens``) to bound the combine-tensor working set — the group size
+is a perf knob surfaced in EXPERIMENTS.md §Perf.
+
+The auxiliary load-balance and router-z losses are returned so the RL
+train step can fold them into the GIPO objective.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import Params, dense_init
+
+GROUP_TOKENS = 512
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, dtype) -> Params:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    e, ff = cfg.num_experts, cfg.d_ff
+    return {
+        "router": dense_init(kr, (d_model, e), jnp.float32),
+        "w_gate": dense_init(kg, (e, d_model, ff), dtype),
+        "w_up": dense_init(ku, (e, d_model, ff), dtype),
+        "w_down": dense_init(kd, (e, ff, d_model), dtype),
+    }
+
+
+def capacity(group_tokens: int, cfg: MoEConfig) -> int:
+    cap = int(cfg.capacity_factor * group_tokens * cfg.top_k / cfg.num_experts)
+    return max(cap, cfg.top_k)
+
+
+def _group_dispatch(params: Params, xg: jnp.ndarray, cfg: MoEConfig,
+                    cap: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """xg: [n, d] one token group. Returns (out [n, d], logits [n, e], kept)."""
+    n, d = xg.shape
+    e, k = cfg.num_experts, cfg.top_k
+
+    logits = (xg.astype(jnp.float32) @ params["router"])          # [n, e]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)               # [n, k]
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)       # [n, k, e]
+    # GShard priority: all 1st choices, then 2nd choices, ...
+    prio = onehot.transpose(1, 0, 2).reshape(k * n, e)
+    pos_prio = jnp.cumsum(prio, axis=0) - prio
+    within = (pos_prio.reshape(k, n, e).transpose(1, 0, 2) * onehot).sum(-1)
+    keep = within < cap                                           # [n, k]
+    gates = (gate_vals * keep).astype(xg.dtype)
+
+    cap_onehot = jax.nn.one_hot(jnp.where(keep, within, cap), cap + 1,
+                                dtype=xg.dtype)[..., :cap]        # [n, k, cap]
+    combine = jnp.einsum("nk,nke,nkc->nec", gates,
+                         onehot.astype(xg.dtype), cap_onehot)     # [n, e, cap]
+    dispatch = (combine > 0).astype(xg.dtype)
+
+    expert_in = jnp.einsum("nd,nec->ecd", xg, dispatch)           # [e, cap, d]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # [e, cap, d]
+    out = jnp.einsum("ecd,nec->nd", expert_out, combine)
+    return out, logits, keep
+
+
+def moe_forward(params: Params, x: jnp.ndarray, cfg: MoEConfig,
+                group_tokens: int = GROUP_TOKENS
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: [B, T, d] -> (out [B, T, d], aux losses)."""
+    b, t, d = x.shape
+    n = b * t
+    g = max(n // group_tokens, 1)
+    ng = n // g
+    xf = x.reshape(g, ng, d)
+    cap = capacity(ng, cfg)
+
+    out, logits, keep = jax.vmap(
+        lambda xg: _group_dispatch(params, xg, cfg, cap))(xf)
+
+    e = cfg.num_experts
+    logits2 = logits.reshape(n, e)
+    probs2 = jax.nn.softmax(logits2, axis=-1)
+    top1 = jnp.argmax(probs2, axis=-1)
+    me = probs2.mean(axis=0)
+    ce = jax.nn.one_hot(top1, e).mean(axis=0)
+    load_balance = e * jnp.sum(me * ce)
+    router_z = jnp.mean(
+        jax.scipy.special.logsumexp(logits2, axis=-1) ** 2)
+    aux = {
+        "load_balance": cfg.load_balance_coef * load_balance,
+        "router_z": cfg.router_z_coef * router_z,
+        "dropped_frac": 1.0 - keep.mean(),
+    }
+    return out.reshape(b, t, d), aux

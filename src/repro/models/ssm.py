@@ -1,0 +1,238 @@
+"""Mamba2 (SSD — state-space duality) block: chunked dual form for
+training/prefill and O(1)-state recurrent decode.
+
+The chunked algorithm follows arXiv:2405.21060: intra-chunk terms are dense
+matmuls (MXU-friendly), inter-chunk terms are a short ``lax.scan`` over chunk
+states. A step-equivalent recurrent path backs single-token decode; tests
+assert the two paths agree (the SSD "duality").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import Params, dense_init
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray     # [B, K-1, conv_channels] rolling conv input tail
+    ssm: jnp.ndarray      # [B, H, P, N] recurrent state
+    length: jnp.ndarray   # [B] int32
+
+
+def ssm_init(key, d_model: int, cfg: SSMConfig, dtype) -> Params:
+    di = cfg.d_inner(d_model)
+    nh = cfg.num_heads(d_model)
+    g, n, kk = cfg.n_groups, cfg.state_dim, cfg.conv_dim
+    conv_ch = di + 2 * g * n
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    dt = jnp.exp(jax.random.uniform(k4, (nh,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    params = {
+        "conv_w": dense_init(k2, (kk, conv_ch), dtype, scale=1.0),
+        "conv_b": jnp.zeros((conv_ch,), dtype=dtype),
+        "A_log": jnp.log(jnp.ones((nh,), jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype=dtype),
+        "out_proj": dense_init(k3, (di, d_model), dtype),
+    }
+    if cfg.fused_in_proj:
+        params["in_proj"] = dense_init(
+            k1, (d_model, 2 * di + 2 * g * n + nh), dtype)
+    else:
+        # shard-aligned split projections (§Perf hillclimb): each output
+        # axis is independently divisible by the model-parallel degree
+        params["in_proj_z"] = dense_init(k1, (d_model, di), dtype)
+        params["in_proj_x"] = dense_init(k5, (d_model, di + 2 * g * n),
+                                         dtype)
+        params["in_proj_dt"] = dense_init(k6, (d_model, nh), dtype)
+    return params
+
+
+def _split_proj(params: Params, u: jnp.ndarray, d_model: int, cfg: SSMConfig):
+    di = cfg.d_inner(d_model)
+    g, n = cfg.n_groups, cfg.state_dim
+    nh = cfg.num_heads(d_model)
+    if cfg.fused_in_proj:
+        proj = u @ params["in_proj"]
+        z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * g * n], axis=-1)
+    else:
+        z = u @ params["in_proj_z"]
+        xbc = u @ params["in_proj_x"]
+        dt_raw = u @ params["in_proj_dt"]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])            # [..., nh]
+    return z, xbc, dt, di, g, n, nh
+
+
+def _causal_conv(params: Params, xbc: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over time. xbc: [B, T, C]."""
+    k = params["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * params["conv_w"][i]
+              for i in range(k))
+    return jax.nn.silu(out + params["conv_b"])
+
+
+def _gated_norm(params: Params, y: jnp.ndarray, z: jnp.ndarray,
+                eps: float = 1e-5) -> jnp.ndarray:
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + eps)
+    return (g * params["norm_scale"].astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                init_state: jnp.ndarray = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    x: [B,T,H,P]; dt: [B,T,H] (f32, post-softplus); A: [H] (negative);
+    Bm/Cm: [B,T,N] (single group, broadcast over heads).
+    Returns (y [B,T,H,P], final_state [B,H,P,N]).
+    """
+    b, t, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, t)
+    assert t % q == 0, f"seq {t} not divisible by chunk {q}"
+    nc = t // q
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = Bm.reshape(b, nc, q, n)
+    Cc = Cm.reshape(b, nc, q, n)
+
+    dA = dtc * A[None, None, None, :]                    # [b,nc,q,h] (<= 0)
+    cum = jnp.cumsum(dA, axis=2)                         # inclusive
+    cum_total = cum[:, :, -1:, :]                        # [b,nc,1,h]
+
+    # intra-chunk (dense, MXU):
+    # y_intra[i] = sum_{j<=i} (C_i·B_j) exp(cum_i - cum_j) dt_j x_j
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    G = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [b,nc,i,j,h]
+    G = jnp.where(mask[None, None, :, :, None], G, 0.0)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    W = CB[..., None] * G * dtc[:, :, None, :, :]        # [b,nc,i,j,h]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", W, xc.astype(jnp.float32))
+
+    # chunk input states: S_c = sum_j exp(cum_q - cum_j) dt_j B_j x_j^T
+    decay_in = jnp.exp(cum_total - cum) * dtc            # [b,nc,q,h]
+    S_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_in,
+                         Bc.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cum_total[:, :, 0, :])         # [b,nc,h]
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def body(S, inputs):
+        S_c, dec = inputs                                # [b,h,p,n], [b,h]
+        S_in = S                                         # state entering chunk
+        S = dec[:, :, None, None] * S + S_c
+        return S, S_in
+
+    S_cs = jnp.moveaxis(S_chunk, 1, 0)                   # [nc,b,h,p,n]
+    decs = jnp.moveaxis(chunk_decay, 1, 0)               # [nc,b,h]
+    S_final, S_enter = jax.lax.scan(body, init_state.astype(jnp.float32),
+                                    (S_cs, decs))
+
+    # inter contribution: y_inter[i] = exp(cum_i) * C_i · S_enter
+    S_enter = jnp.moveaxis(S_enter, 0, 1)                # [b,nc,h,p,n]
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         Cc.astype(jnp.float32), S_enter, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, t, h, p)
+    return y, S_final
+
+
+def ssd_recurrent_step(state: jnp.ndarray, x_t: jnp.ndarray, dt_t: jnp.ndarray,
+                       A: jnp.ndarray, B_t: jnp.ndarray, C_t: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One recurrent step. state: [B,H,P,N]; x_t: [B,H,P]; dt_t: [B,H];
+    B_t/C_t: [B,N]. Returns (y_t [B,H,P], new_state)."""
+    dA = jnp.exp(dt_t * A[None, :])                      # [B,H]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t.astype(jnp.float32),
+                     B_t.astype(jnp.float32))
+    new_state = dA[:, :, None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(jnp.float32))
+    return y, new_state
+
+
+def ssm_forward(params: Params, u: jnp.ndarray, d_model: int, cfg: SSMConfig,
+                init_state: SSMState = None,
+                return_state: bool = False):
+    """Full-sequence Mamba2 block. u: [B, T, d_model]."""
+    b, t, _ = u.shape
+    z, xbc_raw, dt, di, g, n, nh = _split_proj(params, u, d_model, cfg)
+    p = cfg.head_dim
+    kk = cfg.conv_dim
+
+    if init_state is not None:
+        tail = init_state.conv                            # [B, K-1, C]
+        padded = jnp.concatenate([tail, xbc_raw], axis=1)
+        conv_out = sum(padded[:, i:i + t] * params["conv_w"][i]
+                       for i in range(kk))
+        xbc = jax.nn.silu(conv_out + params["conv_b"])
+        ssm0 = init_state.ssm
+    else:
+        xbc = _causal_conv(params, xbc_raw)
+        ssm0 = None
+
+    xs, Bm, Cm = jnp.split(xbc, [di, di + g * n], axis=-1)
+    x = xs.reshape(b, t, nh, p)
+    A = -jnp.exp(params["A_log"])
+    y, S_final = ssd_chunked(x, dt, A, Bm, Cm, cfg.chunk, init_state=ssm0)
+    y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, t, di).astype(u.dtype)
+    out = _gated_norm(params, y, z) @ params["out_proj"]
+    if not return_state:
+        return out
+    new_tail = jnp.concatenate(
+        [jnp.zeros((b, max(kk - 1 - t, 0), xbc_raw.shape[-1]),
+                   xbc_raw.dtype), xbc_raw[:, -(kk - 1):]], axis=1) \
+        if t < kk - 1 else xbc_raw[:, -(kk - 1):]
+    length = (init_state.length if init_state is not None
+              else jnp.zeros((b,), jnp.int32)) + t
+    return out, SSMState(conv=new_tail, ssm=S_final, length=length)
+
+
+def ssm_decode(params: Params, u: jnp.ndarray, state: SSMState, d_model: int,
+               cfg: SSMConfig) -> Tuple[jnp.ndarray, SSMState]:
+    """Single-token recurrent decode. u: [B, 1, d_model]."""
+    b = u.shape[0]
+    z, xbc_raw, dt, di, g, n, nh = _split_proj(params, u, d_model, cfg)
+    kk = cfg.conv_dim
+    p = cfg.head_dim
+
+    window = jnp.concatenate([state.conv, xbc_raw], axis=1)   # [B, K, C]
+    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"])
+    xbc = jax.nn.silu(conv_out + params["conv_b"])[:, None, :]
+
+    xs, Bm, Cm = jnp.split(xbc, [di, di + g * n], axis=-1)
+    x_t = xs[:, 0].reshape(b, nh, p)
+    A = -jnp.exp(params["A_log"])
+    y_t, new_ssm = ssd_recurrent_step(state.ssm, x_t, dt[:, 0], A,
+                                      Bm[:, 0], Cm[:, 0])
+    y_t = y_t + params["D"][None, :, None] * x_t.astype(jnp.float32)
+    y = y_t.reshape(b, 1, di).astype(u.dtype)
+    out = _gated_norm(params, y, z) @ params["out_proj"]
+    new_state = SSMState(conv=window[:, 1:], ssm=new_ssm,
+                         length=state.length + 1)
+    return out, new_state
+
+
+def init_ssm_state(batch: int, d_model: int, cfg: SSMConfig,
+                   dtype) -> SSMState:
+    di = cfg.d_inner(d_model)
+    nh = cfg.num_heads(d_model)
+    conv_ch = di + 2 * cfg.n_groups * cfg.state_dim
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.conv_dim - 1, conv_ch), dtype=dtype),
+        ssm=jnp.zeros((batch, nh, cfg.head_dim, cfg.state_dim), jnp.float32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )

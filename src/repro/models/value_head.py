@@ -1,0 +1,59 @@
+"""Action-aware attention-pooling value head (paper App. D.2).
+
+Pools the action-token hidden states with a learned attention score, adds a
+step embedding (value depends on the remaining horizon), and regresses
+V(o_t) with a small MLP. Hidden states are detached (``stop_gradient``) so
+value gradients never touch the policy representation — exactly the paper's
+``hidden_states.detach()``.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+
+
+def value_head_init(key, hidden_dim: int, max_episode_steps: int) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "attn_proj": dense_init(k1, (hidden_dim, 1), jnp.float32),
+        "step_emb": dense_init(k2, (max_episode_steps, hidden_dim),
+                               jnp.float32, scale=1.0),
+        "mlp_w1": dense_init(k3, (hidden_dim, hidden_dim), jnp.float32),
+        "mlp_b1": jnp.zeros((hidden_dim,), jnp.float32),
+        "mlp_w2": dense_init(k4, (hidden_dim, 1), jnp.float32),
+        "mlp_b2": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def value_head(params: Params, hidden_states: jnp.ndarray,
+               step_t: jnp.ndarray) -> jnp.ndarray:
+    """hidden_states: [B, S, D] (action-token hiddens); step_t: [B] int32.
+
+    Returns V(s_t): [B].
+    """
+    h = jax.lax.stop_gradient(hidden_states).astype(jnp.float32)
+    e = h @ params["attn_proj"]                       # [B, S, 1]
+    alpha = jax.nn.softmax(e, axis=1)
+    z_pool = jnp.sum(alpha * h, axis=1)               # [B, D]
+    max_steps = params["step_emb"].shape[0]
+    e_step = jnp.take(params["step_emb"],
+                      jnp.clip(step_t, 0, max_steps - 1), axis=0)
+    x = z_pool + e_step
+    x = jax.nn.gelu(x @ params["mlp_w1"] + params["mlp_b1"])
+    v = x @ params["mlp_w2"] + params["mlp_b2"]
+    return v[:, 0]
+
+
+def value_head_seq(params: Params, hidden_states: jnp.ndarray,
+                   steps: jnp.ndarray) -> jnp.ndarray:
+    """Per-timestep values over a trajectory.
+
+    hidden_states: [B, T, S, D] — S action-token hiddens per env step;
+    steps: [B, T] episode-step indices. Returns [B, T].
+    """
+    return jax.vmap(value_head, in_axes=(None, 1, 1), out_axes=1)(
+        params, hidden_states, steps)

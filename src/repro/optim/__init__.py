@@ -1,0 +1,2 @@
+from repro.optim import adamw, zero  # noqa: F401
+from repro.optim.adamw import AdamWState, init, update, warmup_schedule  # noqa: F401

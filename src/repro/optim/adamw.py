@@ -1,0 +1,79 @@
+"""AdamW with bf16-friendly mixed precision: f32 master moments over
+(possibly bf16) parameters, global-norm clipping, and warmup schedules.
+
+No optax dependency — the state is a plain pytree so the ZeRO-2 partition
+specs in ``repro.optim.zero`` can shard it over the ``data`` mesh axis.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray      # i32 scalar
+    mu: dict               # first moments (f32), same tree as params
+    nu: dict               # second moments (f32)
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def warmup_schedule(base_lr: float, warmup_steps: int) -> Callable:
+    def lr(step):
+        frac = jnp.minimum(
+            (step.astype(jnp.float32) + 1.0) / max(warmup_steps, 1), 1.0)
+        return base_lr * frac
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def update(grads, state: AdamWState, params, lr: jnp.ndarray, *,
+           b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+           weight_decay: float = 0.0,
+           max_grad_norm: float = 0.0) -> Tuple[dict, AdamWState, jnp.ndarray]:
+    """Returns (new_params, new_state, grad_norm)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if max_grad_norm > 0:
+        grads, norm = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        norm = global_norm(grads)
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                      state.nu, grads)
+
+    # ``lr`` may be a scalar or a pytree of per-leaf scalars (e.g. the paper's
+    # separate policy / value-head learning rates, Table 3).
+    lr_tree = lr if isinstance(lr, dict) else jax.tree.map(
+        lambda _: lr, params)
+
+    def upd(p, m, v, lr_leaf):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_leaf * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu, lr_tree)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu), norm

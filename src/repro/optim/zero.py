@@ -1,0 +1,56 @@
+"""ZeRO-2-style partitioning of optimizer state over the ``data`` axis.
+
+Paper §3.1: "Trainer Workers employ ZeRO-2 to partition optimizer states and
+gradients, supporting larger micro-batch sizes." The JAX-native equivalent:
+parameters keep their tensor-parallel sharding (replicated across ``data``),
+while the f32 Adam moments are *additionally* sharded over ``data`` along
+each tensor's largest divisible axis. Gradients reduce-scatter into that
+layout (GSPMD derives this from the output shardings of the grad step).
+
+``shard_moments_spec`` takes the parameter PartitionSpec tree and returns
+the moments' spec tree.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _zero_spec_for(shape, param_spec: P, data_axis: str,
+                   data_size: int) -> P:
+    """Pick the largest axis not already sharded and divisible by data."""
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    # FSDP-style params already consume the data axis - nothing to add
+    for e in entries:
+        names = e if isinstance(e, tuple) else (e,)
+        if data_axis in names:
+            return param_spec
+    best, best_dim = None, 0
+    for i, (dim, taken) in enumerate(zip(shape, entries)):
+        if taken is not None:
+            continue
+        if dim % data_size == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best is None:
+        return param_spec
+    entries[best] = data_axis
+    return P(*entries)
+
+
+def shard_moments_spec(param_shapes, param_specs, *, data_axis: str = "data",
+                       data_size: int = 16):
+    """param_shapes: pytree of jax.ShapeDtypeStruct; param_specs: pytree of
+    PartitionSpec. Returns the ZeRO-sharded moments spec tree."""
+    return jax.tree.map(
+        lambda s, spec: _zero_spec_for(s.shape, spec, data_axis, data_size),
+        param_shapes, param_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def moments_bytes_per_device(param_count: int, data_size: int,
+                             zero: bool) -> float:
+    """Analytic check of the ZeRO-2 memory claim (2 × f32 moments)."""
+    total = 2 * 4 * param_count
+    return total / (data_size if zero else 1)

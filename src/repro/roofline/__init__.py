@@ -1,0 +1,7 @@
+"""Three-term roofline analysis derived from compiled dry-run artifacts."""
+from repro.roofline.analysis import (  # noqa: F401
+    RooflineTerms,
+    collective_bytes,
+    model_flops,
+    roofline_from_compiled,
+)

@@ -1,0 +1,199 @@
+"""Roofline terms from the compiled dry-run (no real hardware):
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis()`` gives HLO_FLOPs and HLO_bytes of the *partitioned*
+(per-device) module, so terms are computed per chip directly. Collective
+bytes are parsed from the post-optimization HLO text: the summed result
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+# result of an HLO op line: `%name = TYPE[d0,d1]{layout} opcode(...)`
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+# tuple-result collectives: `= (f32[..]{..}, f32[..]{..}) all-reduce(`
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind collective result bytes from post-optimization HLO.
+
+    ``-start`` variants are counted; their ``-done`` twins are skipped so
+    async collectives are not double counted.
+    """
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "-done(" in stripped:
+            continue
+        m = _OP_RE.search(stripped)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            counts[kind] += 1
+            continue
+        m = _TUPLE_RE.search(stripped)
+        if m:
+            shapes, kind = m.groups()
+            for dm in _SHAPE_RE.finditer(shapes):
+                out[kind] += _shape_bytes(*dm.groups())
+            counts[kind] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per-device HLO FLOPs
+    hbm_bytes: float             # per-device HLO bytes accessed
+    coll_bytes: float            # per-device collective bytes
+    coll_by_kind: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float          # MODEL_FLOPS / (chips × HLO_FLOPs)
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D (training) / 2·N·D (inference); N = active
+    params, D = tokens processed by the step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: ONE token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_from_compiled(compiled, cfg: ModelConfig, shape: ShapeConfig,
+                           chips: int,
+                           hlo_text: Optional[str] = None,
+                           scale: float = 1.0) -> RooflineTerms:
+    """``scale`` multiplies the measured per-program terms — used when the
+    cost program is one micro-batch of a ``scale``-step gradient-
+    accumulation window (the programs are identical across micro-steps)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) * scale
+    nbytes = float(cost.get("bytes accessed", 0.0)) * scale
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    counts = coll.pop("_counts")
+    total_coll = float(sum(coll.values())) * scale
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = nbytes / HBM_BW
+    collective_s = total_coll / ICI_BW
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", collective_s), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    useful = mf / max(flops * chips, 1.0)
+    return RooflineTerms(
+        flops=flops, hbm_bytes=nbytes, coll_bytes=total_coll,
+        coll_by_kind={**coll, "counts": counts},
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dom, model_flops=mf, useful_ratio=useful)
+
+
+def terms_from_compiled(compiled, hlo_text: Optional[str] = None) -> Dict:
+    """Raw per-device terms of one compiled program: flops, bytes, and
+    collective bytes by kind (floats, unscaled)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    counts = coll.pop("_counts")
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": {k: float(v) for k, v in coll.items()},
+        "counts": counts,
+    }
+
+
+def combine_layer_delta(t1: Dict, t2: Dict, n_units: float) -> Dict:
+    """Layer-delta extrapolation: ``total = t1 + (n_units − 1)·(t2 − t1)``.
+
+    t1/t2 are ``terms_from_compiled`` of 1-unit and 2-unit surrogate
+    programs; layers are identical so the per-unit delta is exact. This
+    sidesteps cost_analysis counting ``lax.scan`` while-bodies once."""
+    f = n_units - 1.0
+    out = {
+        "flops": max(t1["flops"] + f * (t2["flops"] - t1["flops"]), 0.0),
+        "bytes": max(t1["bytes"] + f * (t2["bytes"] - t1["bytes"]), 0.0),
+        # clamp: GSPMD occasionally picks different collective mixes for
+        # the two surrogates; a negative extrapolation is an artifact
+        "coll": {k: max(t1["coll"][k] + f * (t2["coll"][k] - t1["coll"][k]),
+                        0.0)
+                 for k in t1["coll"]},
+        "counts": {k: max(round(t1["counts"][k]
+                                + f * (t2["counts"][k] - t1["counts"][k])),
+                          0)
+                   for k in t1["counts"]},
+    }
+    return out
+
+
+def roofline_from_terms(terms: Dict, cfg: ModelConfig, shape: ShapeConfig,
+                        chips: int, scale: float = 1.0) -> RooflineTerms:
+    flops = terms["flops"] * scale
+    nbytes = terms["bytes"] * scale
+    coll = {k: v * scale for k, v in terms["coll"].items()}
+    total_coll = float(sum(coll.values()))
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = nbytes / HBM_BW
+    collective_s = total_coll / ICI_BW
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", collective_s), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    return RooflineTerms(
+        flops=flops, hbm_bytes=nbytes, coll_bytes=total_coll,
+        coll_by_kind={**coll, "counts": terms.get("counts", {})},
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dom, model_flops=mf,
+        useful_ratio=mf / max(flops * chips, 1.0))

@@ -1,0 +1,16 @@
+"""The asynchronous runtime (paper §3): rollout workers, the
+Inference-as-a-Service pool with dynamic-window batching (eq. 1), the
+trainer worker, the versioned weight store with the drain protocol
+(App. D.6), and the orchestrator that wires them into the fully
+asynchronous pipeline — or the synchronous baseline (``sync_mode=True``)
+that reproduces the long-tail bubbles of Figure 1."""
+from repro.runtime.weight_store import (  # noqa: F401
+    DirectTransport,
+    DiskTransport,
+    SerializedTransport,
+    VersionedWeightStore,
+)
+from repro.runtime.inference import InferenceService  # noqa: F401
+from repro.runtime.rollout import RolloutWorker  # noqa: F401
+from repro.runtime.trainer import TrainerWorker  # noqa: F401
+from repro.runtime.orchestrator import AcceRLSystem  # noqa: F401

@@ -1,0 +1,185 @@
+"""Inference-as-a-Service pool (paper §3.2).
+
+Rollout workers submit per-env observation requests and suspend; every
+inference worker drains a shared request queue and triggers a batched
+forward pass under the dynamic window rule (eq. 1):
+
+    Trigger = (|Q| >= B) ∨ (t_now − t_first >= T_max)
+
+TPU adaptation (DESIGN.md §2): dynamic batches are padded up to the nearest
+bucket size so the jitted program never recompiles for new batch shapes.
+
+The drain protocol (App. D.6): when the weight store raises its drain flag,
+workers stop scheduling NEW batches, finish the in-flight one, then swap
+weights in place before resuming — update atomicity + version consistency.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, RuntimeConfig
+from repro.models.policy import make_inference_fn
+from repro.models.transformer import FRONTEND_DIM
+from repro.runtime.weight_store import VersionedWeightStore
+
+
+class _Request:
+    __slots__ = ("obs_tokens", "frame", "step", "future", "t_arrival")
+
+    def __init__(self, obs_tokens, frame, step):
+        self.obs_tokens = obs_tokens        # [T_obs] i32
+        self.frame = frame                  # [F] f32 or None
+        self.step = step                    # int
+        self.future: Future = Future()
+        self.t_arrival = time.monotonic()
+
+
+def pad_to_bucket(n: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class InferenceService:
+    """Centralized inference pool: one shared queue, N worker threads."""
+
+    def __init__(self, cfg: ModelConfig, store: VersionedWeightStore,
+                 rt: RuntimeConfig, *, temperature: float = 1.0, seed: int = 0):
+        self.cfg = cfg
+        self.store = store
+        self.rt = rt
+        self._fn = make_inference_fn(cfg, temperature)
+        self._q: "queue.Queue[_Request]" = queue.Queue()
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._key = jax.random.PRNGKey(seed)
+        self._key_lock = threading.Lock()
+        # metrics
+        self.batches_run = 0
+        self.requests_served = 0
+        self.busy_s = 0.0
+        self.started_at: Optional[float] = None
+        self.weight_swaps = 0
+        self.padded_slots = 0
+
+    # -- client API -----------------------------------------------------------
+    def submit(self, obs_tokens: np.ndarray, frame: Optional[np.ndarray],
+               step: int) -> Future:
+        """Asynchronous request; the rollout worker suspends on the future."""
+        req = _Request(obs_tokens, frame, step)
+        self._q.put(req)
+        return req.future
+
+    # -- lifecycle --------------------------------------------------------------
+    def start(self) -> "InferenceService":
+        self.started_at = time.monotonic()
+        for i in range(self.rt.num_inference_workers):
+            t = threading.Thread(target=self._run, daemon=True,
+                                 name=f"inference-{i}")
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    # -- worker loop --------------------------------------------------------------
+    def _next_key(self):
+        with self._key_lock:
+            self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _collect_window(self) -> List[_Request]:
+        """Dynamic-window batching, eq. 1."""
+        B = self.rt.inference_batch
+        t_max = self.rt.inference_max_wait_s
+        reqs: List[_Request] = []
+        t_first = None
+        while not self._stop.is_set():
+            timeout = 0.002 if t_first is None else max(
+                0.0, t_max - (time.monotonic() - t_first))
+            try:
+                r = self._q.get(timeout=max(timeout, 1e-4))
+                reqs.append(r)
+                if t_first is None:
+                    t_first = r.t_arrival
+            except queue.Empty:
+                pass
+            if reqs and (len(reqs) >= B or
+                         time.monotonic() - t_first >= t_max):
+                return reqs
+        return reqs
+
+    def _run(self) -> None:
+        try:
+            self._run_inner()
+        except Exception:   # noqa: BLE001 — surface worker crashes
+            import traceback
+            traceback.print_exc()
+            raise
+
+    def _run_inner(self) -> None:
+        params, version = None, -1
+        while not self._stop.is_set():
+            # drain protocol: no NEW batch while the trainer is publishing
+            if self.store.draining or params is None:
+                got = self.store.acquire(newer_than=version, timeout=0.1)
+                if got is not None:
+                    params, version = got
+                    self.weight_swaps += 1
+                if params is None:
+                    continue
+            reqs = self._collect_window()
+            if not reqs:
+                continue
+            t0 = time.monotonic()
+            n = len(reqs)
+            nb = pad_to_bucket(n, self.rt.batch_buckets)
+            self.padded_slots += nb - n
+            obs = np.stack([r.obs_tokens for r in reqs] +
+                           [reqs[-1].obs_tokens] * (nb - n))
+            steps = np.array([r.step for r in reqs] +
+                             [reqs[-1].step] * (nb - n), np.int32)
+            prefix = None
+            if reqs[0].frame is not None:
+                fr = np.stack([r.frame for r in reqs] +
+                              [reqs[-1].frame] * (nb - n))
+                prefix = _frame_to_prefix(fr)
+            tokens, logps, values = self._fn(params, self._next_key(),
+                                             obs, steps, prefix)
+            tokens, logps, values = (np.asarray(tokens), np.asarray(logps),
+                                     np.asarray(values))
+            for i, r in enumerate(reqs):
+                r.future.set_result({
+                    "actions": tokens[i], "logp": logps[i],
+                    "value": float(values[i]), "policy_version": version,
+                })
+            self.batches_run += 1
+            self.requests_served += n
+            self.busy_s += time.monotonic() - t0
+
+    # -- metrics --------------------------------------------------------------
+    def utilization(self) -> float:
+        if not self.started_at:
+            return 0.0
+        wall = time.monotonic() - self.started_at
+        return self.busy_s / max(wall, 1e-9)
+
+
+def _frame_to_prefix(frames: np.ndarray) -> np.ndarray:
+    """[B, F_env] env frame -> [B, 1, FRONTEND_DIM] stub frontend embedding
+    (zero-padded — the allowed modality-frontend carve-out)."""
+    b, f = frames.shape
+    out = np.zeros((b, 1, FRONTEND_DIM), np.float32)
+    out[:, 0, :min(f, FRONTEND_DIM)] = frames[:, :FRONTEND_DIM]
+    return out

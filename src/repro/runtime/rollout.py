@@ -1,0 +1,183 @@
+"""Rollout workers (paper §3.1–3.2).
+
+Each worker owns ONE (non-vectorized) environment instance — the paper's
+"no natural batchability" regime — and loops:
+
+    obs → async inference request → suspend → env.step(actions)
+
+Completed episodes are packaged per eq. 2 as
+τ = (o_{1:T+1}, a_{1:T}, r_{1:T}, μ_{1:T}, v_{1:T}, ṽ_{T+1}, done) and
+sliced into fixed-horizon segments streamed to the FIFO buffer — rollouts
+are *interruptible*: segments of an unfinished episode ship immediately
+with a bootstrap value, so the trainer never waits for long episodes
+(episode-level long-tail removal).
+
+Task selection uses Dynamic Weighted Resampling (App. D.4).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.resampler import DynamicWeightedResampler
+from repro.data.replay import FIFOReplayBuffer
+from repro.envs.toy_manipulation import ManipulationEnv
+
+
+def episode_to_segments(traj: Dict[str, np.ndarray], horizon: int
+                        ) -> List[Dict[str, np.ndarray]]:
+    """Slice an episode (T steps) into fixed-``horizon`` segments with a
+    T+1 bootstrap slot each; ragged tails are padded and masked."""
+    t = len(traj["rewards"])
+    segs = []
+    for s0 in range(0, t, horizon):
+        s1 = min(s0 + horizon, t)
+        n = s1 - s0
+        pad = horizon - n
+
+        def pad_steps(x, fill=0):
+            x = np.asarray(x[s0:s1])
+            if pad:
+                x = np.concatenate(
+                    [x, np.full((pad,) + x.shape[1:], fill, x.dtype)])
+            return x
+
+        # T+1 slot: the observation after the last step of the segment
+        def with_bootstrap(x):
+            x = np.asarray(x[s0:s1 + 1])
+            need = horizon + 1 - len(x)
+            if need:
+                x = np.concatenate(
+                    [x, np.repeat(x[-1:], need, axis=0)])
+            return x
+
+        segs.append({
+            "obs_tokens": with_bootstrap(traj["obs_tokens"]),
+            "frames": with_bootstrap(traj["frames"]),
+            "actions": with_bootstrap(traj["actions"]),
+            "behavior_logp": with_bootstrap(traj["behavior_logp"]),
+            "behavior_value": with_bootstrap(traj["values"]),
+            "rewards": pad_steps(traj["rewards"]),
+            "dones": pad_steps(traj["dones"]),
+            "steps": with_bootstrap(traj["steps"]),
+            "mask": np.concatenate(
+                [np.ones(n, np.float32), np.zeros(pad, np.float32)]),
+            "policy_version": np.int32(traj["policy_version"]),
+            "task_id": np.int32(traj["task_id"]),
+            "success": np.float32(traj["success"]),
+        })
+    return segs
+
+
+class RolloutWorker:
+    def __init__(self, worker_id: int, cfg: ModelConfig,
+                 inference, buffer: FIFOReplayBuffer, *,
+                 suite: str = "spatial",
+                 resampler: Optional[DynamicWeightedResampler] = None,
+                 segment_horizon: int = 8,
+                 max_steps: int = 30,
+                 latency=None, seed: int = 0,
+                 frame_buffer=None):
+        self.worker_id = worker_id
+        self.cfg = cfg
+        self.inference = inference
+        self.buffer = buffer
+        self.resampler = resampler
+        self.segment_horizon = segment_horizon
+        self.frame_buffer = frame_buffer      # optional B_wm feed (real frames)
+        self.env = ManipulationEnv(
+            suite=suite, task_id=0, max_steps=max_steps,
+            action_vocab=cfg.action_vocab_size, action_dim=cfg.action_dim,
+            latency=latency, seed=seed)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"rollout-{worker_id}")
+        self.episodes_done = 0
+        self.env_steps = 0
+        self.successes = 0
+        self.returns: List[float] = []
+
+    def start(self) -> "RolloutWorker":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def join(self, timeout: float = 5.0) -> None:
+        self._thread.join(timeout=timeout)
+
+    # -- episode loop -----------------------------------------------------------
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            task = (self.resampler.sample_task()
+                    if self.resampler is not None else 0)
+            self._episode(task)
+
+    def _episode(self, task_id: int) -> None:
+        obs = self.env.reset(task_id)
+        traj = {k: [] for k in ("obs_tokens", "frames", "actions",
+                                "behavior_logp", "values", "rewards",
+                                "dones", "steps")}
+        version = -1
+        ep_return, success = 0.0, False
+        done = False
+        while not done and not self._stop.is_set():
+            fut = self.inference.submit(obs["tokens"], obs["frame"],
+                                        obs["step"])
+            try:
+                res = fut.result(timeout=30.0)
+            except Exception:
+                return
+            traj["obs_tokens"].append(obs["tokens"])
+            traj["frames"].append(obs["frame"])
+            traj["steps"].append(obs["step"])
+            traj["actions"].append(res["actions"])
+            traj["behavior_logp"].append(res["logp"])
+            traj["values"].append(res["value"])
+            version = res["policy_version"]
+            obs, reward, done, info = self.env.step(res["actions"])
+            traj["rewards"].append(reward)
+            # natural termination only (truncation bootstraps, App. C.1)
+            traj["dones"].append(float(done and not info["truncated"]))
+            ep_return += reward
+            success = success or info["success"]
+            self.env_steps += 1
+        if self._stop.is_set() and not done:
+            return
+        # bootstrap slot o_{T+1}
+        traj["obs_tokens"].append(obs["tokens"])
+        traj["frames"].append(obs["frame"])
+        traj["steps"].append(obs["step"])
+        traj["actions"].append(np.zeros(self.cfg.action_dim, np.int32))
+        traj["behavior_logp"].append(np.zeros(self.cfg.action_dim,
+                                              np.float32))
+        traj["values"].append(0.0)
+        traj["policy_version"] = version
+        traj["task_id"] = task_id
+        traj["success"] = float(success)
+
+        for seg in episode_to_segments(traj, self.segment_horizon):
+            self.buffer.push(seg)
+        if self.frame_buffer is not None:
+            for i in range(len(traj["rewards"])):
+                self.frame_buffer.push({
+                    "frame": traj["frames"][i],
+                    "next_frame": traj["frames"][i + 1],
+                    "tokens": traj["obs_tokens"][i],
+                    "step": np.int32(traj["steps"][i]),
+                    "actions": traj["actions"][i],
+                    "reward": traj["rewards"][i],
+                    "success": np.float32(
+                        traj["success"] if i == len(traj["rewards"]) - 1
+                        else 0.0),
+                })
+        self.episodes_done += 1
+        self.successes += int(success)
+        self.returns.append(ep_return)
+        if self.resampler is not None:
+            self.resampler.update_history(task_id, float(success))

@@ -1,0 +1,129 @@
+"""Trainer worker (paper §3.1, App. C/D).
+
+Continuously pops prefetched super-batches from the FIFO buffer (never
+waiting on rollouts — macro-asynchrony), runs the GIPO + JIT-GAE train
+step, and publishes versioned weights through the store with the drain
+protocol. ``weight_sync_interval`` throttles publishes ("broadcast only
+when an actual update occurs").
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, RLConfig, RuntimeConfig
+from repro.core.train_step import TrainState, init_train_state, make_train_step
+from repro.data.prefetch import Prefetcher
+from repro.data.replay import FIFOReplayBuffer
+from repro.data.trajectory import TrajectoryBatch
+from repro.models.transformer import FRONTEND_DIM
+from repro.runtime.weight_store import VersionedWeightStore
+
+
+def collate_segments(segments: List[Dict[str, np.ndarray]]) -> TrajectoryBatch:
+    """Stack rollout segments into a TrajectoryBatch (prefetcher thread)."""
+    stack = lambda k: np.stack([s[k] for s in segments])
+    frames = stack("frames")                        # [B, T+1, F_env]
+    b, tp1, f = frames.shape
+    prefix = np.zeros((b, tp1, 1, FRONTEND_DIM), np.float32)
+    prefix[..., 0, :min(f, FRONTEND_DIM)] = frames[..., :FRONTEND_DIM]
+    return TrajectoryBatch(
+        obs_tokens=stack("obs_tokens").astype(np.int32),
+        actions=stack("actions").astype(np.int32),
+        behavior_logp=stack("behavior_logp").astype(np.float32),
+        behavior_value=stack("behavior_value").astype(np.float32),
+        rewards=stack("rewards").astype(np.float32),
+        dones=stack("dones").astype(np.float32),
+        steps=stack("steps").astype(np.int32),
+        mask=stack("mask").astype(np.float32),
+        policy_version=stack("policy_version").astype(np.int32),
+        prefix_embeds=prefix,
+    )
+
+
+class TrainerWorker:
+    def __init__(self, cfg: ModelConfig, rl: RLConfig, rt: RuntimeConfig,
+                 buffer: FIFOReplayBuffer, store: VersionedWeightStore, *,
+                 batch_episodes: int = 8, seed: int = 0,
+                 checkpoint_dir=None, checkpoint_interval: int = 0):
+        import jax
+        self.cfg, self.rl, self.rt = cfg, rl, rt
+        self.buffer = buffer
+        self.store = store
+        self.state: TrainState = init_train_state(
+            cfg, jax.random.PRNGKey(seed))
+        self._step_fn = make_train_step(cfg, rl, donate=False)
+        self.prefetcher = Prefetcher(buffer, batch_episodes,
+                                     collate_segments,
+                                     depth=rt.prefetch_depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="trainer")
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_interval = checkpoint_interval
+        self.steps_done = 0
+        self.samples_seen = 0
+        self.busy_s = 0.0
+        self.started_at: Optional[float] = None
+        self.metrics_log: List[Dict] = []
+        self.policy_lag: List[float] = []
+
+    # -- lifecycle -------------------------------------------------------------
+    def start(self) -> "TrainerWorker":
+        self.started_at = time.monotonic()
+        # version 0 published so inference can begin before the first step
+        self.store.publish(self.state.params, 0)
+        self.prefetcher.start()
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        self.prefetcher.stop()
+        self._thread.join(timeout=10.0)
+
+    # -- loop -------------------------------------------------------------------
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            batch = self.prefetcher.get(timeout=0.2)
+            if batch is None:
+                continue
+            self.train_on_batch(batch)
+
+    def train_on_batch(self, batch: TrajectoryBatch) -> Dict:
+        t0 = time.monotonic()
+        version = int(self.state.version)
+        lag = version - float(np.mean(batch.policy_version))
+        self.policy_lag.append(lag)
+        self.state, metrics = self._step_fn(self.state, batch)
+        self.steps_done += 1
+        self.samples_seen += int(np.asarray(batch.mask).sum())
+        if self.steps_done % self.rt.weight_sync_interval == 0:
+            if self.rt.drain:
+                self.store.begin_publish()     # drain signal, App. D.6
+            self.store.publish(self.state.params, version + 1)
+        if (self.checkpoint_dir and self.checkpoint_interval
+                and self.steps_done % self.checkpoint_interval == 0):
+            from repro.data import checkpoint
+            checkpoint.save(self.checkpoint_dir, self.steps_done,
+                            self.state)
+        self.busy_s += time.monotonic() - t0
+        out = {k: float(v) for k, v in metrics.items()}
+        out["policy_lag"] = lag
+        self.metrics_log.append(out)
+        return out
+
+    # -- metrics -----------------------------------------------------------------
+    def utilization(self) -> float:
+        if not self.started_at:
+            return 0.0
+        return self.busy_s / max(time.monotonic() - self.started_at, 1e-9)
+
+    def sps(self) -> float:
+        if not self.started_at:
+            return 0.0
+        return self.samples_seen / max(
+            time.monotonic() - self.started_at, 1e-9)

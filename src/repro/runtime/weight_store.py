@@ -1,0 +1,136 @@
+"""Versioned weight store with the inference-drain protocol (App. D.6).
+
+The paper's NCCL broadcast + drain maps to a publish/acquire channel:
+
+  * ``begin_publish()`` — the trainer's *drain signal*, sent before the
+    optimizer step finishes. Inference workers stop scheduling new batches,
+    finish in-flight computation, and park at ``wait_weights()``.
+  * ``publish(params, version)`` — the broadcast: an atomic in-place swap of
+    the weight reference (on real pods: an ICI device-to-device transfer
+    onto the inference mesh slice).
+  * ``acquire()`` — inference side: newest (params, version).
+
+Three transports reproduce Table 8's comparison:
+  * :class:`DirectTransport`      — in-memory reference swap (NCCL analogue)
+  * :class:`SerializedTransport`  — full serialize→deserialize round-trip
+    (PCIe / host-mediated analogue)
+  * :class:`DiskTransport`        — checkpoint write + poll + reload
+    (shared-storage / AReaL analogue)
+"""
+from __future__ import annotations
+
+import io
+import pathlib
+import pickle
+import tempfile
+import threading
+import time
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+
+class DirectTransport:
+    """Reference handoff — the NCCL-broadcast analogue."""
+
+    name = "nccl_direct"
+
+    def send(self, params: Any) -> Any:
+        return params
+
+    def recv(self, payload: Any) -> Any:
+        return payload
+
+
+class SerializedTransport:
+    """Full host-side serialize/deserialize — the PCIe/host-mediated path."""
+
+    name = "host_serialized"
+
+    def send(self, params: Any) -> bytes:
+        import jax
+        host = jax.tree.map(np.asarray, params)
+        return pickle.dumps(host, protocol=pickle.HIGHEST_PROTOCOL)
+
+    def recv(self, payload: bytes) -> Any:
+        return pickle.loads(payload)
+
+
+class DiskTransport:
+    """Checkpoint to shared storage + reload — the AReaL-style path."""
+
+    name = "shared_storage"
+
+    def __init__(self, directory: Optional[str] = None):
+        self._dir = pathlib.Path(directory or tempfile.mkdtemp(
+            prefix="accerl_ckpt_"))
+        self._dir.mkdir(parents=True, exist_ok=True)
+
+    def send(self, params: Any) -> str:
+        import jax
+        host = jax.tree.map(np.asarray, params)
+        leaves, treedef = jax.tree.flatten(host)
+        buf = io.BytesIO()
+        np.savez(buf, *leaves)
+        path = self._dir / f"ckpt_{time.time_ns()}.npz"
+        tmp = path.with_suffix(".tmp")
+        tmp.write_bytes(buf.getvalue())
+        tmp.rename(path)                      # atomic publish
+        self._treedef = treedef
+        return str(path)
+
+    def recv(self, payload: str) -> Any:
+        import jax
+        with np.load(payload) as z:
+            leaves = [z[k] for k in z.files]
+        return jax.tree.unflatten(self._treedef, leaves)
+
+
+class VersionedWeightStore:
+    """Thread-safe publish/acquire channel between trainer and inference."""
+
+    def __init__(self, transport=None):
+        self.transport = transport or DirectTransport()
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._payload = None
+        self._version = -1
+        self._draining = False
+        self.publishes = 0
+        self.last_sync_latency_s = 0.0
+
+    # -- trainer side --------------------------------------------------------
+    def begin_publish(self) -> None:
+        """Drain signal: sent before the optimizer step completes."""
+        with self._lock:
+            self._draining = True
+
+    def publish(self, params: Any, version: int) -> None:
+        t0 = time.monotonic()
+        payload = self.transport.send(params)
+        with self._cv:
+            self._payload = payload
+            self._version = version
+            self._draining = False
+            self.publishes += 1
+            self.last_sync_latency_s = time.monotonic() - t0
+            self._cv.notify_all()
+
+    # -- inference side ------------------------------------------------------
+    @property
+    def draining(self) -> bool:
+        with self._lock:
+            return self._draining
+
+    def version(self) -> int:
+        with self._lock:
+            return self._version
+
+    def acquire(self, newer_than: int = -1,
+                timeout: Optional[float] = None) -> Optional[Tuple[Any, int]]:
+        """Newest (params, version); blocks until version > ``newer_than``."""
+        with self._cv:
+            if not self._cv.wait_for(
+                    lambda: self._version > newer_than, timeout=timeout):
+                return None
+            return self.transport.recv(self._payload), self._version

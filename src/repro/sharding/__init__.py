@@ -1,0 +1,9 @@
+"""Partition rules mapping every architecture family onto the production
+mesh (DESIGN.md §5)."""
+from repro.sharding import rules  # noqa: F401
+from repro.sharding.rules import (  # noqa: F401
+    batch_axes,
+    cache_specs,
+    data_spec,
+    param_specs,
+)

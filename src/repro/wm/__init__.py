@@ -1,0 +1,20 @@
+"""The plug-and-play pixel-interface world model (paper §4).
+
+``M_obs`` is a DIAMOND-style EDM diffusion next-frame predictor; ``M_reward``
+is a success-probability classifier; ``imagination`` runs the horizon-H
+alternating rollout with potential-based rewards (eq. 4); ``wm_system``
+wires them into the asynchronous pipeline with the three decoupled trainer
+loops of §4.2."""
+from repro.wm.denoiser import (  # noqa: F401
+    denoiser_init,
+    denoiser_apply,
+    denoiser_loss,
+    sample_next_frame,
+)
+from repro.wm.reward import (  # noqa: F401
+    reward_init,
+    reward_apply,
+    reward_loss,
+)
+from repro.wm.imagination import ImaginationWorker, imagine_segment  # noqa: F401
+from repro.wm.wm_system import AcceRLWMSystem  # noqa: F401

@@ -1,0 +1,57 @@
+"""M_reward — the "virtual referee" (paper §4): a binary success classifier
+over (stacked) frames, regressed on real (o_t, success_t) pairs from B_wm
+every ``reward_train_interval`` steps. Its success probability drives both
+the potential-based imagined reward (eq. 4) and the imagined termination
+signal."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+
+
+def reward_init(key, frame_dim: int, hidden: int = 128) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, (frame_dim, hidden), jnp.float32),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": dense_init(k2, (hidden, hidden), jnp.float32),
+        "b2": jnp.zeros((hidden,), jnp.float32),
+        "w3": dense_init(k3, (hidden, 1), jnp.float32),
+        "b3": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def reward_logit(params: Params, frames: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(frames @ params["w1"] + params["b1"])
+    h = jax.nn.silu(h @ params["w2"] + params["b2"])
+    return (h @ params["w3"] + params["b3"])[..., 0]
+
+
+def reward_apply(params: Params, frames: jnp.ndarray) -> jnp.ndarray:
+    """Success probability M_reward(o) ∈ (0, 1). frames: [B, F] -> [B]."""
+    return jax.nn.sigmoid(reward_logit(params, frames))
+
+
+def reward_loss(params: Params, frames: jnp.ndarray,
+                success: jnp.ndarray) -> jnp.ndarray:
+    """Binary cross-entropy on real success labels."""
+    logit = reward_logit(params, frames)
+    return jnp.mean(
+        jnp.maximum(logit, 0) - logit * success
+        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+def make_reward_train_step(lr: float = 1e-4):
+    from repro.optim import adamw
+
+    def step(params, opt, frames, success):
+        loss, grads = jax.value_and_grad(reward_loss)(params, frames,
+                                                      success)
+        new_params, new_opt, _ = adamw.update(grads, opt, params,
+                                              jnp.asarray(lr))
+        return new_params, new_opt, loss
+    return jax.jit(step)

@@ -1,0 +1,191 @@
+"""AcceRL-WM: the world-model-augmented mode (paper §4, Fig. 2b).
+
+Extends the asynchronous pipeline with:
+  * B_wm — real transitions feeding WM training (collected by the same
+    rollout workers via the alternating strategy),
+  * B_img — imagined τ̂ segments from :class:`ImaginationWorker`s,
+  * three decoupled trainer loops (§4.2): M_policy continuously on B_img;
+    M_obs every ``obs_train_interval`` cycles on B_wm; M_reward every
+    ``reward_train_interval`` steps on B_wm,
+  * ``pretrain_world_model`` — the paper's offline WM pre-training on
+    oracle trajectories (1,000 offline trajectories in Fig. 4b).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, RLConfig, RuntimeConfig, WMConfig
+from repro.data.replay import FIFOReplayBuffer, RingReplayBuffer
+from repro.envs.toy_manipulation import FRAME_DIM, ManipulationEnv
+from repro.optim import adamw
+from repro.runtime.orchestrator import AcceRLSystem
+from repro.runtime.trainer import TrainerWorker
+from repro.wm import denoiser as dn
+from repro.wm import reward as rw
+from repro.wm.imagination import ImaginationWorker
+
+
+def pretrain_world_model(suite: str, wm: WMConfig, *, trajectories: int = 100,
+                         train_steps: int = 300, batch: int = 64,
+                         action_vocab: int = 64, action_dim: int = 7,
+                         max_steps: int = 30, seed: int = 0) -> Dict:
+    """Collect oracle (out-of-distribution) trajectories offline and
+    pre-train M_obs + M_reward — the paper's 1,000-trajectory setup."""
+    env = ManipulationEnv(suite=suite, action_vocab=action_vocab,
+                          action_dim=action_dim, max_steps=max_steps,
+                          seed=seed)
+    transitions = []
+    rng = np.random.default_rng(seed)
+    for ep in range(trajectories):
+        obs = env.reset(int(rng.integers(0, 10)))
+        done = False
+        frames, actions, successes = [obs["frame"]], [], []
+        while not done:
+            a = env.oracle_action()
+            obs, r, done, info = env.step(a)
+            frames.append(obs["frame"])
+            actions.append(a)
+            successes.append(float(info["success"]))
+        for i in range(len(actions)):
+            transitions.append((frames[i], actions[i], frames[i + 1],
+                                successes[i]))
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    obs_params = dn.denoiser_init(k1, FRAME_DIM, action_dim, action_vocab,
+                                  wm)
+    rew_params = rw.reward_init(k2, FRAME_DIM)
+    obs_opt = adamw.init(obs_params)
+    rew_opt = adamw.init(rew_params)
+    dn_step = dn.make_denoiser_train_step(wm)
+    rw_step = rw.make_reward_train_step()
+
+    n = len(transitions)
+    f0 = np.stack([t[0] for t in transitions])
+    ac = np.stack([t[1] for t in transitions])
+    f1 = np.stack([t[2] for t in transitions])
+    sc = np.array([t[3] for t in transitions], np.float32)
+    losses = {"obs": [], "reward": []}
+    for step in range(train_steps):
+        idx = rng.integers(0, n, batch)
+        hist = np.repeat(f0[idx][:, None], wm.history_frames, axis=1)
+        k3, sub = jax.random.split(k3)
+        obs_params, obs_opt, l_obs = dn_step(obs_params, obs_opt, sub,
+                                             f1[idx], hist, ac[idx])
+        rew_params, rew_opt, l_rew = rw_step(rew_params, rew_opt, f1[idx],
+                                             sc[idx])
+        losses["obs"].append(float(l_obs))
+        losses["reward"].append(float(l_rew))
+    return {"obs": obs_params, "reward": rew_params,
+            "obs_opt": obs_opt, "reward_opt": rew_opt,
+            "losses": losses, "transitions": n}
+
+
+class AcceRLWMSystem(AcceRLSystem):
+    """World-model-augmented asynchronous system."""
+
+    def __init__(self, cfg: ModelConfig, rl: RLConfig, rt: RuntimeConfig,
+                 wm: WMConfig, *, wm_params: Optional[Dict] = None,
+                 num_imagination_workers: int = 1,
+                 imagination_batch: int = 16, seed: int = 0, **kw):
+        super().__init__(cfg, rl, rt, collect_frames=True, seed=seed, **kw)
+        self.wm = wm
+        self.img_buffer = FIFOReplayBuffer(rt.img_replay_capacity)
+        key = jax.random.PRNGKey(seed + 99)
+        k1, k2 = jax.random.split(key)
+        if wm_params is None:
+            wm_params = {
+                "obs": dn.denoiser_init(k1, FRAME_DIM, self.cfg.action_dim,
+                                        self.cfg.action_vocab_size, wm),
+                "reward": rw.reward_init(k2, FRAME_DIM),
+            }
+        # shared mutable reference — imagination workers read the newest
+        # WM weights ("broadcast to the Inference Pool only on update")
+        self.wm_params = {"obs": wm_params["obs"],
+                          "reward": wm_params["reward"]}
+        self._obs_opt = wm_params.get("obs_opt") or adamw.init(
+            self.wm_params["obs"])
+        self._rew_opt = wm_params.get("reward_opt") or adamw.init(
+            self.wm_params["reward"])
+        self._dn_step = dn.make_denoiser_train_step(wm)
+        self._rw_step = rw.make_reward_train_step()
+        # the WM-mode policy trainer consumes B_img
+        self.img_trainer = TrainerWorker(self.cfg, rl, rt, self.img_buffer,
+                                         self.store,
+                                         batch_episodes=imagination_batch,
+                                         seed=seed)
+        self.imaginers = [
+            ImaginationWorker(i, self.cfg, wm, self.store, self.wm_params,
+                              self.frame_buffer, self.img_buffer,
+                              batch=imagination_batch, seed=seed + i)
+            for i in range(num_imagination_workers)
+        ]
+        self._wm_stop = threading.Event()
+        self._wm_thread = threading.Thread(target=self._wm_train_loop,
+                                           daemon=True, name="wm-trainer")
+        self._key = jax.random.PRNGKey(seed + 1234)
+        self.wm_updates = {"obs": 0, "reward": 0}
+
+    # -- the M_obs / M_reward trainer loops (§4.2) ----------------------------
+    def _wm_train_loop(self) -> None:
+        cycle = 0
+        while not self._wm_stop.is_set():
+            batch = self.frame_buffer.sample(32)
+            if batch is None:
+                time.sleep(0.05)
+                continue
+            cycle += 1
+            f1 = np.stack([b["next_frame"] for b in batch]).astype(np.float32)
+            f0 = np.stack([b["frame"] for b in batch]).astype(np.float32)
+            ac = np.stack([b["actions"] for b in batch])
+            sc = np.array([b["success"] for b in batch], np.float32)
+            if cycle % self.wm.obs_train_interval == 0:
+                hist = np.repeat(f0[:, None], self.wm.history_frames, axis=1)
+                self._key, sub = jax.random.split(self._key)
+                self.wm_params["obs"], self._obs_opt, _ = self._dn_step(
+                    self.wm_params["obs"], self._obs_opt, sub, f1, hist, ac)
+                self.wm_updates["obs"] += 1
+            if cycle % self.wm.reward_train_interval == 0:
+                self.wm_params["reward"], self._rew_opt, _ = self._rw_step(
+                    self.wm_params["reward"], self._rew_opt, f1, sc)
+                self.wm_updates["reward"] += 1
+            time.sleep(0.001)
+
+    # -- run --------------------------------------------------------------------
+    def run_wm(self, *, train_steps: int,
+               wall_timeout_s: float = 300.0) -> Dict:
+        """Alternating real rollout + imagination, three trainer loops."""
+        t0 = time.monotonic()
+        self.inference.start()
+        self.img_trainer.start()
+        self._wm_thread.start()
+        for w in self.workers:
+            w.start()
+        for im in self.imaginers:
+            im.start()
+        try:
+            while (self.img_trainer.steps_done < train_steps
+                   and time.monotonic() - t0 < wall_timeout_s):
+                time.sleep(0.02)
+        finally:
+            for w in self.workers:
+                w.stop()
+            for im in self.imaginers:
+                im.stop()
+            self._wm_stop.set()
+            self.img_trainer.stop()
+            self.inference.stop()
+            for w in self.workers:
+                w.join()
+            for im in self.imaginers:
+                im.join()
+        m = self.metrics(time.monotonic() - t0)
+        m["imagined_steps"] = sum(im.imagined_steps for im in self.imaginers)
+        m["img_train_steps"] = self.img_trainer.steps_done
+        m["wm_updates"] = dict(self.wm_updates)
+        m["real_env_steps"] = m["env_steps"]
+        return m

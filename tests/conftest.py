@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches see the single real CPU device; ONLY the dry-run
+# driver (repro.launch.dryrun) forces 512 placeholder devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,53 @@
+"""Checkpoint subsystem: save/restore round-trip, atomicity, pruning,
+latest-step resolution, and dtype-preserving restore into templates."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.train_step import init_train_state
+from repro.data import checkpoint
+
+
+@pytest.fixture()
+def state():
+    cfg = reduced(get_config("internlm2-1.8b"), layers=2, d_model=64)
+    return init_train_state(cfg, jax.random.PRNGKey(0))
+
+
+def test_roundtrip(tmp_path, state):
+    checkpoint.save(tmp_path, 7, state)
+    restored = checkpoint.restore(tmp_path, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_latest_and_prune(tmp_path, state):
+    for step in (1, 5, 3, 9, 12):
+        checkpoint.save(tmp_path, step, state, keep=3)
+    assert checkpoint.latest_step(tmp_path) == 12
+    kept = sorted(pathlib.Path(tmp_path).glob("ckpt_*.npz"))
+    assert len(kept) == 3
+    restored = checkpoint.restore(tmp_path, state, step=9)
+    assert int(restored.opt.step) == int(state.opt.step)
+
+
+def test_restore_into_struct_template(tmp_path, state):
+    """Restore works against a ShapeDtypeStruct template (cold start)."""
+    checkpoint.save(tmp_path, 1, state)
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored = checkpoint.restore(tmp_path, template)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_missing_raises(tmp_path, state):
+    with pytest.raises(FileNotFoundError):
+        checkpoint.restore(tmp_path, state)

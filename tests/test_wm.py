@@ -1,0 +1,167 @@
+"""World-model tests: EDM denoiser training/sampling, the reward model,
+potential-based imagined rewards (eq. 4), horizon capping (eq. 3), and the
+imagination pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.configs.base import WMConfig
+from repro.envs.toy_manipulation import FRAME_DIM
+from repro.wm import denoiser as dn
+from repro.wm import reward as rw
+from repro.wm.imagination import imagine_rollout
+
+settings.register_profile("wm", deadline=None, max_examples=15)
+settings.load_profile("wm")
+
+WM = WMConfig(imagine_horizon=3, history_frames=2, diffusion_steps=4)
+KEY = jax.random.PRNGKey(0)
+
+
+def _denoiser(frame_dim=16, action_dim=3, action_vocab=8):
+    return dn.denoiser_init(KEY, frame_dim, action_dim, action_vocab, WM)
+
+
+# ---------------------------------------------------------------------------
+# EDM denoiser
+# ---------------------------------------------------------------------------
+
+def test_edm_preconditioning_identity_at_zero_noise():
+    """As σ → 0: c_skip → 1, c_out → 0, so D(x; σ) → x."""
+    p = _denoiser()
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 16)),
+                    jnp.float32)
+    hist = jnp.zeros((2, 2, 16))
+    acts = jnp.zeros((2, 3), jnp.int32)
+    d = dn.denoiser_apply(p, x, jnp.full((2,), 1e-6), hist, acts,
+                          sigma_data=0.5)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(x), atol=1e-3)
+
+
+@given(seed=st.integers(0, 50))
+def test_edm_loss_finite_positive(seed):
+    p = _denoiser()
+    rng = np.random.default_rng(seed)
+    frames = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+    hist = jnp.asarray(rng.standard_normal((4, 2, 16)), jnp.float32)
+    acts = jnp.asarray(rng.integers(0, 8, (4, 3)), jnp.int32)
+    loss = dn.denoiser_loss(p, jax.random.PRNGKey(seed), frames, hist,
+                            acts, WM)
+    assert np.isfinite(float(loss)) and float(loss) >= 0.0
+
+
+def test_karras_schedule_monotone():
+    s = np.asarray(dn.karras_schedule(8))
+    assert s[0] == pytest.approx(dn.SIGMA_MAX, rel=1e-4)
+    assert s[-1] == 0.0
+    assert np.all(np.diff(s) < 0)
+
+
+def test_denoiser_training_reduces_loss():
+    p = _denoiser()
+    from repro.optim import adamw
+    opt = adamw.init(p)
+    step = dn.make_denoiser_train_step(WM, lr=1e-3)
+    rng = np.random.default_rng(0)
+    frames = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    hist = jnp.asarray(np.repeat(frames[:, None], 2, 1))
+    acts = jnp.zeros((32, 3), jnp.int32)
+    first = last = None
+    key = jax.random.PRNGKey(1)
+    for i in range(40):
+        key, sub = jax.random.split(key)
+        p, opt, loss = step(p, opt, sub, frames, hist, acts)
+        first = first if first is not None else float(loss)
+        last = float(loss)
+    assert last < first
+
+
+def test_sampler_shape_and_finite():
+    p = _denoiser()
+    hist = jnp.zeros((3, 2, 16))
+    acts = jnp.zeros((3, 3), jnp.int32)
+    out = dn.sample_next_frame(p, KEY, hist, acts, WM)
+    assert out.shape == (3, 16)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ---------------------------------------------------------------------------
+# reward model
+# ---------------------------------------------------------------------------
+
+def test_reward_probability_range():
+    p = rw.reward_init(KEY, 16)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((5, 16)) * 10,
+                    jnp.float32)
+    prob = rw.reward_apply(p, x)
+    assert np.all((np.asarray(prob) > 0) & (np.asarray(prob) < 1))
+
+
+def test_reward_learns_separable_labels():
+    p = rw.reward_init(KEY, 8)
+    from repro.optim import adamw
+    opt = adamw.init(p)
+    step = rw.make_reward_train_step(lr=5e-3)
+    rng = np.random.default_rng(0)
+    pos = rng.standard_normal((64, 8)).astype(np.float32) + 3
+    neg = rng.standard_normal((64, 8)).astype(np.float32) - 3
+    frames = np.concatenate([pos, neg])
+    labels = np.concatenate([np.ones(64), np.zeros(64)]).astype(np.float32)
+    for _ in range(60):
+        p, opt, loss = step(p, opt, frames, labels)
+    probs = np.asarray(rw.reward_apply(p, jnp.asarray(frames)))
+    assert probs[:64].mean() > 0.8 and probs[64:].mean() < 0.2
+
+
+# ---------------------------------------------------------------------------
+# imagination (eqs. 3–4)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def imag_setup():
+    import dataclasses
+    cfg = reduced(get_config("deepseek-7b"), layers=2, d_model=64)
+    cfg = dataclasses.replace(cfg, num_prefix_tokens=1)
+    from repro.models.policy import init_policy_params
+    policy = init_policy_params(cfg, KEY)
+    obs_p = dn.denoiser_init(KEY, FRAME_DIM, cfg.action_dim,
+                             cfg.action_vocab_size, WM)
+    rew_p = rw.reward_init(KEY, FRAME_DIM)
+    return cfg, policy, obs_p, rew_p
+
+
+def test_imagination_shapes_and_horizon_cap(imag_setup):
+    cfg, policy, obs_p, rew_p = imag_setup
+    b = 2
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 12)), jnp.int32)
+    frame0 = jnp.asarray(rng.random((b, FRAME_DIM)), jnp.float32)
+    out = imagine_rollout(policy, obs_p, rew_p, KEY, tokens, frame0,
+                          jnp.zeros((b,), jnp.int32), cfg=cfg, wm=WM)
+    h = WM.imagine_horizon
+    assert out["frames"].shape == (b, h + 1, FRAME_DIM)      # eq. 3: H+1
+    assert out["rewards"].shape == (b, h)                    # strictly H
+    assert out["actions"].shape == (b, h + 1, cfg.action_dim)
+    assert np.isfinite(np.asarray(out["rewards"])).all()
+    # seeded from the REAL frame: ô_t = o_t
+    np.testing.assert_allclose(np.asarray(out["frames"][:, 0]),
+                               np.asarray(frame0))
+
+
+def test_potential_reward_telescopes(imag_setup):
+    """Σ r̂ = scale·(M_r(ô_H) − M_r(ô_0)) — eq. 4 preserves policy
+    invariance by telescoping."""
+    cfg, policy, obs_p, rew_p = imag_setup
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 12)), jnp.int32)
+    frame0 = jnp.asarray(rng.random((1, FRAME_DIM)), jnp.float32)
+    out = imagine_rollout(policy, obs_p, rew_p, KEY, tokens, frame0,
+                          jnp.zeros((1,), jnp.int32), cfg=cfg, wm=WM)
+    total = float(np.asarray(out["rewards"]).sum())
+    p_first = float(rw.reward_apply(rew_p, out["frames"][:, 0])[0])
+    p_last = float(rw.reward_apply(rew_p, out["frames"][:, -1])[0])
+    assert total == pytest.approx(WM.reward_scale * (p_last - p_first),
+                                  abs=1e-3)
