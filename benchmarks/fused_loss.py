@@ -1,0 +1,110 @@
+"""Fused GIPO loss path vs the unfused reference (hot-path perf start).
+
+Measures ``jax.value_and_grad`` wall time of the trainer's policy-loss tail
+(action head + GIPO surrogate + entropy + KL) two ways:
+
+  * reference — materializes the [N, V] logits and their log-softmax and
+    walks them per term (what ``loss_fn`` did before ``rl.fused_loss``);
+  * fused     — ``repro.kernels.dispatch.policy_head_loss``: token blocks
+    streamed through the custom-VJP Pallas kernel on TPU, the checkpointed
+    jnp block-scan twin elsewhere. No [N, V] intermediate in HBM.
+
+The peak-memory proxy is the largest live loss-path intermediate in bytes:
+N·V·4 for the reference log-softmax vs block_n·V·4 for the fused block.
+Emits ``experiments/bench/BENCH_fused_loss.json``.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save, timeit
+from repro.kernels import dispatch, ref
+
+SIGMA = 0.2
+
+# (N tokens, action vocab V, hidden width d)
+QUICK_SHAPES = ((4_096, 64, 128), (8_192, 64, 128))
+FULL_SHAPES = ((16_384, 256, 256), (65_536, 256, 256), (16_384, 1_024, 256))
+
+
+def _data(n: int, v: int, d: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.standard_normal((n, d)), jnp.float32),
+            jnp.asarray(rng.standard_normal((d, v)) * 0.2, jnp.float32),
+            jnp.asarray(rng.integers(0, v, n), jnp.int32),
+            jnp.asarray(rng.standard_normal(n) * 0.3, jnp.float32),
+            jnp.asarray(rng.standard_normal(n), jnp.float32),
+            jnp.asarray((rng.random(n) > 0.1).astype(np.float32)))
+
+
+def _combine(pg, ent, kl, _metrics):
+    return pg + 0.1 * kl - 0.01 * ent
+
+
+def bench_shape(n: int, v: int, d: int, iters: int) -> Dict:
+    hidden, w, targets, logp_old, adv, mask = _data(n, v, d)
+    block_n = dispatch.loss_block_n()
+
+    @jax.jit
+    def reference(h, w_):
+        return jax.value_and_grad(
+            lambda h_, w2: _combine(*ref.reference_policy_loss(
+                h_, w2, targets, logp_old, adv, mask, SIGMA)),
+            argnums=(0, 1))(h, w_)
+
+    @jax.jit
+    def fused(h, w_):
+        return jax.value_and_grad(
+            lambda h_, w2: _combine(*dispatch.policy_head_loss(
+                h_, w2, targets, logp_old, adv, mask, sigma=SIGMA)),
+            argnums=(0, 1))(h, w_)
+
+    (l_ref, _), (l_fused, _) = reference(hidden, w), fused(hidden, w)
+    assert abs(float(l_ref) - float(l_fused)) < 1e-3 * max(
+        1.0, abs(float(l_ref))), (float(l_ref), float(l_fused))
+
+    t_ref = timeit(reference, hidden, w, iters=iters)
+    t_fused = timeit(fused, hidden, w, iters=iters)
+    return {
+        "n": n, "v": v, "d": d, "block_n": block_n,
+        "t_reference_s": t_ref, "t_fused_s": t_fused,
+        "speedup": t_ref / max(t_fused, 1e-12),
+        # largest live loss-path intermediate (f32 log-softmax vs one block)
+        "ref_peak_intermediate_bytes": n * v * 4,
+        "fused_peak_intermediate_bytes": block_n * v * 4,
+        "loss_abs_diff": abs(float(l_ref) - float(l_fused)),
+    }
+
+
+def run(quick: bool = True, iters: int = 5) -> Dict:
+    shapes = QUICK_SHAPES if quick else QUICK_SHAPES + FULL_SHAPES
+    result = {
+        "backend": jax.default_backend(),
+        "dispatch_mode": dispatch.resolve_mode(),
+        "uses_pallas": dispatch.use_pallas(),
+        "shapes": [],
+    }
+    for n, v, d in shapes:
+        r = bench_shape(n, v, d, iters)
+        result["shapes"].append(r)
+        print(f"  N={n:>6} V={v:>5} d={d:>4}: ref {r['t_reference_s']*1e3:8.2f} ms"
+              f"  fused {r['t_fused_s']*1e3:8.2f} ms  "
+              f"({r['speedup']:.2f}x; peak {r['ref_peak_intermediate_bytes']/2**20:.1f} MiB"
+              f" -> {r['fused_peak_intermediate_bytes']/2**20:.2f} MiB)",
+              flush=True)
+    save("BENCH_fused_loss", result)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="two small shapes, smoke-level iters")
+    ap.add_argument("--iters", type=int, default=None)
+    args = ap.parse_args()
+    run(quick=args.quick, iters=args.iters or (3 if args.quick else 5))

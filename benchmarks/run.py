@@ -4,6 +4,7 @@
 
 | module            | paper artifact                                   |
 |-------------------|--------------------------------------------------|
+| fused_loss        | hot-path: fused GIPO loss vs unfused reference   |
 | throughput        | Table 1, Fig. 3 (+ eq. 1 batching window)        |
 | task_success      | Table 2 (RL vs supervised, four suites)          |
 | gipo_ablation     | Fig. 8, Table 9 (GIPO vs PPO under staleness)    |
@@ -18,9 +19,9 @@ import argparse
 import time
 import traceback
 
-MODULES = ("value_recompute", "gipo_ablation", "sync_overhead",
-           "throughput", "task_success", "sample_efficiency",
-           "roofline_report")
+MODULES = ("fused_loss", "value_recompute", "gipo_ablation",
+           "sync_overhead", "throughput", "task_success",
+           "sample_efficiency", "roofline_report")
 
 
 def main() -> None:

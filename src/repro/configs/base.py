@@ -187,6 +187,17 @@ class RLConfig:
     value_recompute: bool = True     # JIT-GAE fused into the train step
     adv_norm: str = "lagged_global"  # {"lagged_global", "batch", "none"}
     max_grad_norm: float = 1.0
+    # -- hot-path fusion (kernels/dispatch.py) -------------------------------
+    # fused_loss: run the action head + GIPO/entropy/KL loss block-fused on
+    # hidden states (never materializing [B,T,A,Va] logits); exact parity
+    # with the reference path. Only effective for algo == "gipo".
+    fused_loss: bool = False
+    # kernel_dispatch: routing for the fused-loss op: "auto" = Pallas on
+    # TPU, jnp twin elsewhere; "pallas"/"jnp" force one side (testing).
+    # Attention routing has no per-config knob — use the process-wide
+    # REPRO_KERNELS env var or dispatch.set_mode(), which also take
+    # precedence over this field.
+    kernel_dispatch: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -28,7 +28,12 @@ from repro.configs.base import ModelConfig, RLConfig
 from repro.core import advnorm, gae, gipo
 from repro.core.advnorm import AdvNormState
 from repro.data.trajectory import TrajectoryBatch
-from repro.models.policy import action_log_prob, policy_forward
+from repro.kernels import dispatch
+from repro.models.policy import (
+    action_log_prob,
+    policy_forward,
+    policy_forward_hidden,
+)
 from repro.optim import adamw
 
 
@@ -65,22 +70,97 @@ def _score_batch(cfg: ModelConfig, params, micro: TrajectoryBatch, *,
     return logits, values, out.aux
 
 
-def loss_fn(params, micro: TrajectoryBatch, adv_state: AdvNormState,
-            cfg: ModelConfig, rl: RLConfig, *, remat: bool = False
-            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    t = micro.horizon
-    logits, values, aux = _score_batch(cfg, params, micro, remat=remat)
+def _score_batch_hidden(cfg: ModelConfig, params, micro: TrajectoryBatch, *,
+                        remat: bool):
+    """Head-free twin of ``_score_batch`` for the fused-loss path.
 
-    # --- just-in-time GAE (value recomputation, App. C.1) -------------------
-    # Ablation (Fig. 7): value_recompute=False falls back to the STALE
-    # values recorded at collection time — misaligned targets.
+    Returns (pred_hidden [b,T+1,A,d], values [b,T+1], aux)."""
+    b, tp1 = micro.obs_tokens.shape[:2]
+    flat = lambda x: x.reshape((b * tp1,) + x.shape[2:])
+    prefix = None
+    if micro.prefix_embeds is not None:
+        prefix = flat(micro.prefix_embeds)
+    out = policy_forward_hidden(cfg, params, flat(micro.obs_tokens),
+                                flat(micro.actions), flat(micro.steps),
+                                prefix_embeds=prefix, remat=remat)
+    hidden = out.pred_hidden.reshape(b, tp1, *out.pred_hidden.shape[1:])
+    values = out.value.reshape(b, tp1)
+    return hidden, values, out.aux
+
+
+def _gae_and_norm(values, micro: TrajectoryBatch, adv_state: AdvNormState,
+                  rl: RLConfig):
+    """Just-in-time GAE (value recomputation, App. C.1) + lagged norm.
+
+    Ablation (Fig. 7): value_recompute=False falls back to the STALE
+    values recorded at collection time — misaligned targets."""
     values_for_gae = values if rl.value_recompute else micro.behavior_value
     adv, returns = gae.jit_gae_from_forward(
         values_for_gae, micro.rewards, micro.dones, rl.discount,
         rl.gae_lambda)
     stats = advnorm.local_stats(adv, micro.mask)
     adv_n = advnorm.normalize_lagged(adv, adv_state)
-    adv_n = jax.lax.stop_gradient(adv_n)
+    return jax.lax.stop_gradient(adv_n), returns, stats
+
+
+def _assemble_loss(cfg: ModelConfig, rl: RLConfig, pg, v_loss, kl, ent,
+                   aux, stats, pg_metrics):
+    """Combine the loss terms and build the metrics dict — shared by the
+    reference and fused paths so they cannot drift apart."""
+    total = pg + rl.value_coef * v_loss + rl.kl_coef * kl \
+        - rl.entropy_coef * ent
+    if cfg.arch_type == "moe":
+        total = total + aux["load_balance"] + aux["router_z"]
+    metrics = {
+        "loss": total, "pg_loss": pg, "value_loss": v_loss, "kl": kl,
+        "entropy": ent, "adv_mean_raw": stats[0] / jnp.maximum(stats[2], 1.0),
+        **pg_metrics,
+    }
+    if cfg.arch_type == "moe":
+        metrics["moe_load_balance"] = aux["load_balance"]
+        metrics["moe_dropped_frac"] = aux["dropped_frac"]
+    return total, (metrics, stats)
+
+
+def _fused_loss_fn(params, micro: TrajectoryBatch, adv_state: AdvNormState,
+                   cfg: ModelConfig, rl: RLConfig, *, remat: bool
+                   ) -> Tuple[jnp.ndarray, Tuple[Dict, jnp.ndarray]]:
+    """Fused-loss path: the action head + GIPO/entropy/KL run block-fused
+    on hidden states (kernels/dispatch.py) — the [b,T,A,Va] logit tensor
+    and its log-softmax are never materialized. Exact parity (loss and
+    grads) with the reference path is asserted in tests."""
+    t = micro.horizon
+    hidden, values, aux = _score_batch_hidden(cfg, params, micro,
+                                              remat=remat)
+    adv_n, returns, stats = _gae_and_norm(values, micro, adv_state, rl)
+
+    b = hidden.shape[0]
+    a_dim = micro.actions.shape[2]
+    hid = hidden[:, :t].reshape(b * t * a_dim, -1)
+    pg, ent, kl, pg_metrics = dispatch.policy_head_loss(
+        hid, params["action_head"]["w"],
+        micro.actions[:, :t].reshape(-1),
+        micro.behavior_logp[:, :t].reshape(-1),
+        jnp.broadcast_to(adv_n[..., None], (b, t, a_dim)).reshape(-1),
+        jnp.broadcast_to(micro.mask[..., None], (b, t, a_dim)).reshape(-1),
+        sigma=rl.gipo_sigma, mode=rl.kernel_dispatch)
+    pg_metrics = jax.tree.map(jax.lax.stop_gradient, pg_metrics)
+
+    v_loss = gipo.value_loss(values[:, :t], jax.lax.stop_gradient(returns),
+                             micro.mask)
+    return _assemble_loss(cfg, rl, pg, v_loss, kl, ent, aux, stats,
+                          pg_metrics)
+
+
+def loss_fn(params, micro: TrajectoryBatch, adv_state: AdvNormState,
+            cfg: ModelConfig, rl: RLConfig, *, remat: bool = False
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    if rl.fused_loss and rl.algo == "gipo":
+        return _fused_loss_fn(params, micro, adv_state, cfg, rl,
+                              remat=remat)
+    t = micro.horizon
+    logits, values, aux = _score_batch(cfg, params, micro, remat=remat)
+    adv_n, returns, stats = _gae_and_norm(values, micro, adv_state, rl)
 
     # --- token-level policy loss (App. D.3) ----------------------------------
     logp_new = action_log_prob(logits[:, :t], micro.actions[:, :t])
@@ -97,20 +177,8 @@ def loss_fn(params, micro: TrajectoryBatch, adv_state: AdvNormState,
                              micro.mask)
     kl = gipo.kl_penalty(logp_new, logp_old, micro.mask)
     ent = gipo.entropy_bonus(logits[:, :t], micro.mask)
-
-    total = pg + rl.value_coef * v_loss + rl.kl_coef * kl \
-        - rl.entropy_coef * ent
-    if cfg.arch_type == "moe":
-        total = total + aux["load_balance"] + aux["router_z"]
-    metrics = {
-        "loss": total, "pg_loss": pg, "value_loss": v_loss, "kl": kl,
-        "entropy": ent, "adv_mean_raw": stats[0] / jnp.maximum(stats[2], 1.0),
-        **pg_metrics,
-    }
-    if cfg.arch_type == "moe":
-        metrics["moe_load_balance"] = aux["load_balance"]
-        metrics["moe_dropped_frac"] = aux["dropped_frac"]
-    return total, (metrics, stats)
+    return _assemble_loss(cfg, rl, pg, v_loss, kl, ent, aux, stats,
+                          pg_metrics)
 
 
 def _microbatches(batch: TrajectoryBatch, n_micro: int):

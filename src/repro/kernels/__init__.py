@@ -1,8 +1,14 @@
 """Pallas TPU kernels for the framework's compute hot-spots (DESIGN.md §7):
-flash attention (prefill/decode), the fused token-level GIPO loss, and the
-Mamba2 SSD chunked scan. Each ships a jit'd wrapper (``ops``) and a
-pure-jnp oracle (``ref``); interpret-mode tests sweep shapes and dtypes."""
+flash attention (prefill/decode), the custom-VJP fused token-level GIPO
+loss (logits- and hidden-level), and the Mamba2 SSD chunked scan. Each
+ships a jit'd wrapper (``ops``), a pure-jnp oracle (``ref``), and the
+``dispatch`` layer routes call sites to Pallas on TPU / jnp twins
+elsewhere; interpret-mode tests sweep shapes and dtypes."""
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
-from repro.kernels.gipo_loss import gipo_loss_fused  # noqa: F401
+from repro.kernels.gipo_loss import (  # noqa: F401
+    fused_policy_loss,
+    gipo_head_loss,
+    gipo_loss_fused,
+)
 from repro.kernels.ssd_scan import ssd_scan  # noqa: F401
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import dispatch, ops, ref  # noqa: F401

@@ -1,0 +1,232 @@
+"""Kernel dispatch: route hot ops to Pallas on TPU, to jnp twins elsewhere.
+
+Every hot op in the stack has two implementations with identical semantics:
+a Pallas kernel (``flash_attention``, ``gipo_loss``, ``fused_policy_loss``)
+that lowers to Mosaic on TPU, and a streaming pure-jnp twin that XLA
+compiles well on CPU/GPU. This module picks between them at trace time.
+
+Mode resolution (first match wins):
+
+  1. ``set_mode(...)`` / the ``forced(...)`` context manager (tests),
+  2. the ``REPRO_KERNELS`` environment variable,
+  3. the ``mode`` argument threaded from config (``RLConfig.kernel_dispatch``),
+  4. ``"auto"``: Pallas iff ``jax.default_backend() == "tpu"`` — the same
+     rule as ``ops._auto_interpret``.
+
+Modes: ``"auto"`` | ``"pallas"`` | ``"jnp"``. Forcing ``"pallas"`` off-TPU
+runs the kernels in interpret mode (slow — correctness testing only).
+
+Note the decision is taken at *trace* time: flipping the env var does not
+retrigger tracing of an already-jitted train step.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gipo_loss as _gl
+from repro.kernels.flash_attention import flash_attention
+
+_MODE_ENV = "REPRO_KERNELS"
+_MODES = ("auto", "pallas", "jnp")
+_override: Optional[str] = None
+
+
+def set_mode(mode: Optional[str]) -> None:
+    """Process-wide override; ``None`` restores env/auto resolution."""
+    global _override
+    if mode is not None and mode not in _MODES:
+        raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
+    _override = mode
+
+
+@contextlib.contextmanager
+def forced(mode: str):
+    """Temporarily force a dispatch mode (tests)."""
+    prev = _override
+    set_mode(mode)
+    try:
+        yield
+    finally:
+        set_mode(prev)
+
+
+def resolve_mode(mode: Optional[str] = None) -> str:
+    if _override is not None:
+        return _override
+    env = os.environ.get(_MODE_ENV)
+    if env:
+        if env not in _MODES:
+            raise ValueError(f"{_MODE_ENV} must be one of {_MODES}, "
+                             f"got {env!r}")
+        return env
+    if mode is not None:
+        if mode not in _MODES:
+            raise ValueError(f"dispatch mode must be one of {_MODES}, "
+                             f"got {mode!r}")
+        return mode
+    return "auto"
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def use_pallas(mode: Optional[str] = None) -> bool:
+    m = resolve_mode(mode)
+    return m == "pallas" or (m == "auto" and _on_tpu())
+
+
+def interpret_mode() -> bool:
+    """Whether a dispatched ``pallas_call`` should run in interpret mode
+    (mirrors ``ops._auto_interpret(None)``)."""
+    return not _on_tpu()
+
+
+# ---------------------------------------------------------------------------
+# Streaming jnp twins (share the block math with the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(body, operands, block_n: int):
+    """Pad leading axes to ``block_n``, reshape to [nb, block_n, ...] and
+    scan ``body`` over blocks accumulating the 8-column partial sums. The
+    body is checkpointed so the backward re-streams blocks instead of
+    saving per-block softmax residuals."""
+    padded = _gl._pad_rows(block_n, *operands)
+    nb = padded[0].shape[0] // block_n
+    blocks = tuple(a.reshape((nb, block_n) + a.shape[1:]) for a in padded)
+
+    def step(acc, blk):
+        return acc + body(*blk), None
+
+    sums, _ = jax.lax.scan(jax.checkpoint(step),
+                           jnp.zeros((_gl.N_COLS,), jnp.float32), blocks)
+    return sums
+
+
+def _jnp_gipo_loss(logits, targets, logp_old, advantages, mask, sigma,
+                   block_n):
+    def body(lg, tg, lo, ad, mk):
+        return _gl._fwd_partials(lg.astype(jnp.float32), tg, lo, ad, mk,
+                                 sigma, sg=jax.lax.stop_gradient)
+    sums = _scan_blocks(body, (logits, targets, logp_old, advantages, mask),
+                        block_n)
+    return _gl._finalize(sums)
+
+
+def _jnp_policy_loss(hidden, w, targets, logp_old, advantages, mask, sigma,
+                     block_n):
+    def body(h, tg, lo, ad, mk):
+        logits = jnp.dot(h, w, preferred_element_type=jnp.float32)
+        return _gl._fwd_partials(logits, tg, lo, ad, mk, sigma,
+                                 sg=jax.lax.stop_gradient)
+    sums = _scan_blocks(body, (hidden, targets, logp_old, advantages, mask),
+                        block_n)
+    return _gl._finalize(sums)
+
+
+# ---------------------------------------------------------------------------
+# Dispatched ops
+# ---------------------------------------------------------------------------
+
+PALLAS_BLOCK_N = 256    # VMEM-sized token block for the TPU kernels
+TWIN_BLOCK_N = 1024     # larger blocks amortize scan overhead on CPU/GPU
+
+
+def loss_block_n(mode: Optional[str] = None) -> int:
+    return PALLAS_BLOCK_N if use_pallas(mode) else TWIN_BLOCK_N
+
+
+def gipo_loss(logits, targets, logp_old, advantages, mask, *, sigma: float,
+              block_n: Optional[int] = None, mode: Optional[str] = None):
+    """Logits-level fused GIPO/entropy/KL -> (pg, entropy, kl, metrics)."""
+    block_n = block_n or loss_block_n(mode)
+    if use_pallas(mode):
+        return _gl.gipo_head_loss(logits, targets, logp_old, advantages,
+                                  mask, sigma, block_n, interpret_mode())
+    return _jnp_gipo_loss(logits, targets, logp_old, advantages, mask,
+                          sigma, block_n)
+
+
+def policy_head_loss(hidden, w, targets, logp_old, advantages, mask, *,
+                     sigma: float, block_n: Optional[int] = None,
+                     mode: Optional[str] = None):
+    """Hidden-level fused action head + GIPO/entropy/KL loss.
+
+    hidden: [N, d]; w: [d, Va]; rest [N]. Both routes stream token blocks
+    and never materialize an [N, Va] softmax intermediate — the Pallas path
+    via the custom-VJP kernels, the jnp path via a checkpointed block scan.
+    """
+    block_n = block_n or loss_block_n(mode)
+    if use_pallas(mode):
+        return _gl.fused_policy_loss(hidden, w, targets, logp_old,
+                                     advantages, mask, sigma, block_n,
+                                     interpret_mode())
+    return _jnp_policy_loss(hidden, w, targets, logp_old, advantages, mask,
+                            sigma, block_n)
+
+
+# ---------------------------------------------------------------------------
+# Attention: Pallas flash forward + jnp-twin recompute backward
+# ---------------------------------------------------------------------------
+
+def _attn_pallas_ok(head_dim: int) -> bool:
+    """On a real TPU the flash kernel wants MXU-aligned head dims; the jnp
+    twin handles the rest. Interpret mode (CPU) takes any shape."""
+    if interpret_mode():
+        return True
+    return head_dim % 128 == 0
+
+
+def _twin_attention(q, k, v, window, block, unroll=False):
+    from repro.models.attention import _blockwise_attn
+    scale = q.shape[-1] ** -0.5
+    return _blockwise_attn(q, k, v, scale, window=window, block=block,
+                           unroll=unroll).astype(q.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_with_twin_bwd(q, k, v, window, block_q, block_k, interpret):
+    return flash_attention(q, k, v, causal=True, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)
+
+
+def _flash_fwd(q, k, v, window, block_q, block_k, interpret):
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=block_q, block_k=block_k,
+                          interpret=interpret)
+    return out, (q, k, v)
+
+
+def _flash_bwd(window, block_q, block_k, interpret, res, g):
+    # Backward = VJP of the numerically-matching jnp twin (blockwise online
+    # softmax, O(T·block) score memory) recomputed from the saved q/k/v.
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _twin_attention(q_, k_, v_, window, block_k), q,
+        k, v)
+    return vjp(g)
+
+
+_flash_with_twin_bwd.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention(q, k, v, *, window: Optional[int] = None, block: int = 128,
+              unroll: bool = False, mode: Optional[str] = None):
+    """Causal (optionally sliding-window) blockwise attention on projected
+    q/k/v. q: [B,T,H,D]; k/v: [B,S,KV,D] -> [B,T,H,D] in q.dtype.
+
+    Routes to the Pallas flash kernel when enabled and shape-eligible
+    (backward: analytic VJP of the jnp twin, recomputed blockwise — no
+    O(T²) score tensor either way); otherwise the jnp twin runs both ways.
+    """
+    if use_pallas(mode) and _attn_pallas_ok(q.shape[-1]):
+        return _flash_with_twin_bwd(q, k, v, window, block, block,
+                                    interpret_mode())
+    return _twin_attention(q, k, v, window, block, unroll)

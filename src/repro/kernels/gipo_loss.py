@@ -1,58 +1,279 @@
-"""Fused token-level GIPO loss as a Pallas TPU kernel (DESIGN.md §7).
+"""Fused token-level GIPO loss as Pallas TPU kernels (DESIGN.md §7).
 
 The naive objective touches the [N, V_action] logit tensor three times
-(log-softmax, gather, ratio product). The kernel streams token blocks
-through VMEM once: per block it fuses row-max → log-sum-exp → target
-gather → Gaussian trust weight (eq. 5) → surrogate (eq. 6) → partial
-reductions, emitting one (loss, ratio, omega, count) quadruple per block.
-The host-side wrapper sums the partials — no [N, V] intermediate ever
-returns to HBM.
+(log-softmax, gather, ratio product) and twice more for the entropy bonus
+and KL penalty. The kernels stream token blocks through VMEM once: per
+block they fuse row-max → log-sum-exp → target gather → Gaussian trust
+weight (eq. 5) → surrogate (eq. 6) → entropy → k3-KL → partial reductions,
+emitting one 8-column partial row per block. The host-side wrapper sums
+the partials — no [N, V] intermediate ever returns to HBM.
+
+Two fusion levels:
+
+  * ``gipo_head_loss``   — logits-level: consumes [N, V] logits. Custom
+    VJP: an analytic backward kernel re-streams the same blocks and emits
+    ``d_logits`` directly, so the backward never materializes a second
+    [N, V] softmax intermediate (the block softmax lives only in VMEM).
+  * ``fused_policy_loss`` — hidden-level: consumes [N, d] hidden states
+    plus the slimmed action-head weight [d, Va] and computes the logits
+    block *inside* the kernel. Forward and backward never write an
+    [N, Va] tensor to HBM at all: the backward emits ``d_hidden`` per
+    block and accumulates ``d_w`` across the sequential grid.
+
+Gradients are defined w.r.t. logits (resp. hidden + head weight) only;
+``targets``/``logp_old``/``advantages``/``mask`` are treated as constants,
+matching the trainer where advantages are stop-gradient and the rest is
+rollout data. Metric outputs are stop-gradiented explicitly.
+
+The per-block math lives in plain-jnp helpers (``_fwd_partials``,
+``_block_dlogits``) shared verbatim by the Pallas kernel bodies and by the
+streaming jnp twins in ``repro.kernels.dispatch`` — one source of truth.
 """
 from __future__ import annotations
 
 import functools
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.kernels.flash_attention import _vmem
+# Column layout of the per-block partial sums (padded to 8 for layout):
+#   0: Σ pg        1: Σ ratio   2: Σ omega   3: Σ mask (token count)
+#   4: Σ entropy   5: Σ k3-KL   6: Σ stale   7: unused
+N_COLS = 8
 
 
-def _gipo_kernel(logits_ref, targets_ref, logp_old_ref, adv_ref, mask_ref,
-                 out_ref, *, sigma: float, block_n: int, valid_n: int):
-    i = pl.program_id(0)
-    logits = logits_ref[...].astype(jnp.float32)        # [bn, V]
-    targets = targets_ref[...]                          # [bn]
-    logp_old = logp_old_ref[...]
-    adv = adv_ref[...]
-    mask = mask_ref[...]
+# ---------------------------------------------------------------------------
+# Shared block math (pure jnp — used by kernels AND the jnp twins)
+# ---------------------------------------------------------------------------
 
-    # mask out padded rows
-    rows = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
-    mask = jnp.where(rows < valid_n, mask, 0.0)
-
-    # fused log-softmax + gather
-    row_max = logits.max(axis=-1, keepdims=True)
-    shifted = logits - row_max
-    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))   # [bn]
-    v = logits.shape[-1]
-    onehot = (jax.lax.broadcasted_iota(jnp.int32, (block_n, v), 1)
+def _softmax_rows(logits32: jnp.ndarray, targets: jnp.ndarray):
+    """Row-streamed log-softmax pieces. logits32: [bn, V] f32; targets [bn]."""
+    row_max = jnp.max(logits32, axis=-1, keepdims=True)
+    shifted = logits32 - row_max
+    expsh = jnp.exp(shifted)
+    sumexp = jnp.sum(expsh, axis=-1)
+    lse = jnp.log(sumexp)
+    bn, v = logits32.shape
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (bn, v), 1)
               == targets[:, None])
-    tgt_logit = jnp.sum(jnp.where(onehot, shifted, 0.0), axis=-1)
-    logp_new = tgt_logit - lse                          # [bn]
+    tgt_shifted = jnp.sum(jnp.where(onehot, shifted, 0.0), axis=-1)
+    logp_new = tgt_shifted - lse                       # [bn]
+    p = expsh / sumexp[:, None]                        # [bn, V]
+    logp = shifted - lse[:, None]                      # [bn, V]
+    ent = -jnp.sum(p * logp, axis=-1)                  # [bn]
+    return p, logp, onehot, logp_new, ent
 
-    log_ratio = logp_new - logp_old
-    ratio = jnp.exp(log_ratio)
-    omega = jnp.exp(-0.5 * jnp.square(log_ratio / sigma))   # eq. 5
-    per_token = -(omega * ratio * adv)                       # eq. 6
 
-    out_ref[0, 0] = jnp.sum(per_token * mask)
-    out_ref[0, 1] = jnp.sum(ratio * mask)
-    out_ref[0, 2] = jnp.sum(omega * mask)
-    out_ref[0, 3] = jnp.sum(mask)
+def _fwd_partials(logits32, targets, logp_old, adv, mask, sigma: float,
+                  sg=lambda x: x):
+    """One block's 8-column partial sums (see N_COLS layout).
+
+    ``sg``: stop-gradient hook for the trust weight's log-ratio (eq. 5).
+    The Pallas kernels leave it as identity — their backward is analytic
+    and already treats ω as constant; the autodiffed jnp twin must pass
+    ``jax.lax.stop_gradient`` to get the same semantics.
+    """
+    _, _, _, logp_new, ent = _softmax_rows(logits32, targets)
+    lr = logp_new - logp_old
+    ratio = jnp.exp(lr)
+    omega = jnp.exp(-0.5 * jnp.square(sg(lr) / sigma))  # eq. 5
+    pg = -(omega * ratio * adv)                        # eq. 6
+    k3 = jnp.expm1(-lr) + lr                           # k3 KL estimator
+    stale = (jnp.abs(sg(lr)) > 2.0 * sigma).astype(jnp.float32)
+    m = mask
+    return jnp.stack([
+        jnp.sum(pg * m), jnp.sum(ratio * m), jnp.sum(omega * m), jnp.sum(m),
+        jnp.sum(ent * m), jnp.sum(k3 * m), jnp.sum(stale * m),
+        jnp.zeros((), jnp.float32),
+    ])
+
+
+def _block_dlogits(logits32, targets, logp_old, adv, mask, sigma: float,
+                   c_pg, c_kl, c_ent):
+    """Analytic d_logits for one block, f32 [bn, V].
+
+    c_* are upstream cotangents already divided by the global denominator.
+    Derivation (per valid row, ∂logp_new/∂z_v = onehot_v − p_v):
+      pg:  ∂(−ω ρ Â)/∂logp_new = −ω ρ Â        (ω is stop-gradient)
+      kl:  ∂k3/∂logp_new       = 1 − e^{−log ρ}
+      ent: ∂H/∂z_v             = −p_v (log p_v + H)
+    """
+    p, logp, onehot, logp_new, ent = _softmax_rows(logits32, targets)
+    lr = logp_new - logp_old
+    ratio = jnp.exp(lr)
+    omega = jnp.exp(-0.5 * jnp.square(lr / sigma))
+    g = (c_pg * (-(omega * ratio * adv))
+         + c_kl * (1.0 - jnp.exp(-lr))) * mask         # [bn]
+    d = g[:, None] * (onehot.astype(jnp.float32) - p)
+    d += (c_ent * mask)[:, None] * (-(p * (logp + ent[:, None])))
+    return d
+
+
+def _finalize(sums: jnp.ndarray):
+    """Partial-sum vector [8] -> (pg, entropy, kl, metrics).
+
+    Metrics are diagnostics, not loss terms — stop-gradient them here so
+    the autodiffed jnp twins match the custom-VJP kernels (whose backward
+    ignores the metrics cotangents by construction)."""
+    denom = jnp.maximum(sums[3], 1.0)
+    pg = sums[0] / denom
+    metrics = {"ratio_mean": sums[1] / denom,
+               "omega_mean": sums[2] / denom,
+               "stale_frac": sums[6] / denom}
+    return (pg, sums[4] / denom, sums[5] / denom,
+            jax.tree.map(jax.lax.stop_gradient, metrics))
+
+
+def _pad_rows(block_n: int, *arrays):
+    """Pad every array's leading axis to a multiple of ``block_n``."""
+    n = arrays[0].shape[0]
+    np_ = math.ceil(n / block_n) * block_n
+    if np_ == n:
+        return arrays
+    pad = np_ - n
+    return tuple(jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+                 for a in arrays)
+
+
+def _row_spec(block_n: int, *trailing):
+    return pl.BlockSpec((block_n,) + trailing, lambda i: (i,) + (0,) * len(trailing))
+
+
+def _zero_mask_pad(i, block_n: int, valid_n: int, mask):
+    rows = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    return jnp.where(rows < valid_n, mask, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Logits-level kernels
+# ---------------------------------------------------------------------------
+
+def _gipo_fwd_kernel(logits_ref, targets_ref, logp_old_ref, adv_ref, mask_ref,
+                     out_ref, *, sigma: float, block_n: int, valid_n: int):
+    i = pl.program_id(0)
+    mask = _zero_mask_pad(i, block_n, valid_n, mask_ref[...])
+    out_ref[0, :] = _fwd_partials(logits_ref[...].astype(jnp.float32),
+                                  targets_ref[...], logp_old_ref[...],
+                                  adv_ref[...], mask, sigma)
+
+
+def _gipo_bwd_kernel(logits_ref, targets_ref, logp_old_ref, adv_ref, mask_ref,
+                     coef_ref, dlogits_ref, *, sigma: float, block_n: int,
+                     valid_n: int):
+    i = pl.program_id(0)
+    mask = _zero_mask_pad(i, block_n, valid_n, mask_ref[...])
+    c = coef_ref[...]
+    d = _block_dlogits(logits_ref[...].astype(jnp.float32), targets_ref[...],
+                       logp_old_ref[...], adv_ref[...], mask, sigma,
+                       c[0, 0], c[0, 1], c[0, 2])
+    dlogits_ref[...] = d.astype(dlogits_ref.dtype)
+
+
+def _gipo_fwd_call(logits, targets, logp_old, advantages, mask, sigma,
+                   block_n, interpret):
+    n, v = logits.shape
+    logits, targets, logp_old, advantages, mask = _pad_rows(
+        block_n, logits, targets, logp_old, advantages, mask)
+    grid = (logits.shape[0] // block_n,)
+    kernel = functools.partial(_gipo_fwd_kernel, sigma=sigma,
+                               block_n=block_n, valid_n=n)
+    partials = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, v), lambda i: (i, 0)),
+            _row_spec(block_n), _row_spec(block_n), _row_spec(block_n),
+            _row_spec(block_n),
+        ],
+        out_specs=pl.BlockSpec((1, N_COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], N_COLS), jnp.float32),
+        interpret=interpret,
+    )(logits, targets, logp_old, advantages, mask)
+    return _finalize(partials.sum(axis=0))
+
+
+def _gipo_bwd_call(logits, targets, logp_old, advantages, mask, sigma,
+                   block_n, interpret, coefs):
+    n, v = logits.shape
+    dtype = logits.dtype
+    logits, targets, logp_old, advantages, mask = _pad_rows(
+        block_n, logits, targets, logp_old, advantages, mask)
+    grid = (logits.shape[0] // block_n,)
+    kernel = functools.partial(_gipo_bwd_kernel, sigma=sigma,
+                               block_n=block_n, valid_n=n)
+    d = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, v), lambda i: (i, 0)),
+            _row_spec(block_n), _row_spec(block_n), _row_spec(block_n),
+            _row_spec(block_n),
+            pl.BlockSpec((1, N_COLS), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((logits.shape[0], v), dtype),
+        interpret=interpret,
+    )(logits, targets, logp_old, advantages, mask, coefs)
+    return d[:n]
+
+
+def _loss_coefs(mask, cts) -> jnp.ndarray:
+    """Fold the (pg, ent, kl) cotangents and 1/denom into a (1, 8) row."""
+    ct_pg, ct_ent, ct_kl, _ = cts
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    row = jnp.stack([ct_pg / denom, ct_kl / denom, ct_ent / denom,
+                     *([jnp.zeros(())] * (N_COLS - 3))])
+    return row[None, :].astype(jnp.float32)
+
+
+def _int_zero(x):
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _gipo_head_loss_vjp(logits, targets, logp_old, advantages, mask,
+                        sigma, block_n, interpret):
+    return _gipo_fwd_call(logits, targets, logp_old, advantages, mask,
+                          sigma, block_n, interpret)
+
+
+def _gipo_head_fwd(logits, targets, logp_old, advantages, mask,
+                   sigma, block_n, interpret):
+    out = _gipo_fwd_call(logits, targets, logp_old, advantages, mask,
+                         sigma, block_n, interpret)
+    return out, (logits, targets, logp_old, advantages, mask)
+
+
+def _gipo_head_bwd(sigma, block_n, interpret, res, cts):
+    logits, targets, logp_old, advantages, mask = res
+    d = _gipo_bwd_call(logits, targets, logp_old, advantages, mask,
+                       sigma, block_n, interpret, _loss_coefs(mask, cts))
+    return (d, _int_zero(targets), jnp.zeros_like(logp_old),
+            jnp.zeros_like(advantages), jnp.zeros_like(mask))
+
+
+_gipo_head_loss_vjp.defvjp(_gipo_head_fwd, _gipo_head_bwd)
+
+
+def gipo_head_loss(logits, targets, logp_old, advantages, mask,
+                   sigma: float, block_n: int = 256,
+                   interpret: bool = False):
+    """Fused GIPO surrogate + entropy + k3-KL over [N, V] logits.
+
+    Returns ``(pg_loss, entropy, kl, metrics)`` — all masked means over the
+    N token rows. Differentiable w.r.t. ``logits`` via an analytic backward
+    Pallas kernel (see module docstring for the constant-input convention).
+    The metrics are explicitly stop-gradiented — the custom VJP only
+    propagates the (pg, entropy, kl) cotangents.
+    """
+    pg, ent, kl, metrics = _gipo_head_loss_vjp(
+        logits, targets, logp_old, advantages, mask, sigma, block_n,
+        interpret)
+    return pg, ent, kl, jax.tree.map(jax.lax.stop_gradient, metrics)
 
 
 def gipo_loss_fused(logits: jnp.ndarray, targets: jnp.ndarray,
@@ -63,38 +284,151 @@ def gipo_loss_fused(logits: jnp.ndarray, targets: jnp.ndarray,
                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """logits: [N, V]; targets/logp_old/advantages/mask: [N].
 
-    Returns (scalar loss, metrics) matching ``ref.reference_gipo_loss``.
+    Returns (scalar pg loss, metrics) matching ``ref.reference_gipo_loss``;
+    differentiable w.r.t. ``logits`` (custom VJP, analytic backward kernel).
     """
-    n, v = logits.shape
-    np_ = math.ceil(n / block_n) * block_n
-    if np_ != n:
-        pad = np_ - n
-        logits = jnp.pad(logits, ((0, pad), (0, 0)))
-        targets = jnp.pad(targets, (0, pad))
-        logp_old = jnp.pad(logp_old, (0, pad))
-        advantages = jnp.pad(advantages, (0, pad))
-        mask = jnp.pad(mask, (0, pad))
+    pg, ent, kl, metrics = gipo_head_loss(logits, targets, logp_old,
+                                          advantages, mask, sigma, block_n,
+                                          interpret)
+    metrics = dict(metrics, entropy=ent, kl=kl)
+    return pg, jax.tree.map(jax.lax.stop_gradient, metrics)
 
-    grid = (np_ // block_n,)
-    kernel = functools.partial(_gipo_kernel, sigma=sigma, block_n=block_n,
-                               valid_n=n)
+
+# ---------------------------------------------------------------------------
+# Hidden-level kernels: the action-head matmul fused into the loss
+# ---------------------------------------------------------------------------
+
+def _policy_fwd_kernel(hidden_ref, w_ref, targets_ref, logp_old_ref, adv_ref,
+                       mask_ref, out_ref, *, sigma: float, block_n: int,
+                       valid_n: int):
+    i = pl.program_id(0)
+    logits = jnp.dot(hidden_ref[...], w_ref[...],
+                     preferred_element_type=jnp.float32)   # [bn, Va] f32
+    mask = _zero_mask_pad(i, block_n, valid_n, mask_ref[...])
+    out_ref[0, :] = _fwd_partials(logits, targets_ref[...], logp_old_ref[...],
+                                  adv_ref[...], mask, sigma)
+
+
+def _policy_bwd_kernel(hidden_ref, w_ref, targets_ref, logp_old_ref, adv_ref,
+                       mask_ref, coef_ref, dh_ref, dw_ref, *, sigma: float,
+                       block_n: int, valid_n: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+
+    h = hidden_ref[...]
+    w32 = w_ref[...].astype(jnp.float32)
+    logits = jnp.dot(h, w_ref[...], preferred_element_type=jnp.float32)
+    mask = _zero_mask_pad(i, block_n, valid_n, mask_ref[...])
+    c = coef_ref[...]
+    d = _block_dlogits(logits, targets_ref[...], logp_old_ref[...],
+                       adv_ref[...], mask, sigma, c[0, 0], c[0, 1], c[0, 2])
+    dh_ref[...] = jnp.dot(d, w32.T,
+                          preferred_element_type=jnp.float32
+                          ).astype(dh_ref.dtype)
+    # d_w accumulates across the sequential grid (constant index map)
+    dw_ref[...] += jnp.dot(h.astype(jnp.float32).T, d,
+                           preferred_element_type=jnp.float32)
+
+
+def _policy_fwd_call(hidden, w, targets, logp_old, advantages, mask,
+                     sigma, block_n, interpret):
+    n, d = hidden.shape
+    v = w.shape[1]
+    hidden, targets, logp_old, advantages, mask = _pad_rows(
+        block_n, hidden, targets, logp_old, advantages, mask)
+    grid = (hidden.shape[0] // block_n,)
+    kernel = functools.partial(_policy_fwd_kernel, sigma=sigma,
+                               block_n=block_n, valid_n=n)
     partials = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, v), lambda i: (i, 0)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, v), lambda i: (0, 0)),
+            _row_spec(block_n), _row_spec(block_n), _row_spec(block_n),
+            _row_spec(block_n),
         ],
-        out_specs=pl.BlockSpec((1, 4), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((np_ // block_n, 4), jnp.float32),
+        out_specs=pl.BlockSpec((1, N_COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], N_COLS), jnp.float32),
         interpret=interpret,
-    )(logits, targets, logp_old, advantages, mask)
+    )(hidden, w, targets, logp_old, advantages, mask)
+    return _finalize(partials.sum(axis=0))
 
-    sums = partials.sum(axis=0)
-    denom = jnp.maximum(sums[3], 1.0)
-    loss = sums[0] / denom
-    return loss, {"ratio_mean": sums[1] / denom,
-                  "omega_mean": sums[2] / denom}
+
+def _policy_bwd_call(hidden, w, targets, logp_old, advantages, mask,
+                     sigma, block_n, interpret, coefs):
+    n, d = hidden.shape
+    v = w.shape[1]
+    hidden_p, targets, logp_old, advantages, mask = _pad_rows(
+        block_n, hidden, targets, logp_old, advantages, mask)
+    grid = (hidden_p.shape[0] // block_n,)
+    kernel = functools.partial(_policy_bwd_kernel, sigma=sigma,
+                               block_n=block_n, valid_n=n)
+    dh, dw = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, v), lambda i: (0, 0)),
+            _row_spec(block_n), _row_spec(block_n), _row_spec(block_n),
+            _row_spec(block_n),
+            pl.BlockSpec((1, N_COLS), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, v), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((hidden_p.shape[0], d), hidden.dtype),
+            jax.ShapeDtypeStruct((d, v), jnp.float32),
+        ],
+        interpret=interpret,
+    )(hidden_p, w, targets, logp_old, advantages, mask, coefs)
+    return dh[:n], dw.astype(w.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _fused_policy_loss_vjp(hidden, w, targets, logp_old, advantages, mask,
+                           sigma, block_n, interpret):
+    return _policy_fwd_call(hidden, w, targets, logp_old, advantages, mask,
+                            sigma, block_n, interpret)
+
+
+def _policy_fwd(hidden, w, targets, logp_old, advantages, mask,
+                sigma, block_n, interpret):
+    out = _policy_fwd_call(hidden, w, targets, logp_old, advantages, mask,
+                           sigma, block_n, interpret)
+    return out, (hidden, w, targets, logp_old, advantages, mask)
+
+
+def _policy_bwd(sigma, block_n, interpret, res, cts):
+    hidden, w, targets, logp_old, advantages, mask = res
+    dh, dw = _policy_bwd_call(hidden, w, targets, logp_old, advantages, mask,
+                              sigma, block_n, interpret,
+                              _loss_coefs(mask, cts))
+    return (dh, dw, _int_zero(targets), jnp.zeros_like(logp_old),
+            jnp.zeros_like(advantages), jnp.zeros_like(mask))
+
+
+_fused_policy_loss_vjp.defvjp(_policy_fwd, _policy_bwd)
+
+
+def fused_policy_loss(hidden, w, targets, logp_old, advantages, mask,
+                      sigma: float, block_n: int = 256,
+                      interpret: bool = False):
+    """Action head + GIPO/entropy/KL fused over [N, d] hidden states.
+
+    ``hidden @ w`` is computed blockwise inside the kernel; neither forward
+    nor backward ever writes an [N, Va] logit/softmax tensor to HBM. Returns
+    ``(pg_loss, entropy, kl, metrics)``; differentiable w.r.t. ``hidden``
+    and ``w`` (analytic backward kernel, ``d_w`` accumulated across the
+    sequential grid). The metrics are explicitly stop-gradiented — the
+    custom VJP only propagates the (pg, entropy, kl) cotangents.
+    """
+    pg, ent, kl, metrics = _fused_policy_loss_vjp(
+        hidden, w, targets, logp_old, advantages, mask, sigma, block_n,
+        interpret)
+    return pg, ent, kl, jax.tree.map(jax.lax.stop_gradient, metrics)

@@ -12,7 +12,11 @@ from typing import Optional
 import jax
 
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.gipo_loss import gipo_loss_fused
+from repro.kernels.gipo_loss import (
+    fused_policy_loss,
+    gipo_head_loss,
+    gipo_loss_fused,
+)
 from repro.kernels.ssd_scan import ssd_scan
 
 
@@ -40,6 +44,24 @@ def gipo_loss_op(logits, targets, logp_old, advantages, mask, *,
     return gipo_loss_fused(logits, targets, logp_old, advantages, mask,
                            sigma, block_n=block_n,
                            interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "block_n", "interpret"))
+def gipo_head_loss_op(logits, targets, logp_old, advantages, mask, *,
+                      sigma: float = 0.2, block_n: int = 256,
+                      interpret: Optional[bool] = None):
+    """Custom-VJP fused GIPO + entropy + KL -> (pg, ent, kl, metrics)."""
+    return gipo_head_loss(logits, targets, logp_old, advantages, mask,
+                          sigma, block_n, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "block_n", "interpret"))
+def fused_policy_loss_op(hidden, w, targets, logp_old, advantages, mask, *,
+                         sigma: float = 0.2, block_n: int = 256,
+                         interpret: Optional[bool] = None):
+    """Hidden-level fused action head + loss -> (pg, ent, kl, metrics)."""
+    return fused_policy_loss(hidden, w, targets, logp_old, advantages, mask,
+                             sigma, block_n, _auto_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -54,6 +54,39 @@ def reference_gipo_loss(logits: jnp.ndarray, targets: jnp.ndarray,
     return loss, metrics
 
 
+def reference_policy_loss(hidden: jnp.ndarray, w: jnp.ndarray,
+                          targets: jnp.ndarray, logp_old: jnp.ndarray,
+                          advantages: jnp.ndarray, mask: jnp.ndarray,
+                          sigma: float):
+    """Unfused action head + GIPO/entropy/KL oracle for the fused kernels.
+
+    hidden: [N, d]; w: [d, Va]; rest [N]. Materializes the full [N, Va]
+    log-softmax (the thing the fused path avoids). Returns
+    ``(pg, entropy, kl, metrics)`` and is differentiable by plain autodiff
+    — the grad-parity target for the custom-VJP kernels.
+    """
+    logits = (hidden @ w).astype(jnp.float32)
+    logp_all = jax.nn.log_softmax(logits, axis=-1)
+    logp_new = jnp.take_along_axis(logp_all, targets[:, None], axis=-1)[:, 0]
+    log_ratio = logp_new - logp_old
+    ratio = jnp.exp(log_ratio)
+    lr_sg = jax.lax.stop_gradient(log_ratio)
+    omega = jnp.exp(-0.5 * jnp.square(lr_sg / sigma))
+    pg_tok = -(omega * ratio * advantages)
+    ent_tok = -jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1)
+    k3_tok = jnp.expm1(-log_ratio) + log_ratio
+    denom = jnp.maximum(mask.sum(), 1.0)
+    pg = jnp.sum(pg_tok * mask) / denom
+    ent = jnp.sum(ent_tok * mask) / denom
+    kl = jnp.sum(k3_tok * mask) / denom
+    metrics = {
+        "ratio_mean": jnp.sum(ratio * mask) / denom,
+        "omega_mean": jnp.sum(omega * mask) / denom,
+        "stale_frac": jnp.sum((jnp.abs(lr_sg) > 2 * sigma) * mask) / denom,
+    }
+    return pg, ent, kl, metrics
+
+
 def reference_ssd(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
                   Bm: jnp.ndarray, Cm: jnp.ndarray,
                   init_state: Optional[jnp.ndarray] = None

@@ -11,6 +11,7 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.models.layers import Params, apply_rope, dense_init
 
 NEG_INF = -1e30
@@ -90,9 +91,11 @@ def attention_forward(params: Params, x: jnp.ndarray, *, rope_theta: float,
                       unroll: bool = False) -> jnp.ndarray:
     """Full causal self-attention for training / teacher-forced scoring.
 
-    ``block`` switches to the online-softmax blockwise path (O(T·block)
-    score memory instead of O(T²)) — required for the 4k/32k production
-    shapes; identical numerics (tests assert allclose vs the dense path).
+    ``block`` switches to the blockwise path (O(T·block) score memory
+    instead of O(T²)) — required for the 4k/32k production shapes. The
+    blockwise path is routed through ``repro.kernels.dispatch``: the Pallas
+    flash kernel on TPU, the jnp online-softmax twin elsewhere; identical
+    numerics (tests assert allclose vs the dense path).
     """
     b, t, _ = x.shape
     if positions is None:
@@ -100,8 +103,8 @@ def attention_forward(params: Params, x: jnp.ndarray, *, rope_theta: float,
     q, k, v = _project_qkv(params, x, positions, rope_theta)
     scale = q.shape[-1] ** -0.5
     if block is not None and t > block:
-        out = _blockwise_attn(q, k, v, scale, window=window, block=block,
-                              unroll=unroll)
+        out = dispatch.attention(q, k, v, window=window, block=block,
+                                 unroll=unroll)
         out = out.astype(x.dtype)
     else:
         scores = _gqa_scores(q, k) * scale
@@ -179,8 +182,8 @@ def attention_prefill(params: Params, x: jnp.ndarray, *, rope_theta: float,
     q, k, v = _project_qkv(params, x, positions, rope_theta)
     scale = q.shape[-1] ** -0.5
     if block is not None and t > block:
-        out = _blockwise_attn(q, k, v, scale, window=window, block=block,
-                              unroll=unroll).astype(x.dtype)
+        out = dispatch.attention(q, k, v, window=window, block=block,
+                                 unroll=unroll).astype(x.dtype)
     else:
         scores = _gqa_scores(q, k) * scale
         scores = scores + causal_mask(t, window)[None, None]

@@ -34,6 +34,27 @@ def init_policy_params(cfg: ModelConfig, key) -> Params:
     return params
 
 
+def _teacher_forced(cfg: ModelConfig, params: Params,
+                    obs_tokens: jnp.ndarray, action_tokens: jnp.ndarray,
+                    step_t: jnp.ndarray,
+                    prefix_embeds: Optional[jnp.ndarray], *,
+                    remat: bool, head: bool):
+    """Shared teacher-forced pass. Returns (transformer out, pred slice,
+    value). ``pred`` selects the position that predicts action token k —
+    prefix_len + T_obs + k - 1, the standard next-token factorization —
+    in ONE place so the logits and fused-hidden paths cannot drift."""
+    a = action_tokens.shape[1]
+    tokens = jnp.concatenate([obs_tokens, action_tokens], axis=1)
+    out = transformer.forward(cfg, params, tokens,
+                              prefix_embeds=prefix_embeds, remat=remat,
+                              head=head)
+    t_total = out["hidden"].shape[1]
+    pred = slice(t_total - a - 1, t_total - 1)
+    act_hidden = out["hidden"][:, t_total - a:]                  # [B, A, d]
+    value = value_head(params["value_head"], act_hidden, step_t)
+    return out, pred, value
+
+
 def policy_forward(cfg: ModelConfig, params: Params, obs_tokens: jnp.ndarray,
                    action_tokens: jnp.ndarray, step_t: jnp.ndarray,
                    prefix_embeds: Optional[jnp.ndarray] = None, *,
@@ -47,17 +68,36 @@ def policy_forward(cfg: ModelConfig, params: Params, obs_tokens: jnp.ndarray,
     Logits for action token k are read at the position *preceding* it
     (standard next-token factorization).
     """
-    a = action_tokens.shape[1]
-    tokens = jnp.concatenate([obs_tokens, action_tokens], axis=1)
-    out = transformer.forward(cfg, params, tokens,
-                              prefix_embeds=prefix_embeds, remat=remat)
-    # position of the logit that predicts action token k:
-    #   prefix_len + T_obs + k - 1
-    t_total = out["logits"].shape[1]
-    logits = out["logits"][:, t_total - a - 1:t_total - 1]       # [B, A, Va]
-    act_hidden = out["hidden"][:, t_total - a:]                  # [B, A, d]
-    value = value_head(params["value_head"], act_hidden, step_t)
-    return PolicyOutput(logits=logits, value=value, hidden=out["hidden"],
+    out, pred, value = _teacher_forced(cfg, params, obs_tokens,
+                                       action_tokens, step_t, prefix_embeds,
+                                       remat=remat, head=True)
+    return PolicyOutput(logits=out["logits"][:, pred], value=value,
+                        hidden=out["hidden"], aux=out["aux"])
+
+
+class PolicyHidden(NamedTuple):
+    pred_hidden: jnp.ndarray   # [B, A, d] — hidden at the position that
+    #                            predicts each action token (pre action-head)
+    value: jnp.ndarray         # [B]
+    aux: Dict[str, jnp.ndarray]
+
+
+def policy_forward_hidden(cfg: ModelConfig, params: Params,
+                          obs_tokens: jnp.ndarray,
+                          action_tokens: jnp.ndarray, step_t: jnp.ndarray,
+                          prefix_embeds: Optional[jnp.ndarray] = None, *,
+                          remat: bool = False) -> PolicyHidden:
+    """Teacher-forced scoring that stops before the action head.
+
+    The fused-loss trainer path consumes these hidden states directly: the
+    action-head matmul and the GIPO/entropy/KL loss run block-fused in
+    ``repro.kernels.dispatch.policy_head_loss``, so the [B, A, Va] logit
+    tensor is never materialized.
+    """
+    out, pred, value = _teacher_forced(cfg, params, obs_tokens,
+                                       action_tokens, step_t, prefix_embeds,
+                                       remat=remat, head=False)
+    return PolicyHidden(pred_hidden=out["hidden"][:, pred], value=value,
                         aux=out["aux"])
 
 

@@ -200,8 +200,13 @@ def forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
             remat: bool = False,
             block: Optional[int] = None,
             unroll: bool = False,
-            act_sharding=None) -> Dict[str, jnp.ndarray]:
+            act_sharding=None,
+            head: bool = True) -> Dict[str, jnp.ndarray]:
     """Returns {"hidden": [B,S,d], "logits": [B,S,Va] (f32), "aux": {...}}.
+
+    ``head=False`` skips the action-head projection (``logits`` is None) —
+    the fused-loss path applies the head blockwise inside the loss kernel
+    instead of materializing [B, S, Va] logits here.
 
     ``act_sharding`` (a NamedSharding over [B, S, d]) pins the layer-scan
     carry — i.e. the remat-saved residual stream — to an explicit layout
@@ -276,7 +281,7 @@ def forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
         raise ValueError(cfg.arch_type)
 
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = action_head(params["action_head"], x)
+    logits = action_head(params["action_head"], x) if head else None
     return {"hidden": x, "logits": logits, "aux": aux}
 
 

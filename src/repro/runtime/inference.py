@@ -42,10 +42,26 @@ class _Request:
 
 
 def pad_to_bucket(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket that fits ``n`` requests. ``n`` larger than the
+    biggest bucket is the caller's bug — windows must be split first
+    (``split_window``), otherwise the pad count would go negative and the
+    stacked batch would silently carry ``n`` rows instead of ``nb``."""
     for b in buckets:
         if n <= b:
             return b
-    return buckets[-1]
+    raise ValueError(
+        f"window of {n} requests exceeds the largest batch bucket "
+        f"{buckets[-1]}; split the window before padding")
+
+
+def split_window(n: int, buckets: Sequence[int]) -> List[int]:
+    """Chunk an ``n``-request window into bucket-sized pieces: full largest
+    buckets, then one bucket-padded remainder."""
+    top = buckets[-1]
+    sizes = [top] * (n // top)
+    if n % top:
+        sizes.append(n % top)
+    return sizes
 
 
 class InferenceService:
@@ -142,31 +158,39 @@ class InferenceService:
             reqs = self._collect_window()
             if not reqs:
                 continue
-            t0 = time.monotonic()
-            n = len(reqs)
-            nb = pad_to_bucket(n, self.rt.batch_buckets)
-            self.padded_slots += nb - n
-            obs = np.stack([r.obs_tokens for r in reqs] +
-                           [reqs[-1].obs_tokens] * (nb - n))
-            steps = np.array([r.step for r in reqs] +
-                             [reqs[-1].step] * (nb - n), np.int32)
-            prefix = None
-            if reqs[0].frame is not None:
-                fr = np.stack([r.frame for r in reqs] +
-                              [reqs[-1].frame] * (nb - n))
-                prefix = _frame_to_prefix(fr)
-            tokens, logps, values = self._fn(params, self._next_key(),
-                                             obs, steps, prefix)
-            tokens, logps, values = (np.asarray(tokens), np.asarray(logps),
-                                     np.asarray(values))
-            for i, r in enumerate(reqs):
-                r.future.set_result({
-                    "actions": tokens[i], "logp": logps[i],
-                    "value": float(values[i]), "policy_version": version,
-                })
-            self.batches_run += 1
-            self.requests_served += n
-            self.busy_s += time.monotonic() - t0
+            # oversized windows (inference_batch > largest bucket) are split
+            # into bucket-sized chunks instead of under-padding silently
+            start = 0
+            for size in split_window(len(reqs), self.rt.batch_buckets):
+                self._run_batch(reqs[start:start + size], params, version)
+                start += size
+
+    def _run_batch(self, reqs: List[_Request], params, version: int) -> None:
+        t0 = time.monotonic()
+        n = len(reqs)
+        nb = pad_to_bucket(n, self.rt.batch_buckets)
+        self.padded_slots += nb - n
+        obs = np.stack([r.obs_tokens for r in reqs] +
+                       [reqs[-1].obs_tokens] * (nb - n))
+        steps = np.array([r.step for r in reqs] +
+                         [reqs[-1].step] * (nb - n), np.int32)
+        prefix = None
+        if reqs[0].frame is not None:
+            fr = np.stack([r.frame for r in reqs] +
+                          [reqs[-1].frame] * (nb - n))
+            prefix = _frame_to_prefix(fr)
+        tokens, logps, values = self._fn(params, self._next_key(),
+                                         obs, steps, prefix)
+        tokens, logps, values = (np.asarray(tokens), np.asarray(logps),
+                                 np.asarray(values))
+        for i, r in enumerate(reqs):
+            r.future.set_result({
+                "actions": tokens[i], "logp": logps[i],
+                "value": float(values[i]), "policy_version": version,
+            })
+        self.batches_run += 1
+        self.requests_served += n
+        self.busy_s += time.monotonic() - t0
 
     # -- metrics --------------------------------------------------------------
     def utilization(self) -> float:

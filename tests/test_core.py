@@ -1,9 +1,14 @@
 """Unit + property tests for the paper's core math: GAE value
 recomputation, GIPO, lagged advantage normalization, DWR."""
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (test extra)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import advnorm, gae, gipo
@@ -165,3 +170,53 @@ def test_dwr_uniform_at_init(num_tasks):
     r = DynamicWeightedResampler(num_tasks=num_tasks)
     p = r.probabilities()
     np.testing.assert_allclose(p, 1.0 / num_tasks, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fused-loss path (kernels/dispatch.py): property parity with the reference
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _fused_parity_fixture():
+    import dataclasses
+    from repro.configs import get_config, reduced
+    from repro.core.train_step import init_train_state
+    cfg = reduced(get_config("deepseek-7b"), layers=1, d_model=32)
+    cfg = dataclasses.replace(cfg, param_dtype="float32",
+                              compute_dtype="float32")
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    return cfg, state
+
+
+@given(b=st.integers(1, 3), t=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_fused_loss_property_parity(b, t, seed):
+    """rl.fused_loss=True matches the reference path to fp32 tolerance on
+    the loss AND every parameter gradient, for arbitrary batch shapes
+    (including token counts ragged vs the kernel block size)."""
+    import dataclasses
+    from repro.configs.base import RLConfig
+    from repro.core.train_step import loss_fn
+    from repro.data.trajectory import dummy_batch
+
+    cfg, state = _fused_parity_fixture()
+    batch = dummy_batch(b, t, 5, cfg.action_dim, cfg.vocab_size,
+                        cfg.action_vocab_size, seed=seed)
+    rl_ref = RLConfig(grad_accum=1, entropy_coef=0.01)
+    rl_fused = dataclasses.replace(rl_ref, fused_loss=True)
+
+    (l_ref, _), g_ref = jax.value_and_grad(
+        lambda p: loss_fn(p, batch, state.adv_norm, cfg, rl_ref),
+        has_aux=True)(state.params)
+    (l_f, _), g_f = jax.value_and_grad(
+        lambda p: loss_fn(p, batch, state.adv_norm, cfg, rl_fused),
+        has_aux=True)(state.params)
+
+    assert float(l_f) == pytest.approx(float(l_ref), rel=1e-5, abs=1e-6)
+    for (path, a), (_, b_) in zip(
+            jax.tree_util.tree_leaves_with_path(g_ref),
+            jax.tree_util.tree_leaves_with_path(g_f)):
+        scale = float(jnp.max(jnp.abs(a))) + 1e-8
+        diff = float(jnp.max(jnp.abs(a - b_)))
+        assert diff <= 1e-5 + 1e-4 * scale, (path, diff, scale)

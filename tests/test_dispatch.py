@@ -1,0 +1,231 @@
+"""Dispatch-layer parity tests: the Pallas kernels (interpret mode) and
+their streaming jnp twins must agree with the dense references on forward
+values AND gradients, across dense/GQA shapes and ragged
+``N % block_n != 0`` edges. Also covers mode resolution and the
+fused-vs-reference trainer path (loss + parameter grads)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch, ref
+from repro.kernels.gipo_loss import fused_policy_loss, gipo_head_loss
+
+RNG = np.random.default_rng(11)
+SIGMA = 0.2
+TOL = dict(rtol=2e-4, atol=2e-5)
+
+
+def _tok_data(n, v):
+    return (jnp.asarray(RNG.integers(0, v, n), jnp.int32),
+            jnp.asarray(RNG.standard_normal(n) * 0.3, jnp.float32),
+            jnp.asarray(RNG.standard_normal(n), jnp.float32),
+            jnp.asarray((RNG.random(n) > 0.15).astype(np.float32)))
+
+
+def _combine(out):
+    pg, ent, kl, _ = out
+    return pg + 0.1 * kl - 0.01 * ent
+
+
+def _close(a, b, **kw):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               **(kw or TOL))
+
+
+# ---------------------------------------------------------------------------
+# mode resolution
+# ---------------------------------------------------------------------------
+
+def test_mode_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNELS", raising=False)
+    assert dispatch.resolve_mode() == "auto"
+    assert dispatch.resolve_mode("jnp") == "jnp"
+    with pytest.raises(ValueError):
+        dispatch.resolve_mode("palas")      # config typo must not silently
+    #                                         fall back to auto routing
+    monkeypatch.setenv("REPRO_KERNELS", "pallas")
+    assert dispatch.resolve_mode() == "pallas"
+    assert dispatch.resolve_mode("jnp") == "pallas"       # env beats config
+    with dispatch.forced("jnp"):                          # forced beats env
+        assert dispatch.resolve_mode() == "jnp"
+        assert not dispatch.use_pallas()
+    assert dispatch.resolve_mode() == "pallas"
+    monkeypatch.setenv("REPRO_KERNELS", "bogus")
+    with pytest.raises(ValueError):
+        dispatch.resolve_mode()
+    with pytest.raises(ValueError):
+        dispatch.set_mode("bogus")
+
+
+def test_auto_mode_off_tpu_uses_jnp_twin(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNELS", raising=False)
+    # conftest pins JAX_PLATFORMS=cpu, so auto must route to the twins
+    assert not dispatch.use_pallas()
+    assert dispatch.interpret_mode()
+
+
+# ---------------------------------------------------------------------------
+# fused GIPO loss: logits level
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,v,block_n", [
+    (64, 32, 32),            # exact multiple
+    (300, 64, 128),          # ragged N % block_n
+    (257, 48, 128),          # ragged by one
+    (100, 256, 256),         # single partial block, full action vocab
+])
+@pytest.mark.parametrize("impl", ["pallas", "jnp"])
+def test_gipo_loss_parity(n, v, block_n, impl):
+    logits = jnp.asarray(RNG.standard_normal((n, v)) * 2, jnp.float32)
+    targets, logp_old, adv, mask = _tok_data(n, v)
+
+    def fused(lg):
+        if impl == "pallas":
+            return gipo_head_loss(lg, targets, logp_old, adv, mask,
+                                  SIGMA, block_n, True)
+        return dispatch._jnp_gipo_loss(lg, targets, logp_old, adv, mask,
+                                       SIGMA, block_n)
+
+    def reference(lg):
+        # identity head weight makes the hidden-level oracle a logits oracle
+        return ref.reference_policy_loss(
+            lg, jnp.eye(lg.shape[1], dtype=jnp.float32), targets, logp_old,
+            adv, mask, SIGMA)
+
+    got, exp = fused(logits), reference(logits)
+    for g, e in zip(got[:3], exp[:3]):
+        _close(g, e)
+    for k in exp[3]:
+        _close(got[3][k], exp[3][k])
+    g_f = jax.grad(lambda lg: _combine(fused(lg)))(logits)
+    g_r = jax.grad(lambda lg: _combine(reference(lg)))(logits)
+    _close(g_f, g_r, rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused policy loss: hidden level (action head inside the kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,v,block_n", [
+    (128, 32, 32, 64),
+    (300, 64, 48, 128),      # ragged
+    (65, 16, 256, 64),       # ragged by one, full action vocab
+])
+@pytest.mark.parametrize("impl", ["pallas", "jnp"])
+def test_policy_head_loss_parity(n, d, v, block_n, impl):
+    hidden = jnp.asarray(RNG.standard_normal((n, d)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((d, v)) * 0.2, jnp.float32)
+    targets, logp_old, adv, mask = _tok_data(n, v)
+
+    def fused(h, w_):
+        if impl == "pallas":
+            return fused_policy_loss(h, w_, targets, logp_old, adv, mask,
+                                     SIGMA, block_n, True)
+        return dispatch._jnp_policy_loss(h, w_, targets, logp_old, adv,
+                                         mask, SIGMA, block_n)
+
+    def reference(h, w_):
+        return ref.reference_policy_loss(h, w_, targets, logp_old, adv,
+                                         mask, SIGMA)
+
+    got, exp = fused(hidden, w), reference(hidden, w)
+    for g, e in zip(got[:3], exp[:3]):
+        _close(g, e)
+    dh_f, dw_f = jax.grad(lambda h, w_: _combine(fused(h, w_)),
+                          argnums=(0, 1))(hidden, w)
+    dh_r, dw_r = jax.grad(lambda h, w_: _combine(reference(h, w_)),
+                          argnums=(0, 1))(hidden, w)
+    _close(dh_f, dh_r, rtol=5e-4, atol=5e-5)
+    _close(dw_f, dw_r, rtol=5e-4, atol=5e-5)
+
+
+def test_policy_head_loss_bf16_hidden():
+    n, d, v = 256, 32, 64
+    hidden = jnp.asarray(RNG.standard_normal((n, d)), jnp.bfloat16)
+    w = jnp.asarray(RNG.standard_normal((d, v)) * 0.2, jnp.bfloat16)
+    targets, logp_old, adv, mask = _tok_data(n, v)
+    pg_p, *_ = fused_policy_loss(hidden, w, targets, logp_old, adv, mask,
+                                 SIGMA, 128, True)
+    pg_r, *_ = ref.reference_policy_loss(hidden, w, targets, logp_old, adv,
+                                         mask, SIGMA)
+    assert float(pg_p) == pytest.approx(float(pg_r), rel=5e-2, abs=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# attention routing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,s,h,kv,d", [
+    (1, 128, 128, 4, 4, 64),     # MHA square
+    (2, 128, 128, 4, 1, 64),     # MQA
+    (2, 64, 256, 8, 2, 64),      # GQA, cross lengths
+    (1, 100, 100, 4, 2, 64),     # ragged vs block (padding path)
+])
+@pytest.mark.parametrize("window", [None, 64])
+def test_attention_dispatch_parity(b, t, s, h, kv, d, window):
+    q = jnp.asarray(RNG.standard_normal((b, t, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, kv, d)), jnp.float32)
+    with dispatch.forced("pallas"):
+        out_p = dispatch.attention(q, k, v, window=window, block=64)
+    with dispatch.forced("jnp"):
+        out_j = dispatch.attention(q, k, v, window=window, block=64)
+    exp = ref.reference_attention(q, k, v, window=window)
+    _close(out_p, exp, rtol=2e-5, atol=2e-5)
+    _close(out_j, exp, rtol=2e-5, atol=2e-5)
+
+    def loss(mode):
+        def f(q_, k_, v_):
+            with dispatch.forced(mode):
+                out = dispatch.attention(q_, k_, v_, window=window, block=64)
+            return jnp.sum(out * out)
+        return f
+    g_p = jax.grad(loss("pallas"), argnums=(0, 1, 2))(q, k, v)
+    g_j = jax.grad(loss("jnp"), argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g_p, g_j):
+        _close(a, b_, rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# trainer-path parity: fused loss vs reference (loss AND parameter grads)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["pallas", "jnp"])
+def test_fused_train_loss_matches_reference(mode):
+    from repro.configs import get_config, reduced
+    from repro.configs.base import RLConfig
+    from repro.core.train_step import init_train_state, loss_fn
+    from repro.data.trajectory import dummy_batch
+
+    cfg = reduced(get_config("deepseek-7b"), layers=2, d_model=64)
+    cfg = dataclasses.replace(cfg, param_dtype="float32",
+                              compute_dtype="float32")
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    batch = dummy_batch(4, 3, 6, cfg.action_dim, cfg.vocab_size,
+                        cfg.action_vocab_size)
+    rl_ref = RLConfig(grad_accum=1, entropy_coef=0.01)
+    rl_fused = dataclasses.replace(rl_ref, fused_loss=True)
+
+    def total(p, rl):
+        return loss_fn(p, batch, state.adv_norm, cfg, rl)
+
+    l_ref, (m_ref, _) = total(state.params, rl_ref)
+    g_ref = jax.grad(lambda p: total(p, rl_ref)[0])(state.params)
+    with dispatch.forced(mode):
+        l_f, (m_f, _) = total(state.params, rl_fused)
+        g_f = jax.grad(lambda p: total(p, rl_fused)[0])(state.params)
+
+    _close(l_f, l_ref, rtol=1e-5, atol=1e-6)
+    for key in ("pg_loss", "value_loss", "kl", "entropy", "ratio_mean",
+                "omega_mean", "stale_frac"):
+        _close(m_f[key], m_ref[key], rtol=1e-4, atol=1e-5)
+    flat_ref = jax.tree_util.tree_leaves_with_path(g_ref)
+    flat_f = dict(jax.tree_util.tree_leaves_with_path(g_f))
+    assert len(flat_ref) == len(flat_f)
+    for path, leaf in flat_ref:
+        scale = float(jnp.max(jnp.abs(leaf))) + 1e-8
+        diff = float(jnp.max(jnp.abs(leaf - flat_f[path])))
+        assert diff <= 1e-5 + 1e-4 * scale, (path, diff, scale)

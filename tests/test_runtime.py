@@ -99,7 +99,41 @@ def test_bucket_padding():
     assert pad_to_bucket(1, buckets) == 1
     assert pad_to_bucket(3, buckets) == 4
     assert pad_to_bucket(9, buckets) == 16
-    assert pad_to_bucket(100, buckets) == 32   # capped at the largest
+    # regression: n > largest bucket used to return buckets[-1], making the
+    # pad count negative so the stacked batch silently kept n rows
+    with pytest.raises(ValueError):
+        pad_to_bucket(100, buckets)
+    from repro.runtime.inference import split_window
+    assert split_window(100, buckets) == [32, 32, 32, 4]
+    assert split_window(32, buckets) == [32]
+    assert split_window(5, buckets) == [5]
+    assert sum(split_window(33, buckets)) == 33
+
+
+def test_oversized_window_served_in_chunks():
+    """inference_batch > the largest bucket: every request still gets a
+    correctly-shaped result (the window is split, not under-padded)."""
+    from repro.models.policy import init_policy_params
+    import jax
+    cfg = _tiny()
+    rt = RuntimeConfig(num_inference_workers=1, inference_batch=6,
+                       inference_max_wait_s=2.0, batch_buckets=(1, 2, 4))
+    store = VersionedWeightStore()
+    store.publish(init_policy_params(cfg, jax.random.PRNGKey(0)), 0)
+    from repro.runtime import InferenceService
+    service = InferenceService(cfg, store, rt).start()
+    try:
+        rng = np.random.default_rng(0)
+        futs = [service.submit(
+            rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+            rng.random(192).astype(np.float32), 0) for _ in range(6)]
+        for f in futs:
+            res = f.result(timeout=120.0)
+            assert res["actions"].shape == (cfg.action_dim,)
+        assert service.requests_served == 6
+        assert service.batches_run >= 2     # 6 reqs over max bucket 4 → split
+    finally:
+        service.stop()
 
 
 def test_dynamic_window_trigger_batch_size():
