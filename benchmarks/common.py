@@ -3,6 +3,7 @@ OpenVLA-OFT supervised stand-in), timing helpers, and result I/O."""
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import time
 from typing import Callable, Dict, List, Optional, Tuple
@@ -18,7 +19,12 @@ from repro.models.policy import init_policy_params, policy_forward
 from repro.models.transformer import FRONTEND_DIM
 from repro.optim import adamw
 
-OUT_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "bench"
+# REPRO_BENCH_OUT redirects result JSONs (CI writes fresh numbers to a
+# scratch dir and gates them against the committed experiments/bench
+# baselines via benchmarks.perf_gate)
+OUT_DIR = pathlib.Path(os.environ.get(
+    "REPRO_BENCH_OUT",
+    pathlib.Path(__file__).resolve().parent.parent / "experiments" / "bench"))
 
 
 def tiny_cfg(arch: str = "deepseek-7b", layers: int = 2,

@@ -1,0 +1,165 @@
+"""Perf-regression gate: fresh ``BENCH_*.json`` vs committed baselines.
+
+CI reruns the benchmark suite into a scratch dir (``REPRO_BENCH_OUT``) and
+this gate compares every ``BENCH_*.json`` present in BOTH dirs against the
+baselines committed under ``experiments/bench``:
+
+  * wall-time keys (``t_*_s`` / ``*_ms``) may regress up to ``--tolerance``×
+    the baseline (shared CI runners are noisy — the band is wide by design;
+    the gate catches step-function regressions, not 5% drift);
+  * memory-proxy keys (``*_bytes``) are exact: an increase fails — peak
+    intermediates are deterministic, so any growth is a real regression;
+  * parity keys (``*_abs_diff``) must stay within ``--parity-slack``× of
+    the baseline (floor 1e-3) — a blown-up diff means a kernel broke;
+  * a gated key present in the baseline but missing from the fresh output
+    fails — renaming a metric must not silently un-gate it.
+
+Records inside a JSON list are aligned by their shape signature (the
+subset of ``n/v/d/b/t/h/p/workers`` keys) when present, else by index;
+shapes only one side ran (quick vs full) are skipped.
+
+    PYTHONPATH=src python -m benchmarks.perf_gate \
+        --baseline experiments/bench --fresh /tmp/bench [--tolerance 2.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, List, Tuple
+
+SHAPE_KEYS = ("n", "v", "d", "b", "t", "h", "p", "workers")
+
+
+def _is_time_key(key: str) -> bool:
+    return key.endswith("_s") or key.endswith("_ms")
+
+
+def _is_bytes_key(key: str) -> bool:
+    return key.endswith("_bytes")
+
+
+def _is_parity_key(key: str) -> bool:
+    return key.endswith("_abs_diff")
+
+
+def _signature(rec: Dict) -> Tuple:
+    return tuple((k, rec[k]) for k in SHAPE_KEYS if k in rec)
+
+
+def _gated_key(key: str) -> bool:
+    return _is_time_key(key) or _is_bytes_key(key) or _is_parity_key(key)
+
+
+def _contains_gated(obj) -> bool:
+    """Whether any gated metric lives anywhere inside ``obj``."""
+    if isinstance(obj, dict):
+        return any((_gated_key(k) and isinstance(v, (int, float))
+                    and not isinstance(v, bool)) or _contains_gated(v)
+                   for k, v in obj.items())
+    if isinstance(obj, list):
+        return any(_contains_gated(v) for v in obj)
+    return False
+
+
+def _walk(path: str, base, fresh, tol: float, parity_slack: float,
+          failures: List[str]) -> None:
+    if isinstance(base, dict) and isinstance(fresh, dict):
+        for key in sorted(base):
+            sub = f"{path}.{key}" if path else key
+            if key not in fresh:
+                # anything gated vanishing from the fresh output must not
+                # pass silently — a rename (of the key OR of a container
+                # holding gated keys) would hide a real regression
+                gated_scalar = (_gated_key(key)
+                                and isinstance(base[key], (int, float))
+                                and not isinstance(base[key], bool))
+                if gated_scalar or _contains_gated(base[key]):
+                    failures.append(
+                        f"{sub}: gated metric(s) missing from fresh output")
+                continue
+            _walk(sub, base[key], fresh[key], tol, parity_slack, failures)
+        return
+    if isinstance(base, list) and isinstance(fresh, list):
+        if base and isinstance(base[0], dict) and _signature(base[0]):
+            by_sig = {_signature(r): r for r in fresh
+                      if isinstance(r, dict)}
+            for rec in base:
+                sig = _signature(rec)
+                if sig in by_sig:
+                    label = ",".join(f"{k}={v}" for k, v in sig)
+                    _walk(f"{path}[{label}]", rec, by_sig[sig], tol,
+                          parity_slack, failures)
+        else:
+            for i, (b, f) in enumerate(zip(base, fresh)):
+                _walk(f"{path}[{i}]", b, f, tol, parity_slack, failures)
+        return
+    if not isinstance(base, (int, float)) or isinstance(base, bool):
+        return
+    key = path.rsplit(".", 1)[-1]
+    if _is_time_key(key):
+        if fresh > base * tol:
+            failures.append(
+                f"{path}: {fresh:.6g} > {tol:g}x baseline {base:.6g}")
+    elif _is_bytes_key(key):
+        if fresh > base:
+            failures.append(
+                f"{path}: memory proxy grew {base:.0f} -> {fresh:.0f} bytes")
+    elif _is_parity_key(key):
+        bound = max(base * parity_slack, 1e-3)
+        if fresh > bound:
+            failures.append(
+                f"{path}: parity diff {fresh:.6g} > bound {bound:.6g}")
+
+
+def gate(baseline_dir: pathlib.Path, fresh_dir: pathlib.Path, *,
+         tolerance: float = 2.0, parity_slack: float = 10.0
+         ) -> Tuple[List[str], List[str]]:
+    """Returns (checked file names, failure messages)."""
+    checked, failures = [], []
+    for base_path in sorted(baseline_dir.glob("BENCH_*.json")):
+        fresh_path = fresh_dir / base_path.name
+        if not fresh_path.exists():
+            failures.append(f"{base_path.name}: fresh run missing "
+                            f"(benchmark did not produce it)")
+            continue
+        checked.append(base_path.name)
+        _walk("", json.loads(base_path.read_text()),
+              json.loads(fresh_path.read_text()), tolerance, parity_slack,
+              failures)
+    return checked, failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="experiments/bench",
+                    help="committed baseline dir")
+    ap.add_argument("--fresh", required=True,
+                    help="dir holding this run's BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="wall-time regression band (fresh <= tol * base)")
+    ap.add_argument("--parity-slack", type=float, default=10.0,
+                    help="allowed growth of *_abs_diff parity keys")
+    args = ap.parse_args()
+
+    checked, failures = gate(pathlib.Path(args.baseline),
+                             pathlib.Path(args.fresh),
+                             tolerance=args.tolerance,
+                             parity_slack=args.parity_slack)
+    if not checked and not failures:
+        print("perf gate: no BENCH_*.json baselines found — nothing gated")
+        return
+    for name in checked:
+        print(f"perf gate: checked {name}")
+    if failures:
+        print(f"perf gate: {len(failures)} regression(s)")
+        for f in failures:
+            print(f"  FAIL {f}")
+        sys.exit(1)
+    print(f"perf gate: OK ({len(checked)} file(s) within "
+          f"{args.tolerance:g}x band)")
+
+
+if __name__ == "__main__":
+    main()

@@ -50,6 +50,9 @@ def main() -> None:
     ap.add_argument("--algo", default="gipo", choices=("gipo", "ppo"))
     ap.add_argument("--sync", action="store_true",
                     help="run the synchronous BASELINE instead (Fig. 1 left)")
+    ap.add_argument("--backpressure", default="drop_oldest",
+                    choices=("drop_oldest", "drop_newest", "block"),
+                    help="experience-channel policy when B is full")
     args = ap.parse_args()
 
     from common import bc_train, collect_demos, eval_policy  # benchmarks/
@@ -65,7 +68,8 @@ def main() -> None:
 
     rl = RLConfig(algo=args.algo, grad_accum=1, lr_policy=5e-5,
                   lr_value=5e-4, gipo_sigma=0.5, kl_coef=0.05)
-    rt = RuntimeConfig(num_rollout_workers=args.workers, inference_batch=8)
+    rt = RuntimeConfig(num_rollout_workers=args.workers, inference_batch=8,
+                       replay_backpressure=args.backpressure)
     sys_ = AcceRLSystem(cfg, rl, rt, suite=args.suite, segment_horizon=6,
                         max_episode_steps=14, batch_episodes=8,
                         latency=lognormal_latency(2.0, sigma=1.0))
@@ -74,6 +78,7 @@ def main() -> None:
     mode = "SYNC baseline" if args.sync else "ASYNC AcceRL"
     print(f"[2/3] {mode}: {args.steps} trainer steps, "
           f"{args.workers} rollout workers")
+    # same services either way — only the scheduler differs
     runner = sys_.run_sync if args.sync else sys_.run_async
     m = runner(train_steps=args.steps,
                wall_timeout_s=args.wall_minutes * 60)
@@ -81,6 +86,9 @@ def main() -> None:
           f"trainer util {m['trainer_util']:.2f} | "
           f"policy lag {m['mean_policy_lag']:.2f} | "
           f"rollout success {m['success_rate']:.2f}")
+    unhealthy = {k: h for k, h in sys_.health().items() if not h["healthy"]}
+    if unhealthy:
+        print(f"      WARNING unhealthy services: {unhealthy}")
 
     print("[3/3] final evaluation")
     final = sys_.evaluate(episodes=20)

@@ -236,6 +236,14 @@ class RuntimeConfig:
     drain: bool = True               # inference-drain protocol (App. D.6)
     prefetch_depth: int = 2
     batch_buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)  # TPU-friendly pads
+    # -- experience channels (runtime/experience.py) -------------------------
+    # Backpressure when the segment channel is full: "drop_oldest" is the
+    # paper's fully-asynchronous mode (producers never block); "drop_newest"
+    # keeps queued data; "block" clamps rollout to trainer throughput.
+    replay_backpressure: str = "drop_oldest"
+    # WM mode: target share of REAL segments in the policy trainer's batch
+    # (MixedExperienceSource over B and B_img). 0.0 = paper §4 (pure B_img).
+    mix_real_fraction: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,10 +1,16 @@
 """Asynchronous parallel data prefetching (paper App. D.5).
 
-A background producer thread watches the FIFO replay buffer, assembles
+A background producer thread watches an experience source, assembles
 ready-to-train super-batches (tensorization + batching off the critical
 path), and parks them in a bounded local cache; the trainer pops fully
 formed batches. While the accelerator runs step ``k``, the prefetcher
 prepares the data for step ``k+1``.
+
+The source is anything exposing ``pop_batch(n, timeout)`` — a
+:class:`~repro.data.replay.FIFOReplayBuffer`, a
+:class:`~repro.runtime.experience.FifoChannel`, or a
+:class:`~repro.runtime.experience.MixedExperienceSource` blending real and
+imagined segments.
 """
 from __future__ import annotations
 
@@ -12,13 +18,11 @@ import queue
 import threading
 from typing import Callable, Optional
 
-from repro.data.replay import FIFOReplayBuffer
-
 
 class Prefetcher:
-    def __init__(self, buffer: FIFOReplayBuffer, batch_size: int,
+    def __init__(self, source, batch_size: int,
                  collate: Callable, depth: int = 2):
-        self.buffer = buffer
+        self.source = source
         self.batch_size = batch_size
         self.collate = collate
         self._cache: queue.Queue = queue.Queue(maxsize=depth)
@@ -33,7 +37,7 @@ class Prefetcher:
 
     def _run(self) -> None:
         while not self._stop.is_set():
-            segments = self.buffer.pop_batch(self.batch_size, timeout=0.1)
+            segments = self.source.pop_batch(self.batch_size, timeout=0.1)
             if segments is None:
                 continue
             batch = self.collate(segments)
@@ -54,4 +58,5 @@ class Prefetcher:
 
     def stop(self) -> None:
         self._stop.set()
-        self._thread.join(timeout=2.0)
+        if self._thread.ident is not None:   # only join a started thread
+            self._thread.join(timeout=2.0)

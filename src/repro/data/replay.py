@@ -6,6 +6,17 @@ of imagined segments.
 All buffers are host-side, thread-safe, and hold numpy pytrees (trajectory
 segments). The trainer-side batching/tensorization happens in the
 prefetcher so the training critical path stays clean (App. D.5).
+
+The FIFO buffer supports pluggable backpressure policies (consumed through
+:mod:`repro.runtime.experience`, which layers the ExperienceChannel
+abstraction on top of these buffers):
+
+  * ``drop_oldest`` — the paper's fully-asynchronous default: producers
+    never block, the stalest segments are evicted;
+  * ``drop_newest`` — reject the incoming segment (bounded staleness:
+    what is already queued wins);
+  * ``block``       — producers wait (bounded by a timeout) for the
+    consumer, i.e. rollout throughput is clamped to trainer throughput.
 """
 from __future__ import annotations
 
@@ -15,32 +26,53 @@ from typing import Any, List, Optional
 
 import numpy as np
 
+BACKPRESSURE_POLICIES = ("drop_oldest", "drop_newest", "block")
+
 
 class FIFOReplayBuffer:
-    """Non-blocking FIFO segment queue (the paper's ``B``).
+    """FIFO segment queue (the paper's ``B``).
 
     Producers ``push`` trajectory segments as episodes complete; the trainer
     ``pop_batch``es the oldest segments (single-epoch semantics — each
-    segment is trained on once). When full, the oldest data is dropped so
-    rollout workers never block (full asynchrony).
+    segment is trained on once). The ``policy`` decides what happens when
+    the buffer is full; the default ``drop_oldest`` never blocks the
+    producer (full asynchrony).
     """
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int, policy: str = "drop_oldest"):
+        if policy not in BACKPRESSURE_POLICIES:
+            raise ValueError(f"policy must be one of "
+                             f"{BACKPRESSURE_POLICIES}, got {policy!r}")
         self.capacity = capacity
+        self.policy = policy
         self._q: collections.deque = collections.deque()
         self._lock = threading.Lock()
         self._not_empty = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
         self.total_pushed = 0
         self.total_dropped = 0
 
-    def push(self, segment: Any) -> None:
+    def push(self, segment: Any, timeout: float = 0.5) -> bool:
+        """Add a segment; returns False iff it was rejected (``drop_newest``
+        full, or ``block`` timed out waiting for space)."""
         with self._lock:
             if len(self._q) >= self.capacity:
-                self._q.popleft()
-                self.total_dropped += 1
+                if self.policy == "drop_oldest":
+                    self._q.popleft()
+                    self.total_dropped += 1
+                elif self.policy == "drop_newest":
+                    self.total_dropped += 1
+                    return False
+                else:  # block
+                    if not self._not_full.wait_for(
+                            lambda: len(self._q) < self.capacity,
+                            timeout=timeout):
+                        self.total_dropped += 1
+                        return False
             self._q.append(segment)
             self.total_pushed += 1
             self._not_empty.notify_all()
+            return True
 
     def __len__(self) -> int:
         with self._lock:
@@ -53,7 +85,17 @@ class FIFOReplayBuffer:
             if not self._not_empty.wait_for(lambda: len(self._q) >= n,
                                             timeout=timeout):
                 return None
-            return [self._q.popleft() for _ in range(n)]
+            out = [self._q.popleft() for _ in range(n)]
+            self._not_full.notify_all()
+            return out
+
+    def drain(self) -> List[Any]:
+        """Pop everything currently queued (sync-mode round collection)."""
+        with self._lock:
+            out = list(self._q)
+            self._q.clear()
+            self._not_full.notify_all()
+            return out
 
     def peek_depth(self) -> int:
         return len(self)

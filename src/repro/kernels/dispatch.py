@@ -217,6 +217,61 @@ def _flash_bwd(window, block_q, block_k, interpret, res, g):
 _flash_with_twin_bwd.defvjp(_flash_fwd, _flash_bwd)
 
 
+# ---------------------------------------------------------------------------
+# SSD scan (Mamba2): Pallas chunked kernel forward + jnp-twin recompute bwd
+# ---------------------------------------------------------------------------
+
+def _twin_ssd(x, dt, A, Bm, Cm, chunk):
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd_with_twin_bwd(x, dt, A, Bm, Cm, chunk, interpret):
+    from repro.kernels.ssd_scan import ssd_scan as _pallas_ssd
+    return _pallas_ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+def _ssd_fwd(x, dt, A, Bm, Cm, chunk, interpret):
+    out = _ssd_with_twin_bwd(x, dt, A, Bm, Cm, chunk, interpret)
+    return out, (x, dt, A, Bm, Cm)
+
+
+def _ssd_bwd(chunk, interpret, res, g):
+    # Backward = VJP of the numerically-matching chunked jnp twin,
+    # recomputed from the saved operands (custom Pallas backward deferred —
+    # mirrors the flash-attention twin-bwd pattern).
+    x, dt, A, Bm, Cm = res
+    _, vjp = jax.vjp(
+        lambda x_, dt_, a_, b_, c_: _twin_ssd(x_, dt_, a_, b_, c_, chunk),
+        x, dt, A, Bm, Cm)
+    return vjp(g)
+
+
+_ssd_with_twin_bwd.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128,
+             mode: Optional[str] = None):
+    """Chunked Mamba2 SSD scan. x: [B,T,H,P]; dt: [B,T,H] (f32,
+    post-softplus); A: [H] (negative); Bm/Cm: [B,T,N] (single group).
+    Returns (y [B,T,H,P] f32, final_state [B,H,P,N] f32).
+
+    Routes to the Pallas kernel when enabled and shape-eligible (the
+    kernel wants T an exact multiple of ``chunk``; ragged lengths and
+    decode-time carried state stay on the jnp path). Backward is the jnp
+    twin's VJP recomputed from the operands either way.
+    """
+    t = x.shape[1]
+    if use_pallas(mode) and t >= chunk and t % chunk == 0:
+        return _ssd_with_twin_bwd(x, dt, A, Bm, Cm, chunk, interpret_mode())
+    return _twin_ssd(x, dt, A, Bm, Cm, chunk)
+
+
+# ---------------------------------------------------------------------------
+# Attention routing
+# ---------------------------------------------------------------------------
+
 def attention(q, k, v, *, window: Optional[int] = None, block: int = 128,
               unroll: bool = False, mode: Optional[str] = None):
     """Causal (optionally sliding-window) blockwise attention on projected

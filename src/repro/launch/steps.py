@@ -67,18 +67,15 @@ def seq_loss_fn(params, batch: Dict[str, jnp.ndarray], adv_state,
     tokens = batch["tokens"]
     b, s = tokens.shape
     window = cfg.sliding_window
+    fused = rl.fused_loss and rl.algo == "gipo"
     out = transformer.forward(cfg, params, tokens,
                               batch.get("prefix"), window=window,
                               remat=remat, block=block, unroll=unroll,
-                              act_sharding=act_sharding)
+                              act_sharding=act_sharding, head=not fused)
     # next-token factorization: logits[:, t] scores tokens[:, t+1]
     p = out["hidden"].shape[1] - s          # prefix length
     hidden = out["hidden"][:, p:]
-    logits = out["logits"][:, p:][:, :-1]                       # [B,S-1,Va]
     targets = tokens[:, 1:] % cfg.action_vocab_size
-    logp_all = jax.nn.log_softmax(logits, axis=-1)
-    logp_new = jnp.take_along_axis(
-        logp_all, targets[..., None], axis=-1)[..., 0]          # [B,S-1]
 
     # --- JIT value recomputation (App. C.1): values from THIS forward ----
     positions = jnp.arange(s)
@@ -91,15 +88,32 @@ def seq_loss_fn(params, batch: Dict[str, jnp.ndarray], adv_state,
 
     mask = batch["mask"]
     logp_old = batch["behavior_logp"][:, 1:]
-    if rl.algo == "gipo":
-        pg, pg_m = gipo.gipo_loss(logp_new[..., None], logp_old[..., None],
-                                  adv_n, mask, rl.gipo_sigma)
+    if fused:
+        # action head + GIPO/entropy/KL block-fused on hidden states
+        # (kernels/dispatch.py) — no [B,S,Va] logits or log-softmax in HBM
+        from repro.kernels import dispatch
+        pg, _ent, kl, pg_m = dispatch.policy_head_loss(
+            hidden[:, :-1].reshape(b * (s - 1), -1),
+            params["action_head"]["w"], targets.reshape(-1),
+            logp_old.reshape(-1), adv_n.reshape(-1), mask.reshape(-1),
+            sigma=rl.gipo_sigma, mode=rl.kernel_dispatch)
+        pg_m = jax.tree.map(jax.lax.stop_gradient, pg_m)
     else:
-        pg, pg_m = gipo.ppo_loss(logp_new[..., None], logp_old[..., None],
-                                 adv_n, mask, rl.ppo_clip)
+        logits = out["logits"][:, p:][:, :-1]                   # [B,S-1,Va]
+        logp_all = jax.nn.log_softmax(logits, axis=-1)
+        logp_new = jnp.take_along_axis(
+            logp_all, targets[..., None], axis=-1)[..., 0]      # [B,S-1]
+        if rl.algo == "gipo":
+            pg, pg_m = gipo.gipo_loss(logp_new[..., None],
+                                      logp_old[..., None], adv_n, mask,
+                                      rl.gipo_sigma)
+        else:
+            pg, pg_m = gipo.ppo_loss(logp_new[..., None],
+                                     logp_old[..., None], adv_n, mask,
+                                     rl.ppo_clip)
+        kl = gipo.kl_penalty(logp_new[..., None], logp_old[..., None], mask)
     v_loss = gipo.value_loss(values[:, :-1], jax.lax.stop_gradient(returns),
                              mask)
-    kl = gipo.kl_penalty(logp_new[..., None], logp_old[..., None], mask)
     total = pg + rl.value_coef * v_loss + rl.kl_coef * kl
     if cfg.arch_type == "moe":
         total = total + out["aux"]["load_balance"] + out["aux"]["router_z"]

@@ -33,6 +33,13 @@ def main() -> None:
     ap.add_argument("--local", action="store_true",
                     help="reduced config on the local device mesh (CPU demo)")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fused-loss", action="store_true",
+                    help="run the action head + GIPO loss tail block-fused "
+                         "(kernels/dispatch.py) — no [B,S,Va] logits in HBM")
+    ap.add_argument("--kernel-dispatch", default="auto",
+                    choices=("auto", "pallas", "jnp"),
+                    help="hot-op routing: Pallas on TPU / jnp twins "
+                         "elsewhere (auto), or force one side")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -46,7 +53,13 @@ def main() -> None:
     else:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
 
-    rl = RLConfig()
+    rl = RLConfig(fused_loss=args.fused_loss,
+                  kernel_dispatch=args.kernel_dispatch)
+    if args.kernel_dispatch != "auto":
+        # process-wide routing so attention / ssd_scan inside the
+        # transformer follow the same side as the loss tail
+        from repro.kernels import dispatch
+        dispatch.set_mode(args.kernel_dispatch)
     accum = steps.choose_accum(cfg, shape, mesh)
     structs, batch_structs, sspec, bspec = steps.train_specs(
         cfg, shape, mesh, accum=accum)

@@ -186,7 +186,15 @@ def ssm_forward(params: Params, u: jnp.ndarray, d_model: int, cfg: SSMConfig,
     xs, Bm, Cm = jnp.split(xbc, [di, di + g * n], axis=-1)
     x = xs.reshape(b, t, nh, p)
     A = -jnp.exp(params["A_log"])
-    y, S_final = ssd_chunked(x, dt, A, Bm, Cm, cfg.chunk, init_state=ssm0)
+    if ssm0 is None:
+        # fresh-sequence scan goes through the kernel dispatch layer
+        # (Pallas on TPU, this module's chunked jnp form elsewhere);
+        # carried-state prefill keeps the jnp path below
+        from repro.kernels import dispatch
+        y, S_final = dispatch.ssd_scan(x, dt, A, Bm, Cm, chunk=cfg.chunk)
+    else:
+        y, S_final = ssd_chunked(x, dt, A, Bm, Cm, cfg.chunk,
+                                 init_state=ssm0)
     y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
     y = y.reshape(b, t, di).astype(u.dtype)
     out = _gated_norm(params, y, z) @ params["out_proj"]

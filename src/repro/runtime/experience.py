@@ -1,0 +1,187 @@
+"""ExperienceChannel: the typed data plane between runtime services.
+
+The paper's pipeline moves experience through three conceptual channels —
+``B`` (real trajectory segments → trainer), ``B_wm`` (real transitions →
+world-model trainers + imagination seeds), and ``B_img`` (imagined segments
+→ trainer). This module gives them one abstraction over the host-side
+buffers in :mod:`repro.data.replay`:
+
+  * :class:`FifoChannel`   — streaming single-epoch segments with a
+    pluggable backpressure policy (drop_oldest / drop_newest / block);
+  * :class:`RingChannel`   — uniform-resampling transitions;
+  * :class:`MixedExperienceSource` — composes a real and an imagined
+    channel at a configurable real fraction, so the trainer consumes ONE
+    source regardless of whether a world model is attached (the mix ratio
+    is how §4's "policy trains on B_img" generalizes to hybrid diets).
+
+Everything exposing ``pop_batch(n, timeout)`` is a valid trainer source
+(the :class:`~repro.data.prefetch.Prefetcher` contract).
+"""
+from __future__ import annotations
+
+import abc
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.data.replay import (BACKPRESSURE_POLICIES, FIFOReplayBuffer,
+                               RingReplayBuffer)
+
+__all__ = ["BACKPRESSURE_POLICIES", "ExperienceChannel", "FifoChannel",
+           "RingChannel", "MixedExperienceSource"]
+
+
+class ExperienceChannel(abc.ABC):
+    """Producer-facing contract: non-blocking-ish ``put`` + depth + stats."""
+
+    @abc.abstractmethod
+    def put(self, item: Any) -> bool:
+        """Offer one item; False iff rejected by the backpressure policy."""
+
+    @abc.abstractmethod
+    def __len__(self) -> int:
+        ...
+
+    def stats(self) -> Dict[str, float]:
+        return {"depth": float(len(self))}
+
+
+class FifoChannel(ExperienceChannel):
+    """Streaming segment channel (B / B_img): FIFO, single-epoch pops."""
+
+    def __init__(self, capacity: int, *, policy: str = "drop_oldest",
+                 block_timeout: float = 0.5):
+        self._buf = FIFOReplayBuffer(capacity, policy=policy)
+        self._block_timeout = block_timeout
+
+    @property
+    def policy(self) -> str:
+        return self._buf.policy
+
+    @property
+    def capacity(self) -> int:
+        return self._buf.capacity
+
+    def put(self, item: Any) -> bool:
+        return self._buf.push(item, timeout=self._block_timeout)
+
+    def pop_batch(self, n: int, timeout: Optional[float] = None
+                  ) -> Optional[List[Any]]:
+        return self._buf.pop_batch(n, timeout=timeout)
+
+    def drain(self) -> List[Any]:
+        return self._buf.drain()
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    @property
+    def total_pushed(self) -> int:
+        return self._buf.total_pushed
+
+    @property
+    def total_dropped(self) -> int:
+        return self._buf.total_dropped
+
+    def stats(self) -> Dict[str, float]:
+        return {"depth": float(len(self)),
+                "pushed": float(self.total_pushed),
+                "dropped": float(self.total_dropped)}
+
+
+class RingChannel(ExperienceChannel):
+    """Resampling transition channel (B_wm): ring storage, uniform sample."""
+
+    def __init__(self, capacity: int, seed: int = 0):
+        self._buf = RingReplayBuffer(capacity, seed=seed)
+
+    def put(self, item: Any) -> bool:
+        self._buf.push(item)
+        return True
+
+    def sample(self, n: int) -> Optional[List[Any]]:
+        return self._buf.sample(n)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    @property
+    def total_pushed(self) -> int:
+        return self._buf.total_pushed
+
+    def stats(self) -> Dict[str, float]:
+        return {"depth": float(len(self)),
+                "pushed": float(self.total_pushed)}
+
+
+class MixedExperienceSource:
+    """Compose a real and an imagined FIFO channel into one trainer source.
+
+    ``real_fraction`` sets the target share of real segments per batch.
+    For intermediate fractions, a starved side is backfilled by the other
+    so the trainer never stalls on the mix (availability beats ratio).
+    The extremes are HARD pins: ``0.0`` reproduces the paper's WM mode —
+    the policy trains purely on B_img and waits for imagination rather
+    than silently consuming real segments — and ``1.0`` is the pure
+    model-free diet.
+
+    Single-consumer source (the trainer's prefetcher): items gathered
+    before a timeout are carried to the next ``pop_batch`` call, so
+    batches are always exactly ``n`` items and nothing is dropped.
+    """
+
+    def __init__(self, real, imagined, *, real_fraction: float = 0.0):
+        if not 0.0 <= real_fraction <= 1.0:
+            raise ValueError(f"real_fraction must be in [0, 1], "
+                             f"got {real_fraction}")
+        self.real = real
+        self.imagined = imagined
+        self.real_fraction = real_fraction
+        self.real_consumed = 0
+        self.imagined_consumed = 0
+        self._pending: List[Any] = []
+
+    def _take(self, chan, k: int) -> int:
+        got = chan.pop_batch(min(k, len(chan)), timeout=0) if k else None
+        if got:
+            self._pending.extend(got)
+            return len(got)
+        return 0
+
+    def pop_batch(self, n: int, timeout: Optional[float] = None,
+                  poll_s: float = 0.005) -> Optional[List[Any]]:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        want_real = int(round(n * self.real_fraction))
+        taken_real = 0
+        while True:
+            need = n - len(self._pending)
+            if need <= 0:
+                out, self._pending = (self._pending[:n],
+                                      self._pending[n:])
+                return out
+            # real share first (capped by availability); backfill across
+            # sides only for intermediate fractions — the extremes are
+            # hard pins (0.0 never touches real, 1.0 never imagined)
+            k_real = min(max(want_real - taken_real, 0), len(self.real))
+            if (0.0 < self.real_fraction
+                    and len(self.imagined) < need - k_real):
+                k_real = min(need - len(self.imagined), len(self.real))
+            got_real = self._take(self.real, min(k_real, need))
+            taken_real += got_real
+            self.real_consumed += got_real
+            k_img = need - got_real if self.real_fraction < 1.0 else 0
+            got_img = self._take(self.imagined, k_img)
+            self.imagined_consumed += got_img
+            if len(self._pending) >= n:
+                continue
+            if deadline is not None and time.monotonic() >= deadline:
+                return None        # gathered items carry to the next call
+            time.sleep(poll_s)
+
+    def __len__(self) -> int:
+        return len(self.real) + len(self.imagined)
+
+    def stats(self) -> Dict[str, float]:
+        return {"depth": float(len(self)),
+                "real_consumed": float(self.real_consumed),
+                "imagined_consumed": float(self.imagined_consumed),
+                "real_fraction": self.real_fraction}

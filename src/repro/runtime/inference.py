@@ -12,6 +12,12 @@ bucket size so the jitted program never recompiles for new batch shapes.
 The drain protocol (App. D.6): when the weight store raises its drain flag,
 workers stop scheduling NEW batches, finish the in-flight one, then swap
 weights in place before resuming — update atomicity + version consistency.
+
+The pool is a :class:`~repro.runtime.service.Service` with one thread per
+``rt.num_inference_workers``. The live window parameters
+(``window_batch`` / ``window_wait_s``) are mutable so a scheduler can
+re-shape the eq.-1 trigger — the barrier scheduler widens the window to
+one-batch-per-lockstep-tick to reproduce the synchronous step barrier.
 """
 from __future__ import annotations
 
@@ -19,7 +25,7 @@ import queue
 import threading
 import time
 from concurrent.futures import Future
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -27,6 +33,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, RuntimeConfig
 from repro.models.policy import make_inference_fn
 from repro.models.transformer import FRONTEND_DIM
+from repro.runtime.service import Service
 from repro.runtime.weight_store import VersionedWeightStore
 
 
@@ -64,27 +71,39 @@ def split_window(n: int, buckets: Sequence[int]) -> List[int]:
     return sizes
 
 
-class InferenceService:
+class InferenceService(Service):
     """Centralized inference pool: one shared queue, N worker threads."""
 
     def __init__(self, cfg: ModelConfig, store: VersionedWeightStore,
                  rt: RuntimeConfig, *, temperature: float = 1.0, seed: int = 0):
+        super().__init__("inference", role="inference")
         self.cfg = cfg
         self.store = store
         self.rt = rt
         self._fn = make_inference_fn(cfg, temperature)
         self._q: "queue.Queue[_Request]" = queue.Queue()
-        self._stop = threading.Event()
-        self._threads: List[threading.Thread] = []
         self._key = jax.random.PRNGKey(seed)
         self._key_lock = threading.Lock()
-        # metrics
-        self.batches_run = 0
-        self.requests_served = 0
-        self.busy_s = 0.0
-        self.started_at: Optional[float] = None
-        self.weight_swaps = 0
-        self.padded_slots = 0
+        # live eq.-1 window parameters (schedulers may re-shape these)
+        self.window_batch = rt.inference_batch
+        self.window_wait_s = rt.inference_max_wait_s
+
+    # -- registry-backed counters ----------------------------------------------
+    @property
+    def batches_run(self) -> int:
+        return int(self.metrics.counter("batches"))
+
+    @property
+    def requests_served(self) -> int:
+        return int(self.metrics.counter("requests"))
+
+    @property
+    def padded_slots(self) -> int:
+        return int(self.metrics.counter("padded_slots"))
+
+    @property
+    def weight_swaps(self) -> int:
+        return int(self.metrics.counter("weight_swaps"))
 
     # -- client API -----------------------------------------------------------
     def submit(self, obs_tokens: np.ndarray, frame: Optional[np.ndarray],
@@ -94,20 +113,9 @@ class InferenceService:
         self._q.put(req)
         return req.future
 
-    # -- lifecycle --------------------------------------------------------------
-    def start(self) -> "InferenceService":
-        self.started_at = time.monotonic()
-        for i in range(self.rt.num_inference_workers):
-            t = threading.Thread(target=self._run, daemon=True,
-                                 name=f"inference-{i}")
-            t.start()
-            self._threads.append(t)
-        return self
-
-    def stop(self) -> None:
-        self._stop.set()
-        for t in self._threads:
-            t.join(timeout=5.0)
+    # -- service surface --------------------------------------------------------
+    def _thread_targets(self):
+        return [self._run] * self.rt.num_inference_workers
 
     # -- worker loop --------------------------------------------------------------
     def _next_key(self):
@@ -117,11 +125,10 @@ class InferenceService:
 
     def _collect_window(self) -> List[_Request]:
         """Dynamic-window batching, eq. 1."""
-        B = self.rt.inference_batch
-        t_max = self.rt.inference_max_wait_s
         reqs: List[_Request] = []
         t_first = None
         while not self._stop.is_set():
+            b, t_max = self.window_batch, self.window_wait_s
             timeout = 0.002 if t_first is None else max(
                 0.0, t_max - (time.monotonic() - t_first))
             try:
@@ -131,20 +138,12 @@ class InferenceService:
                     t_first = r.t_arrival
             except queue.Empty:
                 pass
-            if reqs and (len(reqs) >= B or
+            if reqs and (len(reqs) >= b or
                          time.monotonic() - t_first >= t_max):
                 return reqs
         return reqs
 
     def _run(self) -> None:
-        try:
-            self._run_inner()
-        except Exception:   # noqa: BLE001 — surface worker crashes
-            import traceback
-            traceback.print_exc()
-            raise
-
-    def _run_inner(self) -> None:
         params, version = None, -1
         while not self._stop.is_set():
             # drain protocol: no NEW batch while the trainer is publishing
@@ -152,13 +151,13 @@ class InferenceService:
                 got = self.store.acquire(newer_than=version, timeout=0.1)
                 if got is not None:
                     params, version = got
-                    self.weight_swaps += 1
+                    self.metrics.inc("weight_swaps")
                 if params is None:
                     continue
             reqs = self._collect_window()
             if not reqs:
                 continue
-            # oversized windows (inference_batch > largest bucket) are split
+            # oversized windows (window_batch > largest bucket) are split
             # into bucket-sized chunks instead of under-padding silently
             start = 0
             for size in split_window(len(reqs), self.rt.batch_buckets):
@@ -166,38 +165,30 @@ class InferenceService:
                 start += size
 
     def _run_batch(self, reqs: List[_Request], params, version: int) -> None:
-        t0 = time.monotonic()
-        n = len(reqs)
-        nb = pad_to_bucket(n, self.rt.batch_buckets)
-        self.padded_slots += nb - n
-        obs = np.stack([r.obs_tokens for r in reqs] +
-                       [reqs[-1].obs_tokens] * (nb - n))
-        steps = np.array([r.step for r in reqs] +
-                         [reqs[-1].step] * (nb - n), np.int32)
-        prefix = None
-        if reqs[0].frame is not None:
-            fr = np.stack([r.frame for r in reqs] +
-                          [reqs[-1].frame] * (nb - n))
-            prefix = _frame_to_prefix(fr)
-        tokens, logps, values = self._fn(params, self._next_key(),
-                                         obs, steps, prefix)
-        tokens, logps, values = (np.asarray(tokens), np.asarray(logps),
-                                 np.asarray(values))
-        for i, r in enumerate(reqs):
-            r.future.set_result({
-                "actions": tokens[i], "logp": logps[i],
-                "value": float(values[i]), "policy_version": version,
-            })
-        self.batches_run += 1
-        self.requests_served += n
-        self.busy_s += time.monotonic() - t0
-
-    # -- metrics --------------------------------------------------------------
-    def utilization(self) -> float:
-        if not self.started_at:
-            return 0.0
-        wall = time.monotonic() - self.started_at
-        return self.busy_s / max(wall, 1e-9)
+        with self.metrics.timer("busy_s"):
+            n = len(reqs)
+            nb = pad_to_bucket(n, self.rt.batch_buckets)
+            self.metrics.inc("padded_slots", nb - n)
+            obs = np.stack([r.obs_tokens for r in reqs] +
+                           [reqs[-1].obs_tokens] * (nb - n))
+            steps = np.array([r.step for r in reqs] +
+                             [reqs[-1].step] * (nb - n), np.int32)
+            prefix = None
+            if reqs[0].frame is not None:
+                fr = np.stack([r.frame for r in reqs] +
+                              [reqs[-1].frame] * (nb - n))
+                prefix = _frame_to_prefix(fr)
+            tokens, logps, values = self._fn(params, self._next_key(),
+                                             obs, steps, prefix)
+            tokens, logps, values = (np.asarray(tokens), np.asarray(logps),
+                                     np.asarray(values))
+            for i, r in enumerate(reqs):
+                r.future.set_result({
+                    "actions": tokens[i], "logp": logps[i],
+                    "value": float(values[i]), "policy_version": version,
+                })
+            self.metrics.inc("batches")
+            self.metrics.inc("requests", n)
 
 
 def _frame_to_prefix(frames: np.ndarray) -> np.ndarray:

@@ -1,27 +1,39 @@
-"""Orchestrator: wires rollout workers, the inference pool, and the trainer
-into (a) the fully asynchronous AcceRL pipeline or (b) the synchronous
-baseline with its three long-tail barriers (paper Fig. 1).
+"""Orchestrator: composes the runtime services — rollout workers, the
+inference pool, the trainer — on a :class:`ServiceRegistry` and runs them
+under a :class:`~repro.runtime.scheduler.Scheduler`:
 
-In synchronous mode the SAME components run, but the orchestrator enforces
-the barriers: all workers must finish their episode batch before training
-starts, and training blocks rollouts — reproducing step/episode/cluster
-idle bubbles so the throughput benchmark measures the paper's Table 1
-contrast structurally.
+  * ``run_async``  — :class:`FreeRunScheduler`, the fully asynchronous
+    AcceRL pipeline (paper §3);
+  * ``run_sync``   — :class:`BarrierScheduler`, the synchronous baseline
+    with its step/episode/cluster barriers (paper Fig. 1) — the SAME
+    services, only paced differently.
+
+Extensions attach through ``system.attach(...)``: an attachment registers
+additional services on the bus and may rewire the trainer's experience
+source — the world model (paper §4) plugs in this way instead of
+subclassing, which is what makes "plug-and-play" literal.
+
+``metrics()`` is rebuilt on the per-service metric registries: one schema
+consumed by the benchmarks (throughput, sync_overhead, sample_efficiency),
+the examples, and the launchers, with the full per-service snapshot under
+``metrics()["services"]``.
 """
 from __future__ import annotations
 
-import time
+import dataclasses
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.configs.base import ModelConfig, RLConfig, RuntimeConfig
 from repro.core.resampler import DynamicWeightedResampler
-from repro.data.replay import FIFOReplayBuffer, RingReplayBuffer
 from repro.envs.toy_manipulation import TASKS_PER_SUITE, ManipulationEnv
+from repro.runtime.experience import FifoChannel, RingChannel
 from repro.runtime.inference import InferenceService
 from repro.runtime.rollout import RolloutWorker
-from repro.runtime.trainer import TrainerWorker, collate_segments
+from repro.runtime.scheduler import BarrierScheduler, FreeRunScheduler
+from repro.runtime.service import ServiceRegistry
+from repro.runtime.trainer import TrainerWorker
 from repro.runtime.weight_store import VersionedWeightStore
 
 
@@ -31,127 +43,71 @@ class AcceRLSystem:
                  max_episode_steps: int = 30, batch_episodes: int = 8,
                  latency=None, transport=None, seed: int = 0,
                  collect_frames: bool = False):
-        import dataclasses
         if cfg.num_prefix_tokens == 0:
             # a VLA policy always consumes the observation frame — give
             # text-only backbones a 1-token frame-embedding prefix
             cfg = dataclasses.replace(cfg, num_prefix_tokens=1)
         self.cfg, self.rl, self.rt = cfg, rl, rt
         self.suite = suite
+        self.seed = seed
         self.store = VersionedWeightStore(transport=transport)
-        self.buffer = FIFOReplayBuffer(rt.replay_capacity)
-        self.frame_buffer = (RingReplayBuffer(rt.wm_replay_capacity)
-                             if collect_frames else None)
+        # B: real trajectory segments -> trainer
+        self.experience = FifoChannel(rt.replay_capacity,
+                                      policy=rt.replay_backpressure)
+        # B_wm: real transitions -> world-model trainers + imagination seeds
+        self.frame_channel = (RingChannel(rt.wm_replay_capacity, seed=seed)
+                              if collect_frames else None)
         self.resampler = DynamicWeightedResampler(TASKS_PER_SUITE, seed=seed)
-        self.inference = InferenceService(cfg, self.store, rt, seed=seed)
-        self.trainer = TrainerWorker(cfg, rl, rt, self.buffer, self.store,
-                                     batch_episodes=batch_episodes,
-                                     seed=seed)
+        self.registry = ServiceRegistry()
+        self.attachments: List = []
+        self.inference = self.registry.register(
+            InferenceService(cfg, self.store, rt, seed=seed))
+        self.trainer = self.registry.register(
+            TrainerWorker(cfg, rl, rt, self.experience, self.store,
+                          batch_episodes=batch_episodes, seed=seed))
         self.workers = [
-            RolloutWorker(i, cfg, self.inference, self.buffer,
-                          suite=suite, resampler=self.resampler,
-                          segment_horizon=segment_horizon,
-                          max_steps=max_episode_steps, latency=latency,
-                          seed=seed * 1000 + i,
-                          frame_buffer=self.frame_buffer)
+            self.registry.register(RolloutWorker(
+                i, cfg, self.inference, self.experience,
+                suite=suite, resampler=self.resampler,
+                segment_horizon=segment_horizon,
+                max_steps=max_episode_steps, latency=latency,
+                seed=seed * 1000 + i,
+                frame_channel=self.frame_channel))
             for i in range(rt.num_rollout_workers)
         ]
 
-    # ------------------------------------------------------------------ async
+    # ------------------------------------------------------------- attachments
+    def attach(self, attachment) -> "AcceRLSystem":
+        """Plug an extension into the runtime: the attachment registers its
+        services on the bus (and may rewire the trainer) via ``bind``."""
+        attachment.bind(self)
+        self.attachments.append(attachment)
+        return self
+
+    # ------------------------------------------------------------------ runs
     def run_async(self, *, train_steps: int,
                   wall_timeout_s: float = 300.0) -> Dict:
         """The AcceRL mode: everything free-runs; returns system metrics."""
-        t0 = time.monotonic()
-        self.inference.start()
-        self.trainer.start()
-        for w in self.workers:
-            w.start()
-        try:
-            while (self.trainer.steps_done < train_steps
-                   and time.monotonic() - t0 < wall_timeout_s):
-                time.sleep(0.02)
-        finally:
-            for w in self.workers:
-                w.stop()
-            self.trainer.stop()
-            self.inference.stop()
-            for w in self.workers:
-                w.join()
-        return self.metrics(time.monotonic() - t0)
+        return FreeRunScheduler().run(self, train_steps=train_steps,
+                                      wall_timeout_s=wall_timeout_s)
 
-    # ------------------------------------------------------------------ sync
     def run_sync(self, *, train_steps: int, episodes_per_round: int = 8,
                  wall_timeout_s: float = 300.0) -> Dict:
-        """Synchronous baseline: rollout barrier → train → broadcast."""
-        t0 = time.monotonic()
-        self.inference.start()
-        self.trainer.started_at = time.monotonic()
-        self.store.publish(self.trainer.state.params, 0)
-        envs = [w.env for w in self.workers]
-        n = len(envs)
-        while (self.trainer.steps_done < train_steps
-               and time.monotonic() - t0 < wall_timeout_s):
-            # --- rollout phase: EVERY env must finish (episode barrier) ----
-            segments = []
-            rounds = max(episodes_per_round // n, 1)
-            for _ in range(rounds):
-                states = [e.reset(self.resampler.sample_task())
-                          for e in envs]
-                dones = [False] * n
-                trajs = [None] * n
-                for i in range(n):
-                    trajs[i] = {k: [] for k in (
-                        "obs_tokens", "frames", "actions", "behavior_logp",
-                        "values", "rewards", "dones", "steps")}
-                while not all(dones):
-                    # step barrier: one lockstep batched inference per tick
-                    live = [i for i in range(n) if not dones[i]]
-                    futs = [self.inference.submit(
-                        states[i]["tokens"], states[i]["frame"],
-                        states[i]["step"]) for i in live]
-                    for i, fut in zip(live, futs):
-                        res = fut.result(timeout=30.0)
-                        tr = trajs[i]
-                        tr["obs_tokens"].append(states[i]["tokens"])
-                        tr["frames"].append(states[i]["frame"])
-                        tr["steps"].append(states[i]["step"])
-                        tr["actions"].append(res["actions"])
-                        tr["behavior_logp"].append(res["logp"])
-                        tr["values"].append(res["value"])
-                        obs, r, d, info = envs[i].step(res["actions"])
-                        tr["rewards"].append(r)
-                        tr["dones"].append(
-                            float(d and not info["truncated"]))
-                        states[i] = obs
-                        if d:
-                            dones[i] = True
-                            tr["policy_version"] = res["policy_version"]
-                            tr["task_id"] = envs[i].task_id
-                            tr["success"] = float(info["success"])
-                for i in range(n):
-                    tr = trajs[i]
-                    tr["obs_tokens"].append(states[i]["tokens"])
-                    tr["frames"].append(states[i]["frame"])
-                    tr["steps"].append(states[i]["step"])
-                    tr["actions"].append(
-                        np.zeros(self.cfg.action_dim, np.int32))
-                    tr["behavior_logp"].append(
-                        np.zeros(self.cfg.action_dim, np.float32))
-                    tr["values"].append(0.0)
-                    from repro.runtime.rollout import episode_to_segments
-                    segments.extend(episode_to_segments(
-                        tr, self.workers[i].segment_horizon))
-                    self.workers[i].episodes_done += 1
-                    self.workers[i].env_steps += len(tr["rewards"])
-            # --- train phase (rollouts idle — cluster barrier) -------------
-            batch = collate_segments(segments[:self.trainer.prefetcher
-                                              .batch_size]
-                                     if len(segments) else segments)
-            self.trainer.train_on_batch(batch)
-            self.trainer.samples_seen = sum(
-                w.env_steps for w in self.workers)
-        self.inference.stop()
-        return self.metrics(time.monotonic() - t0)
+        """Synchronous baseline: rollout barrier → train → broadcast —
+        the same services under the barrier scheduler."""
+        return BarrierScheduler(episodes_per_round=episodes_per_round).run(
+            self, train_steps=train_steps, wall_timeout_s=wall_timeout_s)
+
+    def run_wm(self, *, train_steps: int,
+               wall_timeout_s: float = 300.0) -> Dict:
+        """World-model mode: the async pipeline with the WM attachment's
+        imagination + WM-trainer services on the bus."""
+        if not self.attachments:
+            raise RuntimeError(
+                "run_wm needs a world model: build the system via "
+                "repro.wm.AcceRLWMSystem or system.attach(...) first")
+        return self.run_async(train_steps=train_steps,
+                              wall_timeout_s=wall_timeout_s)
 
     # -------------------------------------------------------------- evaluation
     def evaluate(self, *, episodes: int = 20, tasks: Optional[List[int]] =
@@ -188,11 +144,17 @@ class AcceRLSystem:
                 "mean_return": float(np.mean(returns))}
 
     # ----------------------------------------------------------------- metrics
+    def health(self) -> Dict:
+        """Per-service health report from the registry."""
+        return self.registry.health()
+
     def metrics(self, wall_s: float) -> Dict:
+        """One metric schema for every consumer, rebuilt on the per-service
+        registries; attachments extend it in place."""
         env_steps = sum(w.env_steps for w in self.workers)
         episodes = sum(w.episodes_done for w in self.workers)
         rets = [r for w in self.workers for r in w.returns]
-        return {
+        m = {
             "wall_s": wall_s,
             "train_steps": self.trainer.steps_done,
             "env_steps": env_steps,
@@ -201,12 +163,15 @@ class AcceRLSystem:
             "sps_train": self.trainer.samples_seen / max(wall_s, 1e-9),
             "trainer_util": self.trainer.utilization(),
             "inference_util": self.inference.utilization(),
-            "mean_policy_lag": (float(np.mean(self.trainer.policy_lag))
-                                if self.trainer.policy_lag else 0.0),
+            "mean_policy_lag": self.trainer.metrics.series_mean("policy_lag"),
             "mean_return": float(np.mean(rets)) if rets else 0.0,
             "success_rate": (sum(w.successes for w in self.workers)
                              / max(episodes, 1)),
-            "buffer_dropped": self.buffer.total_dropped,
+            "buffer_dropped": self.experience.total_dropped,
             "inference_batches": self.inference.batches_run,
             "sync_latency_s": self.store.last_sync_latency_s,
+            "services": self.registry.snapshot(),
         }
+        for attachment in self.attachments:
+            attachment.extend_metrics(m, self)
+        return m

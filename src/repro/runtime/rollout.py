@@ -7,25 +7,28 @@ Each worker owns ONE (non-vectorized) environment instance — the paper's
 
 Completed episodes are packaged per eq. 2 as
 τ = (o_{1:T+1}, a_{1:T}, r_{1:T}, μ_{1:T}, v_{1:T}, ṽ_{T+1}, done) and
-sliced into fixed-horizon segments streamed to the FIFO buffer — rollouts
-are *interruptible*: segments of an unfinished episode ship immediately
-with a bootstrap value, so the trainer never waits for long episodes
-(episode-level long-tail removal).
+sliced into fixed-horizon segments streamed to the experience channel —
+rollouts are *interruptible*: segments of an unfinished episode ship
+immediately with a bootstrap value, so the trainer never waits for long
+episodes (episode-level long-tail removal).
+
+The worker is a :class:`~repro.runtime.service.Service`; its pacing is a
+:class:`~repro.runtime.service.RolloutGate` supplied by the scheduler —
+:class:`NullGate` free-runs (async mode), the barrier gate reproduces the
+synchronous baseline's step/episode barriers through the SAME loop.
 
 Task selection uses Dynamic Weighted Resampling (App. D.4).
 """
 from __future__ import annotations
 
-import threading
-import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.resampler import DynamicWeightedResampler
-from repro.data.replay import FIFOReplayBuffer
 from repro.envs.toy_manipulation import ManipulationEnv
+from repro.runtime.service import NULL_GATE, RolloutGate, Service
 
 
 def episode_to_segments(traj: Dict[str, np.ndarray], horizon: int
@@ -73,50 +76,58 @@ def episode_to_segments(traj: Dict[str, np.ndarray], horizon: int
     return segs
 
 
-class RolloutWorker:
+class RolloutWorker(Service):
     def __init__(self, worker_id: int, cfg: ModelConfig,
-                 inference, buffer: FIFOReplayBuffer, *,
+                 inference, experience, *,
                  suite: str = "spatial",
                  resampler: Optional[DynamicWeightedResampler] = None,
                  segment_horizon: int = 8,
                  max_steps: int = 30,
                  latency=None, seed: int = 0,
-                 frame_buffer=None):
+                 frame_channel=None,
+                 gate: Optional[RolloutGate] = None):
+        super().__init__(f"rollout-{worker_id}", role="rollout")
         self.worker_id = worker_id
         self.cfg = cfg
         self.inference = inference
-        self.buffer = buffer
+        self.experience = experience
         self.resampler = resampler
         self.segment_horizon = segment_horizon
-        self.frame_buffer = frame_buffer      # optional B_wm feed (real frames)
+        self.frame_channel = frame_channel    # optional B_wm feed (real frames)
+        self.gate = gate or NULL_GATE
         self.env = ManipulationEnv(
             suite=suite, task_id=0, max_steps=max_steps,
             action_vocab=cfg.action_vocab_size, action_dim=cfg.action_dim,
             latency=latency, seed=seed)
-        self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name=f"rollout-{worker_id}")
-        self.episodes_done = 0
-        self.env_steps = 0
-        self.successes = 0
-        self.returns: List[float] = []
 
-    def start(self) -> "RolloutWorker":
-        self._thread.start()
-        return self
+    # -- registry-backed counters (the service's public read surface) ----------
+    @property
+    def env_steps(self) -> int:
+        return int(self.metrics.counter("env_steps"))
 
-    def stop(self) -> None:
-        self._stop.set()
+    @property
+    def episodes_done(self) -> int:
+        return int(self.metrics.counter("episodes"))
 
-    def join(self, timeout: float = 5.0) -> None:
-        self._thread.join(timeout=timeout)
+    @property
+    def successes(self) -> int:
+        return int(self.metrics.counter("successes"))
+
+    @property
+    def returns(self) -> List[float]:
+        return self.metrics.series("return")
 
     # -- episode loop -----------------------------------------------------------
     def _run(self) -> None:
         while not self._stop.is_set():
-            task = (self.resampler.sample_task()
-                    if self.resampler is not None else 0)
-            self._episode(task)
+            if not self.gate.begin_episode(self._stop):
+                continue
+            try:
+                task = (self.resampler.sample_task()
+                        if self.resampler is not None else 0)
+                self._episode(task)
+            finally:
+                self.gate.end_episode()
 
     def _episode(self, task_id: int) -> None:
         obs = self.env.reset(task_id)
@@ -127,6 +138,7 @@ class RolloutWorker:
         ep_return, success = 0.0, False
         done = False
         while not done and not self._stop.is_set():
+            self.gate.before_step(self._stop)
             fut = self.inference.submit(obs["tokens"], obs["frame"],
                                         obs["step"])
             try:
@@ -146,7 +158,7 @@ class RolloutWorker:
             traj["dones"].append(float(done and not info["truncated"]))
             ep_return += reward
             success = success or info["success"]
-            self.env_steps += 1
+            self.metrics.inc("env_steps")
         if self._stop.is_set() and not done:
             return
         # bootstrap slot o_{T+1}
@@ -162,10 +174,10 @@ class RolloutWorker:
         traj["success"] = float(success)
 
         for seg in episode_to_segments(traj, self.segment_horizon):
-            self.buffer.push(seg)
-        if self.frame_buffer is not None:
+            self.experience.put(seg)
+        if self.frame_channel is not None:
             for i in range(len(traj["rewards"])):
-                self.frame_buffer.push({
+                self.frame_channel.put({
                     "frame": traj["frames"][i],
                     "next_frame": traj["frames"][i + 1],
                     "tokens": traj["obs_tokens"][i],
@@ -176,8 +188,8 @@ class RolloutWorker:
                         traj["success"] if i == len(traj["rewards"]) - 1
                         else 0.0),
                 })
-        self.episodes_done += 1
-        self.successes += int(success)
-        self.returns.append(ep_return)
+        self.metrics.inc("episodes")
+        self.metrics.inc("successes", float(success))
+        self.metrics.record("return", ep_return)
         if self.resampler is not None:
             self.resampler.update_history(task_id, float(success))

@@ -1,0 +1,313 @@
+"""Service layer: the uniform lifecycle every runtime component implements.
+
+The async pipeline (paper §3) is a set of free-running components — rollout
+workers, the inference pool, trainer loops, imagination workers, world-model
+trainers. Before this layer each of them hand-rolled its own
+``threading.Thread`` + stop-event + ad-hoc counters; the orchestrator had to
+know every component's private start/stop dance, and the synchronous
+baseline re-implemented the whole loop inline.
+
+:class:`Service` gives all of them one contract:
+
+  * ``start() / stop() / join()`` with an explicit :class:`ServiceState`
+    machine (``stop`` is a signal, ``join`` the rendezvous — schedulers own
+    the ordering);
+  * crash containment — a thread that raises marks the service ``FAILED``
+    and records the exception instead of dying silently;
+  * a per-service :class:`MetricsRegistry` (counters / gauges / series /
+    busy-timers) that ``AcceRLSystem.metrics()`` is rebuilt on, so every
+    benchmark and launcher consumes one schema.
+
+:class:`ServiceRegistry` is the bus the orchestrator and schedulers drive:
+services register in dependency order, start in that order, stop in
+reverse. World-model attachment (paper §4 "plug-and-play") is literally
+``system.attach(...)`` registering more services on this bus.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+import traceback
+from typing import Callable, Dict, Iterable, List, Optional
+
+
+class ServiceState:
+    """String states — cheap to compare, JSON-friendly in health reports."""
+
+    NEW = "new"
+    RUNNING = "running"
+    STOPPING = "stopping"
+    STOPPED = "stopped"
+    FAILED = "failed"
+
+
+class MetricsRegistry:
+    """Thread-safe counters, gauges and scalar series for one service.
+
+    Counters are monotone floats (``inc``); gauges are last-write-wins;
+    series accumulate observations (episode returns, policy lag) and
+    snapshot as count/mean/last so the report stays bounded.
+    """
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self._lock = threading.Lock()
+        self._counters: Dict[str, float] = {}
+        self._gauges: Dict[str, float] = {}
+        self._series: Dict[str, List[float]] = {}
+
+    # -- counters -----------------------------------------------------------
+    def inc(self, key: str, by: float = 1.0) -> float:
+        with self._lock:
+            val = self._counters.get(key, 0.0) + by
+            self._counters[key] = val
+            return val
+
+    def counter(self, key: str, default: float = 0.0) -> float:
+        with self._lock:
+            return self._counters.get(key, default)
+
+    # -- gauges -------------------------------------------------------------
+    def set_gauge(self, key: str, value: float) -> None:
+        with self._lock:
+            self._gauges[key] = float(value)
+
+    def gauge(self, key: str, default: float = 0.0) -> float:
+        with self._lock:
+            return self._gauges.get(key, default)
+
+    # -- series -------------------------------------------------------------
+    def record(self, key: str, value: float) -> None:
+        with self._lock:
+            self._series.setdefault(key, []).append(float(value))
+
+    def series(self, key: str) -> List[float]:
+        with self._lock:
+            return list(self._series.get(key, ()))
+
+    def series_mean(self, key: str, default: float = 0.0) -> float:
+        with self._lock:
+            s = self._series.get(key)
+            return sum(s) / len(s) if s else default
+
+    # -- timers -------------------------------------------------------------
+    @contextlib.contextmanager
+    def timer(self, key: str):
+        """Accumulate elapsed wall seconds into counter ``key``."""
+        t0 = time.monotonic()
+        try:
+            yield
+        finally:
+            self.inc(key, time.monotonic() - t0)
+
+    def snapshot(self) -> Dict:
+        with self._lock:
+            return {
+                "counters": dict(self._counters),
+                "gauges": dict(self._gauges),
+                "series": {
+                    k: {"count": len(v),
+                        "mean": (sum(v) / len(v)) if v else 0.0,
+                        "last": v[-1] if v else 0.0}
+                    for k, v in self._series.items()
+                },
+            }
+
+
+class RolloutGate:
+    """Pacing hook a scheduler hands to rollout-style producer loops.
+
+    The free-running (async) pipeline uses :class:`NullGate`; the
+    synchronous baseline's :class:`~repro.runtime.scheduler.BarrierGate`
+    implements the paper's step/episode barriers behind the same calls, so
+    the producer loop itself is identical in both modes.
+    """
+
+    def begin_episode(self, stop: threading.Event) -> bool:
+        """Block until an episode may start; False means shutting down."""
+        raise NotImplementedError
+
+    def before_step(self, stop: threading.Event) -> None:
+        """Called before every env step (sync mode: the step barrier)."""
+        raise NotImplementedError
+
+    def end_episode(self) -> None:
+        """Called exactly once per ``begin_episode`` that returned True."""
+        raise NotImplementedError
+
+
+class NullGate(RolloutGate):
+    """Free-running: never blocks (the fully asynchronous mode)."""
+
+    def begin_episode(self, stop: threading.Event) -> bool:
+        return not stop.is_set()
+
+    def before_step(self, stop: threading.Event) -> None:
+        pass
+
+    def end_episode(self) -> None:
+        pass
+
+
+NULL_GATE = NullGate()
+
+
+class Service:
+    """Base class for every runtime component (rollout, inference, trainer,
+    imagination, WM trainers). Subclasses implement ``_run`` (or override
+    ``_thread_targets`` for multi-threaded pools) plus optional
+    ``on_start`` / ``on_stop`` hooks."""
+
+    def __init__(self, name: str, *, role: str = "service"):
+        self.name = name
+        self.role = role
+        self.metrics = MetricsRegistry(name)
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._state = ServiceState.NEW
+        self._state_lock = threading.Lock()
+        self.error: Optional[BaseException] = None
+        self.started_at: Optional[float] = None
+
+    # -- subclass surface ---------------------------------------------------
+    def _run(self) -> None:
+        raise NotImplementedError
+
+    def _thread_targets(self) -> List[Callable[[], None]]:
+        return [self._run]
+
+    def on_start(self) -> None:
+        """Hook run before threads spawn (publish weights, start helpers)."""
+
+    def on_stop(self) -> None:
+        """Hook run when stop is signalled (stop helpers)."""
+
+    # -- lifecycle ----------------------------------------------------------
+    @property
+    def status(self) -> str:
+        with self._state_lock:
+            return self._state
+
+    def _set_state(self, state: str) -> None:
+        with self._state_lock:
+            # FAILED is terminal — a crashed thread must stay visible
+            if self._state != ServiceState.FAILED:
+                self._state = state
+
+    def start(self) -> "Service":
+        if self.status != ServiceState.NEW:
+            raise RuntimeError(
+                f"service {self.name!r} already started (state={self.status})")
+        self.started_at = time.monotonic()
+        self.on_start()
+        for i, target in enumerate(self._thread_targets()):
+            t = threading.Thread(target=self._guard, args=(target,),
+                                 daemon=True, name=f"{self.name}-{i}"
+                                 if i else self.name)
+            t.start()
+            self._threads.append(t)
+        self._set_state(ServiceState.RUNNING)
+        return self
+
+    def _guard(self, target: Callable[[], None]) -> None:
+        try:
+            target()
+        except BaseException as e:   # noqa: BLE001 — surface crashes as health
+            self.error = e
+            with self._state_lock:
+                self._state = ServiceState.FAILED
+            traceback.print_exc()
+
+    def stop(self) -> None:
+        """Signal shutdown (non-blocking; pair with ``join``)."""
+        if self.status == ServiceState.NEW:
+            self._set_state(ServiceState.STOPPED)
+            return
+        self._stop.set()
+        self._set_state(ServiceState.STOPPING)
+        self.on_stop()
+
+    def join(self, timeout: float = 5.0) -> None:
+        deadline = time.monotonic() + timeout
+        for t in self._threads:
+            t.join(timeout=max(deadline - time.monotonic(), 0.0))
+        if self.status == ServiceState.STOPPING and not any(
+                t.is_alive() for t in self._threads):
+            self._set_state(ServiceState.STOPPED)
+
+    # -- health + metrics ---------------------------------------------------
+    @property
+    def healthy(self) -> bool:
+        return self.error is None and self.status in (ServiceState.NEW,
+                                                     ServiceState.RUNNING,
+                                                     ServiceState.STOPPING,
+                                                     ServiceState.STOPPED)
+
+    def health(self) -> Dict:
+        return {"state": self.status, "healthy": self.healthy,
+                "uptime_s": self.uptime_s,
+                "error": repr(self.error) if self.error else None}
+
+    @property
+    def uptime_s(self) -> float:
+        if self.started_at is None:
+            return 0.0
+        return time.monotonic() - self.started_at
+
+    def utilization(self) -> float:
+        """busy_s / uptime — services time hot sections into ``busy_s``."""
+        if self.started_at is None:
+            return 0.0
+        return self.metrics.counter("busy_s") / max(self.uptime_s, 1e-9)
+
+
+class ServiceRegistry:
+    """Ordered service bus: register in dependency order, start in that
+    order, stop in reverse. The orchestrator owns one; attachments (the
+    world model) register additional services on it."""
+
+    def __init__(self):
+        self._services: Dict[str, Service] = {}
+
+    def register(self, service: Service) -> Service:
+        if service.name in self._services:
+            raise ValueError(f"duplicate service name {service.name!r}")
+        self._services[service.name] = service
+        return service
+
+    def deregister(self, name: str) -> Optional[Service]:
+        return self._services.pop(name, None)
+
+    def get(self, name: str) -> Service:
+        return self._services[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._services
+
+    def all(self, *, role: Optional[str] = None,
+            exclude_roles: Iterable[str] = ()) -> List[Service]:
+        ex = set(exclude_roles)
+        return [s for s in self._services.values()
+                if (role is None or s.role == role) and s.role not in ex]
+
+    # -- bulk lifecycle -----------------------------------------------------
+    def start_all(self, *, exclude_roles: Iterable[str] = ()) -> None:
+        for s in self.all(exclude_roles=exclude_roles):
+            s.start()
+
+    def stop_all(self) -> None:
+        for s in reversed(list(self._services.values())):
+            s.stop()
+
+    def join_all(self, timeout: float = 5.0) -> None:
+        for s in reversed(list(self._services.values())):
+            s.join(timeout=timeout)
+
+    # -- reporting ----------------------------------------------------------
+    def health(self) -> Dict[str, Dict]:
+        return {name: s.health() for name, s in self._services.items()}
+
+    def snapshot(self) -> Dict[str, Dict]:
+        return {name: s.metrics.snapshot()
+                for name, s in self._services.items()}

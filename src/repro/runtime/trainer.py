@@ -1,25 +1,37 @@
 """Trainer worker (paper §3.1, App. C/D).
 
-Continuously pops prefetched super-batches from the FIFO buffer (never
-waiting on rollouts — macro-asynchrony), runs the GIPO + JIT-GAE train
-step, and publishes versioned weights through the store with the drain
-protocol. ``weight_sync_interval`` throttles publishes ("broadcast only
-when an actual update occurs").
+Continuously pops prefetched super-batches from its experience source
+(never waiting on rollouts — macro-asynchrony), runs the GIPO + JIT-GAE
+train step, and publishes versioned weights through the store with the
+drain protocol. ``weight_sync_interval`` throttles publishes ("broadcast
+only when an actual update occurs").
+
+The trainer is a :class:`~repro.runtime.service.Service`. Two drive modes,
+same train path:
+
+  * free-running (``start``) — the asynchronous pipeline: the service
+    thread pops from the prefetcher and steps continuously;
+  * inline (``begin_inline`` + ``train_on_batch``) — the barrier scheduler
+    drives steps between rollout rounds, reproducing the synchronous
+    baseline's cluster barrier without duplicating any training code.
+
+The source is any ``pop_batch(n, timeout)`` provider — the real segment
+channel ``B``, or a :class:`~repro.runtime.experience.MixedExperienceSource`
+blending ``B`` and ``B_img`` when a world model is attached.
 """
 from __future__ import annotations
 
-import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 
 from repro.configs.base import ModelConfig, RLConfig, RuntimeConfig
 from repro.core.train_step import TrainState, init_train_state, make_train_step
 from repro.data.prefetch import Prefetcher
-from repro.data.replay import FIFOReplayBuffer
 from repro.data.trajectory import TrajectoryBatch
 from repro.models.transformer import FRONTEND_DIM
+from repro.runtime.service import Service
 from repro.runtime.weight_store import VersionedWeightStore
 
 
@@ -44,46 +56,62 @@ def collate_segments(segments: List[Dict[str, np.ndarray]]) -> TrajectoryBatch:
     )
 
 
-class TrainerWorker:
+class TrainerWorker(Service):
     def __init__(self, cfg: ModelConfig, rl: RLConfig, rt: RuntimeConfig,
-                 buffer: FIFOReplayBuffer, store: VersionedWeightStore, *,
+                 source, store: VersionedWeightStore, *,
                  batch_episodes: int = 8, seed: int = 0,
-                 checkpoint_dir=None, checkpoint_interval: int = 0):
+                 checkpoint_dir=None, checkpoint_interval: int = 0,
+                 name: str = "trainer"):
         import jax
+        super().__init__(name, role="trainer")
         self.cfg, self.rl, self.rt = cfg, rl, rt
-        self.buffer = buffer
+        self.source = source
         self.store = store
         self.state: TrainState = init_train_state(
             cfg, jax.random.PRNGKey(seed))
         self._step_fn = make_train_step(cfg, rl, donate=False)
-        self.prefetcher = Prefetcher(buffer, batch_episodes,
+        self.prefetcher = Prefetcher(source, batch_episodes,
                                      collate_segments,
                                      depth=rt.prefetch_depth)
-        self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name="trainer")
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_interval = checkpoint_interval
-        self.steps_done = 0
-        self.samples_seen = 0
-        self.busy_s = 0.0
-        self.started_at: Optional[float] = None
         self.metrics_log: List[Dict] = []
-        self.policy_lag: List[float] = []
+
+    # -- registry-backed counters ----------------------------------------------
+    @property
+    def steps_done(self) -> int:
+        return int(self.metrics.counter("steps"))
+
+    @property
+    def samples_seen(self) -> int:
+        return int(self.metrics.counter("samples"))
+
+    @property
+    def policy_lag(self) -> List[float]:
+        return self.metrics.series("policy_lag")
+
+    @property
+    def busy_s(self) -> float:
+        return self.metrics.counter("busy_s")
 
     # -- lifecycle -------------------------------------------------------------
-    def start(self) -> "TrainerWorker":
-        self.started_at = time.monotonic()
+    def on_start(self) -> None:
         # version 0 published so inference can begin before the first step
         self.store.publish(self.state.params, 0)
         self.prefetcher.start()
-        self._thread.start()
-        return self
+
+    def begin_inline(self) -> None:
+        """Scheduler-driven mode: publish v0 and mark the clock, without
+        the free-running thread or the prefetcher."""
+        self.started_at = time.monotonic()
+        self.store.publish(self.state.params, 0)
 
     def stop(self) -> None:
-        self._stop.set()
-        self.prefetcher.stop()
-        self._thread.join(timeout=10.0)
+        was_running = bool(self._threads)
+        super().stop()
+        if was_running:
+            self.prefetcher.stop()
+            self.join(timeout=10.0)
 
     # -- loop -------------------------------------------------------------------
     def _run(self) -> None:
@@ -94,34 +122,27 @@ class TrainerWorker:
             self.train_on_batch(batch)
 
     def train_on_batch(self, batch: TrajectoryBatch) -> Dict:
-        t0 = time.monotonic()
-        version = int(self.state.version)
-        lag = version - float(np.mean(batch.policy_version))
-        self.policy_lag.append(lag)
-        self.state, metrics = self._step_fn(self.state, batch)
-        self.steps_done += 1
-        self.samples_seen += int(np.asarray(batch.mask).sum())
-        if self.steps_done % self.rt.weight_sync_interval == 0:
-            if self.rt.drain:
-                self.store.begin_publish()     # drain signal, App. D.6
-            self.store.publish(self.state.params, version + 1)
-        if (self.checkpoint_dir and self.checkpoint_interval
-                and self.steps_done % self.checkpoint_interval == 0):
-            from repro.data import checkpoint
-            checkpoint.save(self.checkpoint_dir, self.steps_done,
-                            self.state)
-        self.busy_s += time.monotonic() - t0
+        with self.metrics.timer("busy_s"):
+            version = int(self.state.version)
+            lag = version - float(np.mean(batch.policy_version))
+            self.metrics.record("policy_lag", lag)
+            self.state, metrics = self._step_fn(self.state, batch)
+            steps = int(self.metrics.inc("steps"))
+            self.metrics.inc("samples", float(np.asarray(batch.mask).sum()))
+            if steps % self.rt.weight_sync_interval == 0:
+                if self.rt.drain:
+                    self.store.begin_publish()     # drain signal, App. D.6
+                self.store.publish(self.state.params, version + 1)
+            if (self.checkpoint_dir and self.checkpoint_interval
+                    and steps % self.checkpoint_interval == 0):
+                from repro.data import checkpoint
+                checkpoint.save(self.checkpoint_dir, steps, self.state)
         out = {k: float(v) for k, v in metrics.items()}
         out["policy_lag"] = lag
         self.metrics_log.append(out)
         return out
 
     # -- metrics -----------------------------------------------------------------
-    def utilization(self) -> float:
-        if not self.started_at:
-            return 0.0
-        return self.busy_s / max(time.monotonic() - self.started_at, 1e-9)
-
     def sps(self) -> float:
         if not self.started_at:
             return 0.0

@@ -3,8 +3,9 @@
 ``M_obs`` is a DIAMOND-style EDM diffusion next-frame predictor; ``M_reward``
 is a success-probability classifier; ``imagination`` runs the horizon-H
 alternating rollout with potential-based rewards (eq. 4); ``wm_system``
-wires them into the asynchronous pipeline with the three decoupled trainer
-loops of §4.2."""
+attaches them onto the asynchronous pipeline's service bus
+(``system.attach(WorldModelAttachment(...))`` — no orchestrator subclass)
+with the three decoupled trainer loops of §4.2."""
 from repro.wm.denoiser import (  # noqa: F401
     denoiser_init,
     denoiser_apply,
@@ -17,4 +18,8 @@ from repro.wm.reward import (  # noqa: F401
     reward_loss,
 )
 from repro.wm.imagination import ImaginationWorker, imagine_segment  # noqa: F401
-from repro.wm.wm_system import AcceRLWMSystem  # noqa: F401
+from repro.wm.wm_system import (  # noqa: F401
+    AcceRLWMSystem,
+    WorldModelAttachment,
+    WorldModelTrainer,
+)

@@ -16,9 +16,8 @@ imagination worker generates a full τ̂ batch per device dispatch —
 """
 from __future__ import annotations
 
-import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +26,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, WMConfig
 from repro.models.policy import sample_action_sequence
 from repro.models.transformer import FRONTEND_DIM
+from repro.runtime.service import Service
 from repro.wm import denoiser as dn
 from repro.wm import reward as rw
 
@@ -108,36 +108,32 @@ def imagine_segment(*args, **kwargs):
     return imagine_rollout(*args, **kwargs)
 
 
-class ImaginationWorker:
+class ImaginationWorker(Service):
     """Generates imagined segments from real seed frames in B_wm and pushes
-    them to B_img — the WM-mode replacement for environment interaction."""
+    them to B_img — the WM-mode replacement for environment interaction.
+    An imagination *producer service* registered on the bus by the
+    world-model attachment."""
 
     def __init__(self, worker_id: int, cfg: ModelConfig, wm: WMConfig,
-                 store, wm_params_ref, frame_buffer, img_buffer, *,
+                 store, wm_params_ref, frame_channel, img_channel, *,
                  batch: int = 16, seed: int = 0):
+        super().__init__(f"imagination-{worker_id}", role="imagination")
         self.cfg, self.wm = cfg, wm
         self.store = store                    # policy weight store
         self.wm_params_ref = wm_params_ref    # dict with obs/reward params
-        self.frame_buffer = frame_buffer      # B_wm (real transitions)
-        self.img_buffer = img_buffer          # B_img
+        self.frame_channel = frame_channel    # B_wm (real transitions)
+        self.img_channel = img_channel        # B_img
         self.batch = batch
         self._fn = make_imagine_fn(cfg, wm)
         self._key = jax.random.PRNGKey(seed + 7777)
-        self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name=f"imagination-{worker_id}")
-        self.segments_done = 0
-        self.imagined_steps = 0
 
-    def start(self) -> "ImaginationWorker":
-        self._thread.start()
-        return self
+    @property
+    def segments_done(self) -> int:
+        return int(self.metrics.counter("segments"))
 
-    def stop(self) -> None:
-        self._stop.set()
-
-    def join(self, timeout: float = 5.0) -> None:
-        self._thread.join(timeout=timeout)
+    @property
+    def imagined_steps(self) -> int:
+        return int(self.metrics.counter("imagined_steps"))
 
     def _run(self) -> None:
         params, version = None, -1
@@ -146,7 +142,7 @@ class ImaginationWorker:
             if got is None:
                 continue
             params, version = got
-            seeds = self.frame_buffer.sample(self.batch)
+            seeds = self.frame_channel.sample(self.batch)
             if seeds is None:
                 time.sleep(0.05)
                 continue
@@ -154,12 +150,13 @@ class ImaginationWorker:
             frames = np.stack([s["frame"] for s in seeds]).astype(np.float32)
             steps = np.array([s["step"] for s in seeds], np.int32)
             self._key, sub = jax.random.split(self._key)
-            out = self._fn(params, self.wm_params_ref["obs"],
-                           self.wm_params_ref["reward"], sub, tokens,
-                           frames, steps)
-            out = {k: np.asarray(v) for k, v in out.items()}
+            with self.metrics.timer("busy_s"):
+                out = self._fn(params, self.wm_params_ref["obs"],
+                               self.wm_params_ref["reward"], sub, tokens,
+                               frames, steps)
+                out = {k: np.asarray(v) for k, v in out.items()}
             for i in range(self.batch):
-                self.img_buffer.push({
+                self.img_channel.put({
                     "obs_tokens": out["obs_tokens"][i],
                     "frames": out["frames"][i],
                     "actions": out["actions"][i],
@@ -173,5 +170,6 @@ class ImaginationWorker:
                     "task_id": np.int32(0),
                     "success": np.float32(0.0),
                 })
-            self.segments_done += self.batch
-            self.imagined_steps += self.batch * self.wm.imagine_horizon
+            self.metrics.inc("segments", self.batch)
+            self.metrics.inc("imagined_steps",
+                             self.batch * self.wm.imagine_horizon)

@@ -1,30 +1,44 @@
 """AcceRL-WM: the world-model-augmented mode (paper §4, Fig. 2b).
 
-Extends the asynchronous pipeline with:
-  * B_wm — real transitions feeding WM training (collected by the same
-    rollout workers via the alternating strategy),
-  * B_img — imagined τ̂ segments from :class:`ImaginationWorker`s,
-  * three decoupled trainer loops (§4.2): M_policy continuously on B_img;
-    M_obs every ``obs_train_interval`` cycles on B_wm; M_reward every
-    ``reward_train_interval`` steps on B_wm,
-  * ``pretrain_world_model`` — the paper's offline WM pre-training on
-    oracle trajectories (1,000 offline trajectories in Fig. 4b).
+The world model is a *plug-and-play attachment*, not a subclass of the
+orchestrator: :class:`WorldModelAttachment` binds to a running-capable
+:class:`~repro.runtime.orchestrator.AcceRLSystem` via ``system.attach(...)``
+and registers on the service bus
+
+  * B_img — a FIFO channel of imagined τ̂ segments,
+  * N :class:`~repro.wm.imagination.ImaginationWorker` producer services,
+  * a :class:`WorldModelTrainer` service running the decoupled M_obs /
+    M_reward loops (§4.2: M_obs every ``obs_train_interval`` cycles on
+    B_wm; M_reward every ``reward_train_interval``),
+  * a rewire of the existing policy trainer onto a
+    :class:`~repro.runtime.experience.MixedExperienceSource` over (B,
+    B_img) at ``rt.mix_real_fraction`` (0.0 = the paper's pure-imagination
+    diet) — the same trainer service, a different experience diet.
+
+``AcceRLWMSystem(...)`` is the one-call constructor: it builds the base
+system with frame collection on and attaches the world model — the
+returned object IS an ``AcceRLSystem``; ``run_wm`` is the async scheduler
+over the extended service set.
+
+``pretrain_world_model`` — the paper's offline WM pre-training on oracle
+trajectories (1,000 offline trajectories in Fig. 4b).
 """
 from __future__ import annotations
 
-import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig, RLConfig, RuntimeConfig, WMConfig
-from repro.data.replay import FIFOReplayBuffer, RingReplayBuffer
+from repro.data.prefetch import Prefetcher
 from repro.envs.toy_manipulation import FRAME_DIM, ManipulationEnv
 from repro.optim import adamw
+from repro.runtime.experience import FifoChannel, MixedExperienceSource
 from repro.runtime.orchestrator import AcceRLSystem
-from repro.runtime.trainer import TrainerWorker
+from repro.runtime.service import Service
+from repro.runtime.trainer import TrainerWorker, collate_segments
 from repro.wm import denoiser as dn
 from repro.wm import reward as rw
 from repro.wm.imagination import ImaginationWorker
@@ -85,56 +99,34 @@ def pretrain_world_model(suite: str, wm: WMConfig, *, trajectories: int = 100,
             "losses": losses, "transitions": n}
 
 
-class AcceRLWMSystem(AcceRLSystem):
-    """World-model-augmented asynchronous system."""
+class WorldModelTrainer(Service):
+    """The M_obs / M_reward trainer loops (§4.2) as one bus service:
+    samples real transitions from B_wm and updates the shared WM parameter
+    reference in place ("broadcast to the Inference Pool only on update" —
+    imagination workers read the same dict)."""
 
-    def __init__(self, cfg: ModelConfig, rl: RLConfig, rt: RuntimeConfig,
-                 wm: WMConfig, *, wm_params: Optional[Dict] = None,
-                 num_imagination_workers: int = 1,
-                 imagination_batch: int = 16, seed: int = 0, **kw):
-        super().__init__(cfg, rl, rt, collect_frames=True, seed=seed, **kw)
+    def __init__(self, wm: WMConfig, wm_params: Dict, opts: Dict,
+                 frame_channel, *, batch: int = 32, seed: int = 0):
+        super().__init__("wm-trainer", role="wm")
         self.wm = wm
-        self.img_buffer = FIFOReplayBuffer(rt.img_replay_capacity)
-        key = jax.random.PRNGKey(seed + 99)
-        k1, k2 = jax.random.split(key)
-        if wm_params is None:
-            wm_params = {
-                "obs": dn.denoiser_init(k1, FRAME_DIM, self.cfg.action_dim,
-                                        self.cfg.action_vocab_size, wm),
-                "reward": rw.reward_init(k2, FRAME_DIM),
-            }
-        # shared mutable reference — imagination workers read the newest
-        # WM weights ("broadcast to the Inference Pool only on update")
-        self.wm_params = {"obs": wm_params["obs"],
-                          "reward": wm_params["reward"]}
-        self._obs_opt = wm_params.get("obs_opt") or adamw.init(
-            self.wm_params["obs"])
-        self._rew_opt = wm_params.get("reward_opt") or adamw.init(
-            self.wm_params["reward"])
+        self.wm_params = wm_params            # shared mutable reference
+        self._obs_opt = opts["obs"]
+        self._rew_opt = opts["reward"]
         self._dn_step = dn.make_denoiser_train_step(wm)
         self._rw_step = rw.make_reward_train_step()
-        # the WM-mode policy trainer consumes B_img
-        self.img_trainer = TrainerWorker(self.cfg, rl, rt, self.img_buffer,
-                                         self.store,
-                                         batch_episodes=imagination_batch,
-                                         seed=seed)
-        self.imaginers = [
-            ImaginationWorker(i, self.cfg, wm, self.store, self.wm_params,
-                              self.frame_buffer, self.img_buffer,
-                              batch=imagination_batch, seed=seed + i)
-            for i in range(num_imagination_workers)
-        ]
-        self._wm_stop = threading.Event()
-        self._wm_thread = threading.Thread(target=self._wm_train_loop,
-                                           daemon=True, name="wm-trainer")
+        self.frame_channel = frame_channel
+        self.batch = batch
         self._key = jax.random.PRNGKey(seed + 1234)
-        self.wm_updates = {"obs": 0, "reward": 0}
 
-    # -- the M_obs / M_reward trainer loops (§4.2) ----------------------------
-    def _wm_train_loop(self) -> None:
+    @property
+    def updates(self) -> Dict[str, int]:
+        return {"obs": int(self.metrics.counter("obs_updates")),
+                "reward": int(self.metrics.counter("reward_updates"))}
+
+    def _run(self) -> None:
         cycle = 0
-        while not self._wm_stop.is_set():
-            batch = self.frame_buffer.sample(32)
+        while not self._stop.is_set():
+            batch = self.frame_channel.sample(self.batch)
             if batch is None:
                 time.sleep(0.05)
                 continue
@@ -143,49 +135,114 @@ class AcceRLWMSystem(AcceRLSystem):
             f0 = np.stack([b["frame"] for b in batch]).astype(np.float32)
             ac = np.stack([b["actions"] for b in batch])
             sc = np.array([b["success"] for b in batch], np.float32)
-            if cycle % self.wm.obs_train_interval == 0:
-                hist = np.repeat(f0[:, None], self.wm.history_frames, axis=1)
-                self._key, sub = jax.random.split(self._key)
-                self.wm_params["obs"], self._obs_opt, _ = self._dn_step(
-                    self.wm_params["obs"], self._obs_opt, sub, f1, hist, ac)
-                self.wm_updates["obs"] += 1
-            if cycle % self.wm.reward_train_interval == 0:
-                self.wm_params["reward"], self._rew_opt, _ = self._rw_step(
-                    self.wm_params["reward"], self._rew_opt, f1, sc)
-                self.wm_updates["reward"] += 1
+            with self.metrics.timer("busy_s"):
+                if cycle % self.wm.obs_train_interval == 0:
+                    hist = np.repeat(f0[:, None], self.wm.history_frames,
+                                     axis=1)
+                    self._key, sub = jax.random.split(self._key)
+                    self.wm_params["obs"], self._obs_opt, _ = self._dn_step(
+                        self.wm_params["obs"], self._obs_opt, sub, f1, hist,
+                        ac)
+                    self.metrics.inc("obs_updates")
+                if cycle % self.wm.reward_train_interval == 0:
+                    self.wm_params["reward"], self._rew_opt, _ = \
+                        self._rw_step(self.wm_params["reward"],
+                                      self._rew_opt, f1, sc)
+                    self.metrics.inc("reward_updates")
             time.sleep(0.001)
 
-    # -- run --------------------------------------------------------------------
-    def run_wm(self, *, train_steps: int,
-               wall_timeout_s: float = 300.0) -> Dict:
-        """Alternating real rollout + imagination, three trainer loops."""
-        t0 = time.monotonic()
-        self.inference.start()
-        self.img_trainer.start()
-        self._wm_thread.start()
-        for w in self.workers:
-            w.start()
-        for im in self.imaginers:
-            im.start()
-        try:
-            while (self.img_trainer.steps_done < train_steps
-                   and time.monotonic() - t0 < wall_timeout_s):
-                time.sleep(0.02)
-        finally:
-            for w in self.workers:
-                w.stop()
-            for im in self.imaginers:
-                im.stop()
-            self._wm_stop.set()
-            self.img_trainer.stop()
-            self.inference.stop()
-            for w in self.workers:
-                w.join()
-            for im in self.imaginers:
-                im.join()
-        m = self.metrics(time.monotonic() - t0)
+
+class WorldModelAttachment:
+    """Binds the world model onto a base system's service bus."""
+
+    def __init__(self, wm: WMConfig, *, wm_params: Optional[Dict] = None,
+                 num_imagination_workers: int = 1,
+                 imagination_batch: int = 16, seed: int = 0):
+        self.wm = wm
+        self._init_params = wm_params
+        self.num_imagination_workers = num_imagination_workers
+        self.imagination_batch = imagination_batch
+        self.seed = seed
+        # populated by bind()
+        self.img_channel: Optional[FifoChannel] = None
+        self.wm_params: Optional[Dict] = None
+        self.wm_trainer: Optional[WorldModelTrainer] = None
+        self.imaginers: list = []
+        self.img_trainer: Optional[TrainerWorker] = None
+
+    def bind(self, system: AcceRLSystem) -> None:
+        if system.frame_channel is None:
+            raise RuntimeError(
+                "world-model attachment needs real transitions: build the "
+                "system with collect_frames=True (B_wm)")
+        cfg, rl, rt = system.cfg, system.rl, system.rt
+        seed = self.seed
+        self.img_channel = FifoChannel(rt.img_replay_capacity,
+                                       policy=rt.replay_backpressure)
+        key = jax.random.PRNGKey(seed + 99)
+        k1, k2 = jax.random.split(key)
+        init = self._init_params or {}
+        # shared mutable reference — imagination workers read the newest
+        # WM weights without any copy or re-broadcast
+        self.wm_params = {
+            "obs": init.get("obs") if init.get("obs") is not None else
+            dn.denoiser_init(k1, FRAME_DIM, cfg.action_dim,
+                             cfg.action_vocab_size, self.wm),
+            "reward": init.get("reward") if init.get("reward") is not None
+            else rw.reward_init(k2, FRAME_DIM),
+        }
+        opts = {"obs": init.get("obs_opt") or adamw.init(
+                    self.wm_params["obs"]),
+                "reward": init.get("reward_opt") or adamw.init(
+                    self.wm_params["reward"])}
+        # rewire the SAME policy trainer to consume (B, B_img) at the
+        # configured real/imagined mix — no second TrainerWorker, so the
+        # params/optimizer tree and the train step are built exactly once
+        source = MixedExperienceSource(
+            system.experience, self.img_channel,
+            real_fraction=rt.mix_real_fraction)
+        trainer = system.trainer
+        trainer.source = source
+        trainer.prefetcher = Prefetcher(source, self.imagination_batch,
+                                        collate_segments,
+                                        depth=rt.prefetch_depth)
+        self.img_trainer = trainer
+        system.img_trainer = trainer
+
+        self.wm_trainer = system.registry.register(WorldModelTrainer(
+            self.wm, self.wm_params, opts, system.frame_channel,
+            seed=seed))
+        self.imaginers = [
+            system.registry.register(ImaginationWorker(
+                i, cfg, self.wm, system.store, self.wm_params,
+                system.frame_channel, self.img_channel,
+                batch=self.imagination_batch, seed=seed + i))
+            for i in range(self.num_imagination_workers)
+        ]
+        system.imaginers = self.imaginers
+        system.wm_params = self.wm_params
+        system.wm_trainer = self.wm_trainer
+
+    def extend_metrics(self, m: Dict, system: AcceRLSystem) -> None:
         m["imagined_steps"] = sum(im.imagined_steps for im in self.imaginers)
         m["img_train_steps"] = self.img_trainer.steps_done
-        m["wm_updates"] = dict(self.wm_updates)
+        m["wm_updates"] = self.wm_trainer.updates
         m["real_env_steps"] = m["env_steps"]
-        return m
+        m["img_buffer_dropped"] = self.img_channel.total_dropped
+        m["mix_real_fraction"] = self.img_trainer.source.real_fraction
+
+
+def AcceRLWMSystem(cfg: ModelConfig, rl: RLConfig, rt: RuntimeConfig,
+                   wm: WMConfig, *, wm_params: Optional[Dict] = None,
+                   num_imagination_workers: int = 1,
+                   imagination_batch: int = 16, seed: int = 0,
+                   **kw) -> AcceRLSystem:
+    """World-model-augmented asynchronous system: the base
+    :class:`AcceRLSystem` (collecting real frames into B_wm) with a
+    :class:`WorldModelAttachment` plugged onto its service bus."""
+    system = AcceRLSystem(cfg, rl, rt, collect_frames=True, seed=seed, **kw)
+    system.attach(WorldModelAttachment(
+        wm, wm_params=wm_params,
+        num_imagination_workers=num_imagination_workers,
+        imagination_batch=imagination_batch, seed=seed))
+    return system

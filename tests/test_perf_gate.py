@@ -1,0 +1,108 @@
+"""CI perf-regression gate: wall-time band, exact memory proxies, parity
+bounds, and shape-signature alignment between quick and full runs."""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.perf_gate import gate  # noqa: E402
+
+
+def _write(d, name, payload):
+    (d / name).write_text(json.dumps(payload))
+
+
+def _dirs(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    return base, fresh
+
+
+def _shape(n, t_s, mem, diff=0.0):
+    return {"n": n, "v": 64, "d": 128, "t_fused_s": t_s,
+            "fused_peak_intermediate_bytes": mem, "loss_abs_diff": diff}
+
+
+def test_gate_passes_within_band(tmp_path):
+    base, fresh = _dirs(tmp_path)
+    _write(base, "BENCH_x.json", {"shapes": [_shape(4096, 0.010, 1024)]})
+    _write(fresh, "BENCH_x.json", {"shapes": [_shape(4096, 0.018, 1024)]})
+    checked, failures = gate(base, fresh, tolerance=2.0)
+    assert checked == ["BENCH_x.json"] and not failures
+
+
+def test_gate_fails_on_walltime_regression(tmp_path):
+    base, fresh = _dirs(tmp_path)
+    _write(base, "BENCH_x.json", {"shapes": [_shape(4096, 0.010, 1024)]})
+    _write(fresh, "BENCH_x.json", {"shapes": [_shape(4096, 0.025, 1024)]})
+    _, failures = gate(base, fresh, tolerance=2.0)
+    assert len(failures) == 1 and "t_fused_s" in failures[0]
+
+
+def test_gate_fails_on_memory_growth(tmp_path):
+    base, fresh = _dirs(tmp_path)
+    _write(base, "BENCH_x.json", {"shapes": [_shape(4096, 0.010, 1024)]})
+    _write(fresh, "BENCH_x.json", {"shapes": [_shape(4096, 0.010, 1025)]})
+    _, failures = gate(base, fresh, tolerance=2.0)
+    assert len(failures) == 1 and "memory proxy" in failures[0]
+
+
+def test_gate_fails_on_parity_blowup(tmp_path):
+    base, fresh = _dirs(tmp_path)
+    _write(base, "BENCH_x.json", {"shapes": [_shape(4096, 0.01, 1024, 0.0)]})
+    _write(fresh, "BENCH_x.json", {"shapes": [_shape(4096, 0.01, 1024, 0.5)]})
+    _, failures = gate(base, fresh)
+    assert len(failures) == 1 and "parity" in failures[0]
+
+
+def test_gate_aligns_by_shape_signature(tmp_path):
+    """A quick fresh run covering a subset of the baseline's shapes gates
+    only the overlap — full-only shapes are skipped, reordering is fine."""
+    base, fresh = _dirs(tmp_path)
+    _write(base, "BENCH_x.json", {"shapes": [_shape(4096, 0.010, 1024),
+                                             _shape(65536, 0.500, 4096)]})
+    _write(fresh, "BENCH_x.json", {"shapes": [_shape(4096, 0.012, 1024)]})
+    checked, failures = gate(base, fresh, tolerance=2.0)
+    assert checked and not failures
+    _write(fresh, "BENCH_x.json", {"shapes": [_shape(4096, 0.099, 1024)]})
+    _, failures = gate(base, fresh, tolerance=2.0)
+    assert failures and "n=4096" in failures[0]
+
+
+def test_gate_fails_on_missing_gated_key(tmp_path):
+    """Renaming/removing a gated metric must fail, not silently un-gate."""
+    base, fresh = _dirs(tmp_path)
+    rec = _shape(4096, 0.010, 1024)
+    _write(base, "BENCH_x.json", {"shapes": [rec]})
+    renamed = {k: v for k, v in rec.items()
+               if k != "fused_peak_intermediate_bytes"}
+    renamed["fused_peak_bytes_v2"] = 999999
+    _write(fresh, "BENCH_x.json", {"shapes": [renamed]})
+    _, failures = gate(base, fresh, tolerance=2.0)
+    assert len(failures) == 1 and "missing" in failures[0]
+
+
+def test_gate_fails_on_missing_gated_container(tmp_path):
+    """Renaming a container that HOLDS gated metrics (e.g. the 'shapes'
+    list) must fail too — otherwise zero metrics get compared while the
+    gate reports OK."""
+    base, fresh = _dirs(tmp_path)
+    _write(base, "BENCH_x.json", {"shapes": [_shape(4096, 0.010, 1024)]})
+    _write(fresh, "BENCH_x.json", {"results": [_shape(4096, 0.010, 1024)]})
+    _, failures = gate(base, fresh, tolerance=2.0)
+    assert len(failures) == 1 and "missing" in failures[0]
+
+
+def test_gate_fails_on_missing_fresh_file(tmp_path):
+    base, fresh = _dirs(tmp_path)
+    _write(base, "BENCH_x.json", {"shapes": []})
+    _, failures = gate(base, fresh)
+    assert failures and "missing" in failures[0]
+
+
+def test_gate_ignores_non_bench_files(tmp_path):
+    base, fresh = _dirs(tmp_path)
+    _write(base, "throughput.json", {"sps_env_s": 1.0})   # not BENCH_*
+    checked, failures = gate(base, fresh)
+    assert not checked and not failures

@@ -1,0 +1,121 @@
+"""Weight-store transport tests (paper App. D.6 / G.3, Table 8): every
+transport must deliver the SAME tree under the drain protocol, versions
+must be monotone under concurrent publish/acquire, and payloads must never
+tear (a consumer always sees the tree matching the version it acquired)."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.runtime import (DirectTransport, DiskTransport,
+                           SerializedTransport, VersionedWeightStore)
+
+TRANSPORTS = {
+    "nccl_direct": DirectTransport,
+    "host_serialized": SerializedTransport,
+    "shared_storage": DiskTransport,
+}
+
+
+def _params(version: int):
+    """A version-stamped tree so payload/version tears are detectable."""
+    base = np.float32(version)
+    return {"w": np.full((4, 3), base),
+            "nested": {"b": np.arange(6, dtype=np.float32) + base,
+                       "v": np.array([version], np.int32)}}
+
+
+def _assert_tree_matches(got, version: int):
+    np.testing.assert_array_equal(np.asarray(got["nested"]["v"]), [version])
+    np.testing.assert_allclose(np.asarray(got["w"]),
+                               np.full((4, 3), np.float32(version)))
+    np.testing.assert_allclose(np.asarray(got["nested"]["b"]),
+                               np.arange(6, dtype=np.float32) + version)
+
+
+# ---------------------------------------------------------------------------
+# drain-protocol parity across transports
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(TRANSPORTS))
+def test_transport_parity_under_drain(name):
+    """begin_publish → draining; publish clears the flag atomically with the
+    swap; the acquired tree is identical regardless of transport."""
+    store = VersionedWeightStore(transport=TRANSPORTS[name]())
+    for v in range(3):
+        store.begin_publish()
+        assert store.draining, "drain signal must precede the swap"
+        store.publish(_params(v), v)
+        assert not store.draining, "publish must clear drain atomically"
+        got, version = store.acquire(newer_than=v - 1, timeout=5.0)
+        assert version == v
+        _assert_tree_matches(got, v)
+    # stale acquire: nothing newer than the last version
+    assert store.acquire(newer_than=2, timeout=0.1) is None
+
+
+@pytest.mark.parametrize("name", sorted(TRANSPORTS))
+def test_transport_delivers_fresh_copy_or_reference(name):
+    """Serialized/disk transports must deliver a COPY (mutating the
+    producer's tree after publish must not corrupt the consumer's view)."""
+    store = VersionedWeightStore(transport=TRANSPORTS[name]())
+    params = _params(7)
+    store.publish(params, 7)
+    params["w"][:] = -1.0          # producer mutates after publish
+    got, _ = store.acquire()
+    if name == "nccl_direct":      # reference semantics by design
+        np.testing.assert_allclose(np.asarray(got["w"]), -1.0)
+    else:
+        _assert_tree_matches(got, 7)
+
+
+# ---------------------------------------------------------------------------
+# concurrent publish/acquire stress
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(TRANSPORTS))
+def test_concurrent_publish_acquire_stress(name):
+    """One publisher racing several drain-respecting consumers: every
+    consumer must observe strictly increasing versions, never a torn
+    payload, and must reach the final version."""
+    n_versions, n_consumers = 25, 4
+    store = VersionedWeightStore(transport=TRANSPORTS[name]())
+    errors = []
+    done = threading.Event()
+
+    def publisher():
+        try:
+            for v in range(n_versions):
+                store.begin_publish()
+                store.publish(_params(v), v)
+        except Exception as e:       # noqa: BLE001
+            errors.append(("publisher", e))
+        finally:
+            done.set()
+
+    def consumer(idx):
+        last = -1
+        try:
+            while last < n_versions - 1:
+                got = store.acquire(newer_than=last, timeout=5.0)
+                if got is None:
+                    if done.is_set() and store.version() == last:
+                        break
+                    continue
+                tree, version = got
+                assert version > last, (idx, version, last)
+                _assert_tree_matches(tree, version)
+                last = version
+            assert last == n_versions - 1, (idx, last)
+        except Exception as e:       # noqa: BLE001
+            errors.append((f"consumer-{idx}", e))
+
+    threads = [threading.Thread(target=consumer, args=(i,))
+               for i in range(n_consumers)]
+    threads.append(threading.Thread(target=publisher))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    assert not any(t.is_alive() for t in threads), "stress test deadlocked"
+    assert not errors, errors
