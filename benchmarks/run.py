@@ -10,7 +10,8 @@
 | gipo_ablation     | Fig. 8, Table 9 (GIPO vs PPO under staleness)    |
 | value_recompute   | Fig. 7, App. C.1 (fused JIT-GAE, ~30% speedup)   |
 | sync_overhead     | Table 8 (weight-sync transports, policy lag)     |
-| sample_efficiency | Fig. 4b (WM vs model-free real-step efficiency)  |
+| sample_efficiency | Fig. 4b (WM vs model-free) + real/imagined diets |
+| backpressure      | channel policies under saturation (perf-gated)   |
 | roofline_report   | deliverable (g): dry-run roofline table          |
 """
 from __future__ import annotations
@@ -21,7 +22,7 @@ import traceback
 
 MODULES = ("fused_loss", "value_recompute", "gipo_ablation",
            "sync_overhead", "throughput", "task_success",
-           "sample_efficiency", "roofline_report")
+           "sample_efficiency", "backpressure", "roofline_report")
 
 
 def main() -> None:

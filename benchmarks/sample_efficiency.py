@@ -6,9 +6,16 @@ trajectories (the paper's 1,000 OOD trajectories). We count REAL
 environment steps consumed to reach a target mean return — the paper's
 claim is a ~200× reduction; the structural reproduction asserts
 WM ≪ model-free.
+
+Additionally sweeps ``rt.mix_real_fraction`` ∈ {0.0, 0.25, 0.5} (ROADMAP
+"Mixed real/imagined training diets"): the same WM system with the policy
+trainer's MixedExperienceSource pinned to each real-segment share, so the
+bench JSON records how the real/imagined diet trades real-step cost
+against the pure-imagination extreme (0.0 = paper §4).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict
 
 import numpy as np
@@ -73,6 +80,42 @@ def run(quick: bool = True) -> Dict:
           f"{m_wm['img_train_steps']} updates = {wm_steps_per_update:.1f} "
           f"(+{m_wm['imagined_steps']} imagined)")
     print(f"  real-sample efficiency ratio: {ratio:.1f}x (paper: up to 200x)")
+
+    # --- real/imagined diet curve (rt.mix_real_fraction sweep) -------------
+    # segment_horizon must equal wm.imagine_horizon: a mixed diet collates
+    # real and imagined segments into one super-batch (bind() enforces it)
+    diet_wall = 30.0 if quick else 120.0
+    result["diet_curve"] = []
+    for frac in (0.0, 0.25, 0.5):
+        rt_f = dataclasses.replace(rt, mix_real_fraction=frac)
+        sys_f = AcceRLWMSystem(cfg, rl, rt_f, wm, wm_params=pre,
+                               suite=suite,
+                               segment_horizon=wm.imagine_horizon,
+                               max_episode_steps=12, imagination_batch=8)
+        sys_f.img_trainer.state = sys_f.img_trainer.state._replace(
+            params=init_params)
+        m_f = sys_f.run_wm(train_steps=10_000, wall_timeout_s=diet_wall)
+        src = sys_f.trainer.source.stats()
+        consumed = src["real_consumed"] + src["imagined_consumed"]
+        rec = {
+            "real_fraction": frac,
+            "img_train_steps": m_f["img_train_steps"],
+            "real_env_steps": m_f["real_env_steps"],
+            "imagined_steps": m_f["imagined_steps"],
+            "real_consumed": src["real_consumed"],
+            "imagined_consumed": src["imagined_consumed"],
+            "realized_real_share": (src["real_consumed"] / consumed
+                                    if consumed else 0.0),
+            "real_steps_per_update": (m_f["real_env_steps"]
+                                      / max(m_f["img_train_steps"], 1)),
+            "mean_return": m_f["mean_return"],
+        }
+        result["diet_curve"].append(rec)
+        print(f"  diet f={frac:4.2f}: real share "
+              f"{rec['realized_real_share']:.2f} | "
+              f"{rec['real_steps_per_update']:.1f} real steps/update | "
+              f"return {rec['mean_return']:.2f}")
+
     save("sample_efficiency", result)
     return result
 

@@ -219,6 +219,23 @@ class WMConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class TransportConfig:
+    """Cross-process transport (runtime/transport): socket/SHM experience
+    channels + the weight-store wire for remote rollout workers (the
+    paper's physical isolation of rollout from training)."""
+
+    kind: str = "socket"              # {"socket", "shm"} — shm moves large
+                                      # payloads out-of-band via shared memory
+    host: str = "127.0.0.1"
+    port: int = 0                     # 0 = ephemeral
+    remote_rollout_workers: int = 0   # spawned rollout worker PROCESSES
+    envs_per_worker: int = 1          # rollout envs inside each process
+    heartbeat_s: float = 0.25         # child metrics/health report interval
+    connect_timeout_s: float = 20.0
+    shm_threshold_bytes: int = 1 << 16
+
+
+@dataclasses.dataclass(frozen=True)
 class RuntimeConfig:
     """Asynchronous runtime (paper §3, eq. 1)."""
 
@@ -244,6 +261,11 @@ class RuntimeConfig:
     # WM mode: target share of REAL segments in the policy trainer's batch
     # (MixedExperienceSource over B and B_img). 0.0 = paper §4 (pure B_img).
     mix_real_fraction: float = 0.0
+    # -- cross-process transport (runtime/transport) -------------------------
+    # remote_rollout_workers > 0 spawns that many rollout worker processes
+    # whose channels/weight endpoints cross the boundary over this config.
+    transport: TransportConfig = dataclasses.field(
+        default_factory=TransportConfig)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -7,6 +7,13 @@ scale differ.
 
     PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
         --shape train_4k --steps 3 --local
+
+``--remote-rollout N`` switches to the asynchronous runtime demo instead:
+an :class:`AcceRLSystem` with N rollout worker processes spawned behind
+the transport subsystem (socket channels + weight-store wire), trained
+for ``--steps`` policy updates on a reduced config:
+
+    PYTHONPATH=src python -m repro.launch.train --remote-rollout 2 --steps 3
 """
 from __future__ import annotations
 
@@ -40,7 +47,18 @@ def main() -> None:
                     choices=("auto", "pallas", "jnp"),
                     help="hot-op routing: Pallas on TPU / jnp twins "
                          "elsewhere (auto), or force one side")
+    ap.add_argument("--remote-rollout", type=int, default=0, metavar="N",
+                    help="run the async AcceRLSystem demo with N rollout "
+                         "worker processes behind the transport subsystem "
+                         "(reduced config; ignores --shape)")
+    ap.add_argument("--remote-transport", default="socket",
+                    choices=("socket", "shm"),
+                    help="experience/weight wire for --remote-rollout")
     args = ap.parse_args()
+
+    if args.remote_rollout:
+        _run_remote_rollout(args)
+        return
 
     cfg = get_config(args.arch)
     shape = get_shape(args.shape)
@@ -98,6 +116,40 @@ def main() -> None:
             print(f"step {i}: loss {float(metrics['loss']):.4f} "
                   f"gnorm {float(metrics['grad_norm']):.2f} "
                   f"({time.perf_counter() - t0:.2f}s)")
+
+
+def _run_remote_rollout(args) -> None:
+    """Asynchronous-system demo with remote rollout worker processes."""
+    from repro.configs import reduced
+    from repro.configs.base import RuntimeConfig, TransportConfig
+    from repro.runtime import AcceRLSystem
+
+    cfg = reduced(get_config(args.arch), layers=2, d_model=64)
+    rl = RLConfig(grad_accum=1, lr_policy=1e-4, lr_value=1e-3,
+                  fused_loss=args.fused_loss,
+                  kernel_dispatch=args.kernel_dispatch)
+    rt = RuntimeConfig(
+        num_rollout_workers=1, inference_batch=4,
+        transport=TransportConfig(remote_rollout_workers=args.remote_rollout,
+                                  kind=args.remote_transport))
+    system = AcceRLSystem(cfg, rl, rt, suite="spatial", segment_horizon=4,
+                          max_episode_steps=12, batch_episodes=4)
+    print(f"async system: 1 local + {args.remote_rollout} remote rollout "
+          f"worker(s) over {args.remote_transport} "
+          f"@ {system.transport_server.address}")
+    t0 = time.time()
+    m = system.run_async(train_steps=args.steps, wall_timeout_s=300.0)
+    print(f"trained {m['train_steps']} steps in {time.time() - t0:.1f}s | "
+          f"env SPS {m['sps_env']:.1f} | policy lag "
+          f"{m['mean_policy_lag']:.2f}")
+    for name, h in system.health().items():
+        line = f"  {name:20s} {h['state']}"
+        snap = m["services"].get(name, {})
+        counters = snap.get("counters", {})
+        for key in ("env_steps", "steps", "batches", "requests"):
+            if key in counters:
+                line += f"  {key}={int(counters[key])}"
+        print(line + (f"  error={h['error']}" if h["error"] else ""))
 
 
 if __name__ == "__main__":

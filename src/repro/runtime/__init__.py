@@ -45,4 +45,14 @@ from repro.runtime.scheduler import (  # noqa: F401
 from repro.runtime.inference import InferenceService  # noqa: F401
 from repro.runtime.rollout import RolloutWorker  # noqa: F401
 from repro.runtime.trainer import TrainerWorker  # noqa: F401
+from repro.runtime.transport import (  # noqa: F401
+    ChannelClosed,
+    RemoteRolloutHost,
+    RemoteWorkerSpec,
+    ShmChannel,
+    SocketChannel,
+    TransportError,
+    TransportServer,
+    WeightStoreTransport,
+)
 from repro.runtime.orchestrator import AcceRLSystem  # noqa: F401

@@ -152,6 +152,9 @@ class InferenceService(Service):
                 if got is not None:
                     params, version = got
                     self.metrics.inc("weight_swaps")
+                    # bridged gauge: remote workers report which policy
+                    # version their colocated inference pool is serving
+                    self.metrics.set_gauge("weight_version", float(version))
                 if params is None:
                     continue
             reqs = self._collect_window()

@@ -42,7 +42,8 @@ class AcceRLSystem:
                  suite: str = "spatial", segment_horizon: int = 8,
                  max_episode_steps: int = 30, batch_episodes: int = 8,
                  latency=None, transport=None, seed: int = 0,
-                 collect_frames: bool = False):
+                 collect_frames: bool = False,
+                 remote_latency_ms=None, remote_latency_sigma: float = 1.0):
         if cfg.num_prefix_tokens == 0:
             # a VLA policy always consumes the observation frame — give
             # text-only backbones a 1-token frame-embedding prefix
@@ -50,6 +51,8 @@ class AcceRLSystem:
         self.cfg, self.rl, self.rt = cfg, rl, rt
         self.suite = suite
         self.seed = seed
+        self.max_episode_steps = max_episode_steps
+        self.segment_horizon = segment_horizon
         self.store = VersionedWeightStore(transport=transport)
         # B: real trajectory segments -> trainer
         self.experience = FifoChannel(rt.replay_capacity,
@@ -60,6 +63,21 @@ class AcceRLSystem:
         self.resampler = DynamicWeightedResampler(TASKS_PER_SUITE, seed=seed)
         self.registry = ServiceRegistry()
         self.attachments: List = []
+        tcfg = rt.transport
+        self.transport_server = None
+        self.remote_hosts: List = []
+        if tcfg.remote_rollout_workers > 0:
+            # registered FIRST: the wire endpoint starts before any child
+            # spawns and stops last, so shutdown stays cooperative
+            from repro.runtime.transport import TransportServer
+            self.transport_server = self.registry.register(TransportServer(
+                host=tcfg.host, port=tcfg.port,
+                shm_threshold=tcfg.shm_threshold_bytes))
+            self.transport_server.add_channel("experience", self.experience)
+            if self.frame_channel is not None:
+                self.transport_server.add_channel("frames",
+                                                  self.frame_channel)
+            self.transport_server.set_store(self.store)
         self.inference = self.registry.register(
             InferenceService(cfg, self.store, rt, seed=seed))
         self.trainer = self.registry.register(
@@ -75,6 +93,30 @@ class AcceRLSystem:
                 frame_channel=self.frame_channel))
             for i in range(rt.num_rollout_workers)
         ]
+        if tcfg.remote_rollout_workers > 0:
+            # each host spawns + contains ONE child process running its own
+            # inference pool + rollout envs, bridged back over the wire
+            from repro.runtime.transport import (RemoteRolloutHost,
+                                                 RemoteWorkerSpec)
+            for i in range(tcfg.remote_rollout_workers):
+                spec = RemoteWorkerSpec(
+                    name=f"remote-rollout-{i}", cfg=cfg, rl=rl, rt=rt,
+                    address=self.transport_server.address,
+                    channel="experience",
+                    frame_channel=("frames" if self.frame_channel is not None
+                                   else None),
+                    suite=suite, segment_horizon=segment_horizon,
+                    max_episode_steps=max_episode_steps,
+                    num_envs=tcfg.envs_per_worker,
+                    seed=seed * 1000 + rt.num_rollout_workers + i,
+                    use_shm=(tcfg.kind == "shm"),
+                    shm_threshold=tcfg.shm_threshold_bytes,
+                    connect_timeout_s=tcfg.connect_timeout_s,
+                    latency_mean_ms=remote_latency_ms,
+                    latency_sigma=remote_latency_sigma,
+                    heartbeat_s=tcfg.heartbeat_s)
+                self.remote_hosts.append(self.registry.register(
+                    RemoteRolloutHost(spec, self.transport_server)))
 
     # ------------------------------------------------------------- attachments
     def attach(self, attachment) -> "AcceRLSystem":
@@ -95,6 +137,11 @@ class AcceRLSystem:
                  wall_timeout_s: float = 300.0) -> Dict:
         """Synchronous baseline: rollout barrier → train → broadcast —
         the same services under the barrier scheduler."""
+        if self.remote_hosts:
+            raise RuntimeError(
+                "the synchronous baseline is single-process: remote "
+                "rollout workers (rt.transport.remote_rollout_workers) "
+                "free-run and cannot join the step/episode barriers")
         return BarrierScheduler(episodes_per_round=episodes_per_round).run(
             self, train_steps=train_steps, wall_timeout_s=wall_timeout_s)
 
@@ -121,7 +168,7 @@ class AcceRLSystem:
         import jax
         fn = make_inference_fn(self.cfg, temperature=0.35)
         env = ManipulationEnv(
-            suite=self.suite, max_steps=self.workers[0].env.max_steps,
+            suite=self.suite, max_steps=self.max_episode_steps,
             action_vocab=self.cfg.action_vocab_size,
             action_dim=self.cfg.action_dim, seed=seed)
         key = jax.random.PRNGKey(seed)
@@ -150,10 +197,13 @@ class AcceRLSystem:
 
     def metrics(self, wall_s: float) -> Dict:
         """One metric schema for every consumer, rebuilt on the per-service
-        registries; attachments extend it in place."""
-        env_steps = sum(w.env_steps for w in self.workers)
-        episodes = sum(w.episodes_done for w in self.workers)
-        rets = [r for w in self.workers for r in w.returns]
+        registries; attachments extend it in place. Remote rollout hosts
+        mirror their child's counters, so they aggregate exactly like
+        local workers — the schema does not change with the topology."""
+        rollouts = self.workers + self.remote_hosts
+        env_steps = sum(w.env_steps for w in rollouts)
+        episodes = sum(w.episodes_done for w in rollouts)
+        rets = [r for w in rollouts for r in w.returns]
         m = {
             "wall_s": wall_s,
             "train_steps": self.trainer.steps_done,
@@ -165,7 +215,7 @@ class AcceRLSystem:
             "inference_util": self.inference.utilization(),
             "mean_policy_lag": self.trainer.metrics.series_mean("policy_lag"),
             "mean_return": float(np.mean(rets)) if rets else 0.0,
-            "success_rate": (sum(w.successes for w in self.workers)
+            "success_rate": (sum(w.successes for w in rollouts)
                              / max(episodes, 1)),
             "buffer_dropped": self.experience.total_dropped,
             "inference_batches": self.inference.batches_run,

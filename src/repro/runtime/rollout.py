@@ -173,8 +173,13 @@ class RolloutWorker(Service):
         traj["task_id"] = task_id
         traj["success"] = float(success)
 
-        for seg in episode_to_segments(traj, self.segment_horizon):
+        segments = episode_to_segments(traj, self.segment_horizon)
+        for seg in segments:
             self.experience.put(seg)
+        self.metrics.inc("segments", float(len(segments)))
+        # bridged gauges: a RemoteServiceHost mirrors these to the parent,
+        # so policy-staleness is visible for out-of-process workers too
+        self.metrics.set_gauge("policy_version", float(version))
         if self.frame_channel is not None:
             for i in range(len(traj["rewards"])):
                 self.frame_channel.put({

@@ -56,6 +56,9 @@ class MetricsRegistry:
         self._counters: Dict[str, float] = {}
         self._gauges: Dict[str, float] = {}
         self._series: Dict[str, List[float]] = {}
+        # cross-process bridge: series summaries adopted from a remote
+        # replica (RemoteServiceHost mirrors its child through these)
+        self._remote_series: Dict[str, Dict] = {}
 
     # -- counters -----------------------------------------------------------
     def inc(self, key: str, by: float = 1.0) -> float:
@@ -89,7 +92,24 @@ class MetricsRegistry:
     def series_mean(self, key: str, default: float = 0.0) -> float:
         with self._lock:
             s = self._series.get(key)
-            return sum(s) / len(s) if s else default
+            if s:
+                return sum(s) / len(s)
+            remote = self._remote_series.get(key)
+            return remote["mean"] if remote else default
+
+    # -- cross-process bridging ---------------------------------------------
+    def apply_remote(self, snapshot: Dict) -> None:
+        """Adopt a snapshot reported by a remote (cross-process) replica:
+        counters/gauges overwrite same-named local keys — the remote is
+        the source of truth for them — and series arrive pre-summarized
+        (count/mean/last), feeding ``snapshot()`` / ``series_mean()``."""
+        with self._lock:
+            for k, v in snapshot.get("counters", {}).items():
+                self._counters[k] = float(v)
+            for k, v in snapshot.get("gauges", {}).items():
+                self._gauges[k] = float(v)
+            self._remote_series = {k: dict(v) for k, v in
+                                   snapshot.get("series", {}).items()}
 
     # -- timers -------------------------------------------------------------
     @contextlib.contextmanager
@@ -103,15 +123,17 @@ class MetricsRegistry:
 
     def snapshot(self) -> Dict:
         with self._lock:
+            series = {k: dict(v) for k, v in self._remote_series.items()}
+            series.update({
+                k: {"count": len(v),
+                    "mean": (sum(v) / len(v)) if v else 0.0,
+                    "last": v[-1] if v else 0.0}
+                for k, v in self._series.items()
+            })
             return {
                 "counters": dict(self._counters),
                 "gauges": dict(self._gauges),
-                "series": {
-                    k: {"count": len(v),
-                        "mean": (sum(v) / len(v)) if v else 0.0,
-                        "last": v[-1] if v else 0.0}
-                    for k, v in self._series.items()
-                },
+                "series": series,
             }
 
 

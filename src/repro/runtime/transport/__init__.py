@@ -1,0 +1,36 @@
+"""Cross-process transport subsystem (paper §3 "physical isolation").
+
+PR 2 left ``pop_batch`` / ``publish``/``acquire`` as the seam for
+crossing a process boundary; this package is the crossing:
+
+  * :mod:`codec`   — versioned, zero-copy-friendly pytree wire format;
+  * :mod:`channel` — :class:`SocketChannel` / :class:`ShmChannel`, the
+    ExperienceChannel contract (incl. backpressure verdicts) over the wire;
+  * :mod:`server`  — :class:`TransportServer`, the parent-side endpoint
+    (a Service on the bus) hosting channels + the weight store;
+  * :mod:`weights` — :class:`WeightStoreTransport`, remote
+    publish/acquire with the drain protocol;
+  * :mod:`remote`  — :class:`RemoteRolloutHost` / ``worker_main``, the
+    spawned worker process pair with metrics/health bridging and crash
+    containment.
+"""
+from repro.runtime.transport.codec import (  # noqa: F401
+    CodecError,
+    decode_pytree,
+    encode_pytree,
+)
+from repro.runtime.transport.channel import (  # noqa: F401
+    ChannelClosed,
+    ShmChannel,
+    SocketChannel,
+    TransportError,
+    WireClient,
+)
+from repro.runtime.transport.server import TransportServer  # noqa: F401
+from repro.runtime.transport.weights import WeightStoreTransport  # noqa: F401
+from repro.runtime.transport.remote import (  # noqa: F401
+    RemoteRolloutHost,
+    RemoteServiceHost,
+    RemoteWorkerSpec,
+    worker_main,
+)

@@ -1,0 +1,271 @@
+"""Client-side transport channels: the ExperienceChannel contract over a
+process boundary.
+
+A :class:`SocketChannel` is a proxy for a channel hosted by a
+:class:`~repro.runtime.transport.server.TransportServer` in another
+process. It implements the same ``put`` / ``pop_batch`` surface as
+:class:`~repro.runtime.experience.FifoChannel`, with the same backpressure
+semantics — the *server-side* channel's policy decides, and the boolean
+verdict (accepted / dropped / block-timed-out) crosses the wire:
+
+  * ``put`` returns False iff the remote channel rejected the item;
+  * ``pop_batch(n, timeout)`` blocks up to ``timeout`` (None = forever),
+    long-polling the server in short slices so a concurrent ``close()``
+    always unblocks it promptly (it returns None, like a timeout);
+  * after ``close()``, ``put`` returns False and ``pop_batch`` returns
+    None — shutdown is a data-plane no-op, not an exception storm.
+
+:class:`ShmChannel` speaks the identical protocol but moves large payloads
+out-of-band through POSIX shared memory: the socket carries only the
+segment name, the bytes never transit the TCP stack. Ownership rule:
+whoever *creates* a segment unlinks it, after the consuming side has
+acknowledged (the reply for requests; the next frame on the same
+connection for responses).
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.runtime.experience import ExperienceChannel
+from repro.runtime.transport.codec import (decode_pytree, encode_pytree,
+                                           recv_frame, send_frame)
+
+try:
+    from multiprocessing import shared_memory
+except ImportError:  # pragma: no cover — stdlib on every target platform
+    shared_memory = None
+
+POLL_S = 0.5          # per-RPC slice of a long pop/acquire wait
+
+__all__ = ["TransportError", "ChannelClosed", "WireClient", "long_poll",
+           "SocketChannel", "ShmChannel", "shm_read", "shm_write"]
+
+
+class TransportError(RuntimeError):
+    """A wire-level failure (server error, protocol violation)."""
+
+
+class ChannelClosed(TransportError):
+    """The connection is gone — closed locally or by the peer."""
+
+
+def shm_write(data: bytes) -> "shared_memory.SharedMemory":
+    """Create a shared-memory segment holding ``data`` (caller unlinks)."""
+    if shared_memory is None:
+        raise TransportError("shared memory unavailable on this platform")
+    shm = shared_memory.SharedMemory(create=True, size=max(len(data), 1))
+    shm.buf[:len(data)] = data
+    return shm
+
+
+def shm_read(name: str, size: int) -> bytes:
+    """Copy ``size`` bytes out of segment ``name`` (no unlink — the
+    creator owns the lifetime).
+
+    No resource-tracker compensation is needed even though attaching
+    registers the name on CPython < 3.13: spawned workers INHERIT the
+    parent's tracker process, so the attach registration collapses into
+    the creator's (the tracker cache is a set) and the creator's unlink
+    removes the single entry. A worker killed while holding segments
+    leaves them to that same tracker's exit cleanup — which is the
+    tracker working as intended, not a leak."""
+    if shared_memory is None:
+        raise TransportError("shared memory unavailable on this platform")
+    shm = shared_memory.SharedMemory(name=name)
+    try:
+        return bytes(shm.buf[:size])
+    finally:
+        shm.close()
+
+
+class WireClient:
+    """One blocking request/response connection with a call lock.
+
+    Each proxy object owns one connection; concurrent callers serialize on
+    the lock (requests are short except deliberately-bounded long-polls).
+    ``close()`` from any thread shuts the socket down, which unblocks a
+    caller parked in ``recv`` with :class:`ChannelClosed`.
+    """
+
+    def __init__(self, address: Tuple[str, int], *,
+                 connect_timeout: float = 20.0,
+                 shm_threshold: int = 1 << 16):
+        deadline = time.monotonic() + connect_timeout
+        last: Optional[Exception] = None
+        while True:
+            try:
+                self._sock = socket.create_connection(
+                    address, timeout=connect_timeout)
+                break
+            except OSError as e:       # server may still be binding
+                last = e
+                if time.monotonic() >= deadline:
+                    raise TransportError(
+                        f"cannot connect to transport server at "
+                        f"{address}: {e}") from last
+                time.sleep(0.05)
+        self._sock.settimeout(None)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._lock = threading.Lock()
+        self._shm_threshold = shm_threshold
+        self.closed = False
+
+    def request(self, header: Dict, body: bytes = b"", *,
+                oob: bool = False) -> Tuple[Dict, bytes]:
+        """One round-trip. ``oob=True`` routes a large body through shared
+        memory instead of the socket (the SHM data plane)."""
+        shm = None
+        if (oob and shared_memory is not None
+                and len(body) >= self._shm_threshold):
+            shm = shm_write(body)
+            header = {**header, "shm": shm.name, "shm_size": len(body)}
+            body = b""
+        try:
+            with self._lock:
+                if self.closed:
+                    raise ChannelClosed("transport client is closed")
+                try:
+                    send_frame(self._sock, header, body)
+                    resp = recv_frame(self._sock)
+                except (OSError, ValueError) as e:
+                    self.close()
+                    raise ChannelClosed(f"transport connection lost: {e}") \
+                        from e
+            if resp is None:
+                self.close()
+                raise ChannelClosed("server closed the connection")
+            rh, rbody = resp
+            if rh.get("err"):
+                raise TransportError(rh["err"])
+            if rh.get("shm"):          # out-of-band response body
+                rbody = shm_read(rh["shm"], rh["shm_size"])
+            return rh, rbody
+        finally:
+            if shm is not None:
+                shm.close()
+                try:                   # server consumed it during the RTT
+                    shm.unlink()
+                except FileNotFoundError:
+                    pass
+
+    def close(self) -> None:
+        self.closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+def long_poll(client: WireClient, make_header,
+              timeout: Optional[float]) -> Optional[Tuple[Dict, bytes]]:
+    """Blocking-request idiom shared by pop_batch and acquire: re-issue
+    the request in bounded ``POLL_S`` slices until the server answers
+    ``ok``, the deadline passes, or the client closes (→ None, so a
+    concurrent ``close()`` always unblocks the caller within one slice).
+    ``make_header(slice_timeout)`` builds each request; a ``timeout`` of 0
+    still makes exactly one non-blocking attempt."""
+    deadline = None if timeout is None else time.monotonic() + timeout
+    first = True
+    while not client.closed:
+        remaining = (None if deadline is None
+                     else deadline - time.monotonic())
+        if not first and remaining is not None and remaining <= 0:
+            return None
+        t = (POLL_S if remaining is None
+             else max(min(POLL_S, remaining), 0.0))
+        first = False
+        try:
+            resp, body = client.request(make_header(t))
+        except ChannelClosed:
+            return None
+        if resp.get("ok"):
+            return resp, body
+    return None
+
+
+class SocketChannel(ExperienceChannel):
+    """Remote ExperienceChannel proxy: TCP data plane."""
+
+    #: whether payload bodies travel out-of-band (overridden by ShmChannel)
+    oob = False
+
+    def __init__(self, address: Tuple[str, int], name: str, *,
+                 connect_timeout: float = 20.0,
+                 shm_threshold: int = 1 << 16):
+        self.name = name
+        self.address = tuple(address)
+        self._client = WireClient(address, connect_timeout=connect_timeout,
+                                  shm_threshold=shm_threshold)
+
+    # -- ExperienceChannel surface -------------------------------------------
+    def put(self, item: Any) -> bool:
+        try:
+            resp, _ = self._client.request(
+                {"m": "chan.put", "chan": self.name},
+                encode_pytree(item), oob=self.oob)
+        except ChannelClosed:
+            return False
+        return bool(resp.get("ok"))
+
+    def pop_batch(self, n: int, timeout: Optional[float] = None
+                  ) -> Optional[List[Any]]:
+        got = long_poll(
+            self._client,
+            lambda t: {"m": "chan.pop", "chan": self.name, "n": n,
+                       "timeout": t, "want_shm": self.oob},
+            timeout)
+        return None if got is None else decode_pytree(got[1])
+
+    def __len__(self) -> int:
+        try:
+            resp, _ = self._client.request({"m": "chan.len",
+                                            "chan": self.name})
+        except ChannelClosed:
+            return 0
+        return int(resp["len"])
+
+    def stats(self) -> Dict[str, float]:
+        try:
+            resp, _ = self._client.request({"m": "chan.stats",
+                                            "chan": self.name})
+        except ChannelClosed:
+            return {"depth": 0.0}
+        return {k: float(v) for k, v in resp["stats"].items()}
+
+    # -- lifecycle ------------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return self._client.closed
+
+    def close(self) -> None:
+        """Tear the connection down; a blocked ``pop_batch`` returns None
+        within one poll slice, subsequent ``put``s return False."""
+        self._client.close()
+
+
+class ShmChannel(SocketChannel):
+    """SocketChannel with a shared-memory data plane for large payloads.
+
+    The control messages (verdicts, lengths, small items under the
+    threshold) still ride the socket; anything bigger moves through a
+    per-message SHM segment, so segment batches and weight payloads cross
+    the boundary at memcpy speed.
+    """
+
+    oob = True
+
+    def __init__(self, address: Tuple[str, int], name: str, *,
+                 connect_timeout: float = 20.0,
+                 shm_threshold: int = 1 << 16):
+        if shared_memory is None:
+            raise TransportError(
+                "ShmChannel needs multiprocessing.shared_memory")
+        super().__init__(address, name, connect_timeout=connect_timeout,
+                         shm_threshold=shm_threshold)

@@ -1,0 +1,304 @@
+"""Remote worker processes: RemoteServiceHost (parent) + worker_main (child).
+
+The paper's *physical isolation* claim means rollout/inference workers in
+their own OS processes. The shape here keeps the service architecture
+intact on both sides of the boundary:
+
+  * the parent registers a :class:`RemoteRolloutHost` — an ordinary
+    :class:`~repro.runtime.service.Service` on the bus whose job is to
+    spawn, monitor, and contain ONE child process. If the child dies or
+    reports an internal failure, the host raises inside its monitor
+    thread, which marks it FAILED exactly like a local crash — schedulers
+    fail fast instead of hanging (crash containment crosses the boundary);
+  * the child (``worker_main``, always the ``spawn`` start method — never
+    fork a process holding jax threads) builds a self-contained worker: a
+    local :class:`~repro.runtime.inference.InferenceService` pulling
+    weights through a :class:`WeightStoreTransport`, plus N
+    :class:`~repro.runtime.rollout.RolloutWorker` envs pushing segments
+    through a Socket/Shm channel — the D-VLA-style high-concurrency
+    rollout worker with colocated inference;
+  * every heartbeat the child posts a ``worker.report`` (merged metric
+    snapshot + per-service health); the reply carries the stop flag, so
+    shutdown is cooperative with a terminate fallback. The host mirrors
+    the report into its own :class:`MetricsRegistry`
+    (``apply_remote``), which is how the remote worker appears in
+    ``AcceRLSystem.metrics()["services"]`` with no schema change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig, RLConfig, RuntimeConfig
+from repro.runtime.service import Service
+from repro.runtime.transport.channel import (ChannelClosed, ShmChannel,
+                                             SocketChannel, TransportError,
+                                             WireClient)
+from repro.runtime.transport.weights import WeightStoreTransport
+
+__all__ = ["RemoteWorkerSpec", "RemoteServiceHost", "RemoteRolloutHost",
+           "worker_main"]
+
+
+@dataclasses.dataclass
+class RemoteWorkerSpec:
+    """Everything a spawned child needs — plain picklable data only (no
+    callables: env latency travels as (mean_ms, sigma), not a closure)."""
+
+    name: str
+    cfg: ModelConfig
+    rl: RLConfig
+    rt: RuntimeConfig
+    address: Tuple[str, int]
+    kind: str = "rollout"
+    channel: str = "experience"
+    frame_channel: Optional[str] = None
+    suite: str = "spatial"
+    segment_horizon: int = 8
+    max_episode_steps: int = 30
+    num_envs: int = 1
+    seed: int = 0
+    use_shm: bool = False
+    shm_threshold: int = 1 << 16
+    connect_timeout_s: float = 20.0
+    latency_mean_ms: Optional[float] = None
+    latency_sigma: float = 1.0
+    heartbeat_s: float = 0.25
+    temperature: float = 1.0
+
+
+# ---------------------------------------------------------------------------
+# child side
+# ---------------------------------------------------------------------------
+
+def _merge_snapshots(snaps: List[Dict]) -> Dict:
+    """Fold per-service snapshots into one: counters sum, gauges last-wins,
+    series summaries combine count-weighted."""
+    counters: Dict[str, float] = {}
+    gauges: Dict[str, float] = {}
+    series: Dict[str, Dict] = {}
+    for snap in snaps:
+        for k, v in snap.get("counters", {}).items():
+            counters[k] = counters.get(k, 0.0) + v
+        gauges.update(snap.get("gauges", {}))
+        for k, s in snap.get("series", {}).items():
+            cur = series.setdefault(k, {"count": 0, "mean": 0.0,
+                                        "last": 0.0})
+            total = cur["count"] + s["count"]
+            if s["count"]:
+                cur["mean"] = (cur["mean"] * cur["count"]
+                               + s["mean"] * s["count"]) / total
+                cur["count"] = total
+                cur["last"] = s["last"]
+    return {"counters": counters, "gauges": gauges, "series": series}
+
+
+def _build_report(services: List[Service]) -> Dict:
+    healthy = all(s.error is None for s in services)
+    first_error = next((repr(s.error) for s in services
+                        if s.error is not None), None)
+    return {
+        "health": {"healthy": healthy,
+                   "state": "failed" if not healthy else "running",
+                   "error": first_error},
+        "services": {s.name: {"health": s.health(),
+                              "metrics": s.metrics.snapshot()}
+                     for s in services},
+        "merged": _merge_snapshots([s.metrics.snapshot()
+                                    for s in services]),
+    }
+
+
+def worker_main(spec: RemoteWorkerSpec) -> int:
+    """Child-process entry: build the remote service set, run it, report.
+
+    Returns the exit code (0 clean stop, 3 internal service failure).
+    Heavy imports live here, not at module scope — the parent never pays
+    for them and the child initializes its own jax runtime.
+    """
+    from repro.envs.toy_manipulation import TASKS_PER_SUITE, lognormal_latency
+    from repro.core.resampler import DynamicWeightedResampler
+    from repro.runtime.inference import InferenceService
+    from repro.runtime.rollout import RolloutWorker
+
+    Channel = ShmChannel if spec.use_shm else SocketChannel
+    experience = Channel(spec.address, spec.channel,
+                         connect_timeout=spec.connect_timeout_s,
+                         shm_threshold=spec.shm_threshold)
+    frames = (Channel(spec.address, spec.frame_channel,
+                      connect_timeout=spec.connect_timeout_s,
+                      shm_threshold=spec.shm_threshold)
+              if spec.frame_channel else None)
+    store = WeightStoreTransport(spec.address, use_shm=spec.use_shm,
+                                 connect_timeout=spec.connect_timeout_s,
+                                 shm_threshold=spec.shm_threshold)
+    control = WireClient(spec.address,
+                         connect_timeout=spec.connect_timeout_s)
+
+    latency = (lognormal_latency(spec.latency_mean_ms,
+                                 sigma=spec.latency_sigma, seed=spec.seed)
+               if spec.latency_mean_ms else None)
+    # task selection is resampled locally per child — each process keeps
+    # its own success history (no cross-process resampler sync)
+    resampler = DynamicWeightedResampler(TASKS_PER_SUITE, seed=spec.seed)
+    inference = InferenceService(spec.cfg, store, spec.rt,
+                                 temperature=spec.temperature,
+                                 seed=spec.seed)
+    workers = [
+        RolloutWorker(i, spec.cfg, inference, experience, suite=spec.suite,
+                      resampler=resampler,
+                      segment_horizon=spec.segment_horizon,
+                      max_steps=spec.max_episode_steps, latency=latency,
+                      seed=spec.seed * 1000 + i, frame_channel=frames)
+        for i in range(spec.num_envs)
+    ]
+    services: List[Service] = [inference] + list(workers)
+    for s in services:
+        s.start()
+
+    exit_code = 0
+    try:
+        while True:
+            report = _build_report(services)
+            try:
+                resp, _ = control.request({"m": "worker.report",
+                                           "worker": spec.name,
+                                           "report": report})
+            except (TransportError, ChannelClosed):
+                break                       # parent gone — shut down
+            if resp.get("stop"):
+                break
+            if not report["health"]["healthy"]:
+                exit_code = 3               # parent saw the report; die loud
+                break
+            time.sleep(spec.heartbeat_s)
+    finally:
+        for s in reversed(services):
+            s.stop()
+        for s in services:
+            s.join(timeout=5.0)
+        try:                                # best-effort final numbers
+            control.request({"m": "worker.report", "worker": spec.name,
+                             "report": _build_report(services)})
+        except (TransportError, ChannelClosed):
+            pass
+        for closable in (experience, frames, store, control):
+            if closable is not None:
+                closable.close()
+    return exit_code
+
+
+def _child_entry(spec: RemoteWorkerSpec) -> None:
+    sys.exit(worker_main(spec))
+
+
+# ---------------------------------------------------------------------------
+# parent side
+# ---------------------------------------------------------------------------
+
+class RemoteServiceHost(Service):
+    """Parent-side handle for one spawned worker process.
+
+    Lifecycle mapping: ``start`` spawns the child, the service thread is a
+    liveness monitor, ``stop`` raises the cooperative stop flag (delivered
+    in the next ``worker.report`` reply), ``join`` waits for the process
+    with a terminate → kill escalation so shutdown can never hang.
+    """
+
+    def __init__(self, spec: RemoteWorkerSpec, server, *,
+                 role: str = "rollout"):
+        super().__init__(spec.name, role=role)
+        self.spec = spec
+        self.server = server
+        server.register_worker_sink(spec.name, self)
+        self.process: Optional[multiprocessing.process.BaseProcess] = None
+        self._stop_remote = False
+        self._remote_error: Optional[str] = None
+        self.reports_seen = 0
+        self.remote_health: Dict = {}
+        self.remote_services: Dict = {}
+
+    # -- report sink (called from a server connection thread) -----------------
+    @property
+    def stop_requested(self) -> bool:
+        return self._stop_remote or self._stop.is_set()
+
+    def apply_report(self, report: Dict) -> None:
+        self.remote_health = report.get("health", {})
+        self.remote_services = report.get("services", {})
+        self.metrics.apply_remote(report.get("merged", {}))
+        self.reports_seen += 1
+        if not self.remote_health.get("healthy", True):
+            self._remote_error = (self.remote_health.get("error")
+                                  or "remote service failed")
+
+    # -- lifecycle ------------------------------------------------------------
+    def on_start(self) -> None:
+        ctx = multiprocessing.get_context("spawn")
+        self.process = ctx.Process(target=_child_entry, args=(self.spec,),
+                                   name=self.name, daemon=True)
+        self.process.start()
+
+    def _run(self) -> None:
+        proc = self.process
+        while not self._stop.is_set():
+            if self._remote_error is not None:
+                raise RuntimeError(
+                    f"remote worker {self.name!r} reported a failed "
+                    f"service: {self._remote_error}")
+            if proc is not None and not proc.is_alive():
+                if self.stop_requested:
+                    break
+                raise RuntimeError(
+                    f"remote worker {self.name!r} process died "
+                    f"(exitcode={proc.exitcode})")
+            time.sleep(0.05)
+
+    def on_stop(self) -> None:
+        self._stop_remote = True
+
+    def join(self, timeout: float = 5.0) -> None:
+        proc = self.process
+        if proc is not None:
+            proc.join(timeout=timeout)
+            if proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=2.0)
+            if proc.is_alive():            # pragma: no cover — last resort
+                proc.kill()
+                proc.join(timeout=2.0)
+        super().join(timeout=1.0)
+
+
+class RemoteRolloutHost(RemoteServiceHost):
+    """Rollout-flavored host: mirrors the counters the orchestrator
+    aggregates across rollout workers, so a remote worker contributes to
+    ``env_steps`` / ``episodes`` / ``success_rate`` / ``mean_return``
+    exactly like a local one."""
+
+    def __init__(self, spec: RemoteWorkerSpec, server):
+        super().__init__(spec, server, role="rollout")
+
+    @property
+    def env_steps(self) -> int:
+        return int(self.metrics.counter("env_steps"))
+
+    @property
+    def episodes_done(self) -> int:
+        return int(self.metrics.counter("episodes"))
+
+    @property
+    def successes(self) -> int:
+        return int(self.metrics.counter("successes"))
+
+    @property
+    def returns(self) -> List[float]:
+        s = self.metrics.snapshot()["series"].get("return")
+        if not s or not s["count"]:
+            return []
+        # the child ships a count/mean summary; expanding it preserves the
+        # count-weighted global mean the orchestrator computes
+        return [s["mean"]] * int(s["count"])

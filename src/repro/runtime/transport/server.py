@@ -1,0 +1,217 @@
+"""TransportServer: the parent-process endpoint of the transport layer.
+
+One listening socket serves every remote worker of a system. It is itself
+a :class:`~repro.runtime.service.Service` (role ``transport``) registered
+FIRST on the bus, so it starts before any remote host spawns a child and
+stops after every child has been told to exit.
+
+Exposed endpoints (JSON header ``m`` field):
+
+  ======================  ==================================================
+  ``chan.put``            push one encoded item into a hosted channel —
+                          the channel's own backpressure policy answers
+  ``chan.pop``            blocking ``pop_batch(n, timeout)`` (bounded
+                          slices; clients long-poll)
+  ``chan.len/stats``      depth / stats snapshot
+  ``store.acquire``       newest weights with version > ``newer_than``
+                          (encoded once per version, then cache-served)
+  ``store.state``         (version, draining) — the drain protocol's poll
+  ``store.drain``         remote ``begin_publish`` (drain signal)
+  ``store.publish``       remote publish (a trainer across the wire)
+  ``worker.report``       child → parent metrics/health bridge; the reply
+                          carries the stop flag (cooperative shutdown)
+  ``ping``                liveness probe
+  ======================  ==================================================
+
+Every connection gets its own handler thread; blocking pops therefore
+never head-of-line-block other clients. Large response bodies go
+out-of-band via shared memory when the client asks (``want_shm``) — the
+server defers the unlink until the same connection's next frame, which is
+the client's implicit ack.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+from repro.runtime.service import Service
+from repro.runtime.transport.channel import shared_memory, shm_read, shm_write
+from repro.runtime.transport.codec import (decode_pytree, encode_pytree,
+                                           recv_frame, send_frame)
+
+__all__ = ["TransportServer"]
+
+
+class TransportServer(Service):
+    """Serves channels + the weight store to remote worker processes."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
+                 shm_threshold: int = 1 << 16, name: str = "transport"):
+        super().__init__(name, role="transport")
+        self._channels: Dict[str, Any] = {}
+        self._store = None
+        self._sinks: Dict[str, Any] = {}          # worker name -> host
+        self._shm_threshold = shm_threshold
+        self._conns: list = []
+        self._conn_lock = threading.Lock()
+        # weights are encoded once per published version, then cache-served
+        # to every remote consumer (the LlamaRL-style broadcast amortized)
+        self._weights_cache: Tuple[int, Optional[bytes]] = (-1, None)
+        self._cache_lock = threading.Lock()
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))         # bound at construction so
+        self._listener.listen(64)                 # specs can carry the port
+        self._listener.settimeout(0.2)
+        self.address: Tuple[str, int] = self._listener.getsockname()[:2]
+
+    # -- endpoint registration ------------------------------------------------
+    def add_channel(self, name: str, channel: Any) -> None:
+        self._channels[name] = channel
+
+    def set_store(self, store: Any) -> None:
+        self._store = store
+
+    def register_worker_sink(self, name: str, host: Any) -> None:
+        """Route ``worker.report`` frames for ``name`` to ``host``."""
+        self._sinks[name] = host
+
+    # -- service surface ------------------------------------------------------
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:            # listener closed during shutdown
+                break
+            conn.settimeout(None)
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._conn_lock:
+                self._conns.append(conn)
+            self.metrics.inc("connections")
+            threading.Thread(target=self._serve, args=(conn,), daemon=True,
+                             name=f"{self.name}-conn").start()
+
+    def on_stop(self) -> None:
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._conn_lock:
+            conns, self._conns = self._conns, []
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+
+    # -- connection loop ------------------------------------------------------
+    def _serve(self, conn: socket.socket) -> None:
+        pending_shm = None                 # reply segment awaiting its ack
+        try:
+            while not self._stop.is_set():
+                frame = recv_frame(conn)
+                if pending_shm is not None:
+                    # the next frame (or EOF) is the client's implicit ack
+                    pending_shm.close()
+                    try:
+                        pending_shm.unlink()
+                    except FileNotFoundError:
+                        pass
+                    pending_shm = None
+                if frame is None:
+                    break
+                header, body = frame
+                if header.get("shm"):      # request body arrived via SHM
+                    body = shm_read(header["shm"], header["shm_size"])
+                self.metrics.inc("requests")
+                self.metrics.inc("rx_bytes", float(len(body)))
+                resp, resp_body = self._dispatch(header, body)
+                if (header.get("want_shm") and shared_memory is not None
+                        and len(resp_body) >= self._shm_threshold):
+                    pending_shm = shm_write(resp_body)
+                    resp = {**resp, "shm": pending_shm.name,
+                            "shm_size": len(resp_body)}
+                    resp_body = b""
+                self.metrics.inc(
+                    "tx_bytes", float(send_frame(conn, resp, resp_body)))
+        except (OSError, ValueError):
+            pass                           # peer vanished — their problem
+        finally:
+            if pending_shm is not None:
+                pending_shm.close()
+                try:
+                    pending_shm.unlink()
+                except FileNotFoundError:
+                    pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+            with self._conn_lock:
+                if conn in self._conns:
+                    self._conns.remove(conn)
+
+    # -- request dispatch -----------------------------------------------------
+    def _dispatch(self, h: Dict, body: bytes) -> Tuple[Dict, bytes]:
+        try:
+            m = h.get("m")
+            if m == "chan.put":
+                ok = self._channels[h["chan"]].put(decode_pytree(body))
+                return {"ok": bool(ok)}, b""
+            if m == "chan.pop":
+                got = self._channels[h["chan"]].pop_batch(
+                    h["n"], timeout=h.get("timeout", 0.0))
+                if got is None:
+                    return {"ok": False}, b""
+                return {"ok": True}, encode_pytree(got)
+            if m == "chan.len":
+                return {"len": len(self._channels[h["chan"]])}, b""
+            if m == "chan.stats":
+                return {"stats": self._channels[h["chan"]].stats()}, b""
+            if m == "store.acquire":
+                raw = self._store.acquire_raw(
+                    newer_than=h.get("newer_than", -1),
+                    timeout=h.get("timeout", 0.0))
+                if raw is None:
+                    return {"ok": False}, b""
+                payload, version = raw
+                return ({"ok": True, "version": version},
+                        self._weights_blob(payload, version))
+            if m == "store.state":
+                return {"version": self._store.version(),
+                        "draining": self._store.draining}, b""
+            if m == "store.drain":
+                self._store.begin_publish()
+                return {"ok": True}, b""
+            if m == "store.publish":
+                self._store.publish(decode_pytree(body, copy=True),
+                                    h["version"])
+                return {"ok": True}, b""
+            if m == "worker.report":
+                host = self._sinks.get(h["worker"])
+                if host is None:
+                    return {"err": f"unknown worker {h['worker']!r}"}, b""
+                host.apply_report(h.get("report", {}))
+                return {"stop": bool(host.stop_requested)}, b""
+            if m == "ping":
+                return {"ok": True}, b""
+            return {"err": f"unknown method {m!r}"}, b""
+        except Exception as e:  # noqa: BLE001 — fault goes back to the caller
+            return {"err": f"{type(e).__name__}: {e}"}, b""
+
+    def _weights_blob(self, payload: Any, version: int) -> bytes:
+        with self._cache_lock:
+            if self._weights_cache[0] == version:
+                return self._weights_cache[1]
+        params = self._store.transport.recv(payload)
+        blob = encode_pytree(params)
+        with self._cache_lock:
+            self._weights_cache = (version, blob)
+        return blob

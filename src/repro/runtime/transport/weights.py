@@ -1,0 +1,100 @@
+"""WeightStoreTransport: the VersionedWeightStore contract over the wire.
+
+Remote workers pull fresh policy weights by version (the LlamaRL-style
+distributed broadcast, pull-flavored): this proxy exposes the exact
+surface :class:`~repro.runtime.weight_store.VersionedWeightStore` gives
+the in-process inference pool —
+
+  * ``acquire(newer_than, timeout)`` — newest ``(params, version)``,
+    blocking until something newer exists (long-polled in bounded slices
+    so ``close()`` always unblocks it);
+  * ``draining`` / ``version()`` — the drain-protocol poll (App. D.6),
+    cached for ``state_ttl`` seconds so a hot inference loop does not
+    turn every iteration into an RPC;
+  * ``begin_publish()`` / ``publish(params, version)`` — the trainer side,
+    so a trainer could live across the wire too (transport parity with
+    the in-process store is what the tests pin down).
+
+An :class:`~repro.runtime.inference.InferenceService` constructed with
+this object instead of the local store is a *remote* inference worker —
+no code change on its side, which is the whole point of the seam.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional, Tuple
+
+from repro.runtime.transport.channel import (ChannelClosed, WireClient,
+                                             long_poll)
+from repro.runtime.transport.codec import decode_pytree, encode_pytree
+
+__all__ = ["WeightStoreTransport"]
+
+
+class WeightStoreTransport:
+    """Client-side remote weight store (publish/acquire over the wire)."""
+
+    def __init__(self, address: Tuple[str, int], *, use_shm: bool = False,
+                 connect_timeout: float = 20.0,
+                 shm_threshold: int = 1 << 16, state_ttl: float = 0.05):
+        self._client = WireClient(address, connect_timeout=connect_timeout,
+                                  shm_threshold=shm_threshold)
+        self._use_shm = use_shm
+        self._state_ttl = state_ttl
+        self._state = (-float("inf"), -1, False)   # (stamp, version, drain)
+
+    # -- state poll (cached) --------------------------------------------------
+    def _fresh_state(self) -> Tuple[int, bool]:
+        stamp, version, draining = self._state
+        if time.monotonic() - stamp < self._state_ttl:
+            return version, draining
+        try:
+            resp, _ = self._client.request({"m": "store.state"})
+        except ChannelClosed:
+            # shutdown is a data-plane no-op here too: keep serving the
+            # last known state (acquire/put already degrade the same way);
+            # the worker's control loop is what notices the parent is gone
+            return version, False
+        version, draining = int(resp["version"]), bool(resp["draining"])
+        self._state = (time.monotonic(), version, draining)
+        return version, draining
+
+    @property
+    def draining(self) -> bool:
+        return self._fresh_state()[1]
+
+    def version(self) -> int:
+        return self._fresh_state()[0]
+
+    # -- inference side -------------------------------------------------------
+    def acquire(self, newer_than: int = -1,
+                timeout: Optional[float] = None
+                ) -> Optional[Tuple[Any, int]]:
+        """Newest (params, version) with version > ``newer_than``."""
+        got = long_poll(
+            self._client,
+            lambda t: {"m": "store.acquire", "newer_than": newer_than,
+                       "timeout": t, "want_shm": self._use_shm},
+            timeout)
+        if got is None:
+            return None
+        resp, body = got
+        return decode_pytree(body), int(resp["version"])
+
+    # -- trainer side ---------------------------------------------------------
+    def begin_publish(self) -> None:
+        self._client.request({"m": "store.drain"})
+        self._state = (-float("inf"), *self._state[1:])   # bust the cache
+
+    def publish(self, params: Any, version: int) -> None:
+        self._client.request({"m": "store.publish", "version": version},
+                             encode_pytree(params), oob=self._use_shm)
+        self._state = (-float("inf"), *self._state[1:])
+
+    # -- lifecycle ------------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return self._client.closed
+
+    def close(self) -> None:
+        self._client.close()

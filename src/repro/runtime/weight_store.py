@@ -129,8 +129,21 @@ class VersionedWeightStore:
     def acquire(self, newer_than: int = -1,
                 timeout: Optional[float] = None) -> Optional[Tuple[Any, int]]:
         """Newest (params, version); blocks until version > ``newer_than``."""
+        raw = self.acquire_raw(newer_than, timeout)
+        if raw is None:
+            return None
+        payload, version = raw
+        return self.transport.recv(payload), version
+
+    def acquire_raw(self, newer_than: int = -1,
+                    timeout: Optional[float] = None
+                    ) -> Optional[Tuple[Any, int]]:
+        """Newest (transport payload, version) WITHOUT ``transport.recv``:
+        the wire server (runtime/transport) re-serves the published
+        payload to many remote consumers and decodes/encodes once per
+        version instead of once per acquire."""
         with self._cv:
             if not self._cv.wait_for(
                     lambda: self._version > newer_than, timeout=timeout):
                 return None
-            return self.transport.recv(self._payload), self._version
+            return self._payload, self._version

@@ -176,6 +176,16 @@ class WorldModelAttachment:
                 "world-model attachment needs real transitions: build the "
                 "system with collect_frames=True (B_wm)")
         cfg, rl, rt = system.cfg, system.rl, system.rt
+        if (0.0 < rt.mix_real_fraction < 1.0
+                and system.segment_horizon != self.wm.imagine_horizon):
+            # a mixed diet collates real and imagined segments into ONE
+            # super-batch — their time axes must agree, or np.stack dies
+            # deep inside the prefetcher thread instead of here
+            raise ValueError(
+                f"mix_real_fraction={rt.mix_real_fraction} blends real "
+                f"segments (horizon {system.segment_horizon}) with "
+                f"imagined ones (horizon {self.wm.imagine_horizon}) in one "
+                f"batch; set segment_horizon == wm.imagine_horizon")
         seed = self.seed
         self.img_channel = FifoChannel(rt.img_replay_capacity,
                                        policy=rt.replay_backpressure)

@@ -1,0 +1,175 @@
+"""Wire codec edge cases: bf16, empty arrays, 0-d scalars, nested
+dict/tuple/list pytrees, version/schema header validation, zero-copy
+decode, and round-trip parity with the in-process channel (a segment that
+crosses the wire must be indistinguishable from one that did not)."""
+import numpy as np
+import pytest
+
+from repro.runtime.experience import FifoChannel
+from repro.runtime.rollout import episode_to_segments
+from repro.runtime.transport.codec import (CodecError, decode_pytree,
+                                           encode_pytree)
+
+
+def assert_tree_equal(a, b, path=""):
+    assert type(a) is type(b) or (
+        isinstance(a, np.ndarray) and isinstance(b, np.ndarray)), \
+        f"{path}: {type(a)} vs {type(b)}"
+    if isinstance(a, dict):
+        assert list(a.keys()) == list(b.keys()), path
+        for k in a:
+            assert_tree_equal(a[k], b[k], f"{path}.{k}")
+    elif isinstance(a, (list, tuple)):
+        assert len(a) == len(b), path
+        for i, (x, y) in enumerate(zip(a, b)):
+            assert_tree_equal(x, y, f"{path}[{i}]")
+    elif isinstance(a, (np.ndarray, np.generic)):
+        assert a.dtype == b.dtype, f"{path}: {a.dtype} vs {b.dtype}"
+        assert a.shape == b.shape, f"{path}: {a.shape} vs {b.shape}"
+        np.testing.assert_array_equal(np.asarray(a, np.float64)
+                                      if a.dtype.name == "bfloat16"
+                                      else a,
+                                      np.asarray(b, np.float64)
+                                      if b.dtype.name == "bfloat16"
+                                      else b, err_msg=path)
+    else:
+        assert a == b, path
+
+
+# ---------------------------------------------------------------------------
+# structure round trips
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_nested_structures():
+    tree = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "nested": {"ints": np.arange(5, dtype=np.int64),
+                   "tup": (np.float32(1.5), [np.ones(2), None, "label"]),
+                   "flags": [True, False, 3, 2.5]},
+        "none": None,
+    }
+    out = decode_pytree(encode_pytree(tree))
+    assert_tree_equal(out, tree)
+    assert isinstance(out["nested"]["tup"], tuple)
+    assert isinstance(out["nested"]["tup"][1], list)
+
+
+def test_roundtrip_bf16():
+    jnp = pytest.importorskip("jax.numpy")
+    x = jnp.linspace(-3.0, 3.0, 37).astype(jnp.bfloat16).reshape(1, 37)
+    out = decode_pytree(encode_pytree({"w": x, "b": np.asarray(x)[0]}))
+    assert out["w"].dtype.name == "bfloat16"
+    np.testing.assert_array_equal(np.asarray(out["w"], np.float32),
+                                  np.asarray(x, np.float32))
+    np.testing.assert_array_equal(np.asarray(out["b"], np.float32),
+                                  np.asarray(x, np.float32)[0])
+
+
+def test_roundtrip_empty_arrays():
+    tree = {"e1": np.zeros((0,), np.float32),
+            "e2": np.zeros((3, 0, 2), np.int32),
+            "full": np.ones((2, 2))}
+    out = decode_pytree(encode_pytree(tree))
+    assert_tree_equal(out, tree)
+    assert out["e2"].shape == (3, 0, 2)
+
+
+def test_roundtrip_zero_d_scalars():
+    tree = {"v": np.int32(7), "f": np.float32(-2.5),
+            "arr0": np.array(5.5)}
+    out = decode_pytree(encode_pytree(tree))
+    assert isinstance(out["v"], np.int32) and out["v"] == 7
+    assert isinstance(out["f"], np.float32) and out["f"] == np.float32(-2.5)
+    # 0-d ndarray stays a 0-d ndarray (not promoted to a scalar or 1-d)
+    assert isinstance(out["arr0"], np.ndarray) and out["arr0"].shape == ()
+
+
+def test_zero_copy_views_and_copy_mode():
+    tree = {"x": np.arange(64, dtype=np.float32)}
+    blob = encode_pytree(tree)
+    view = decode_pytree(blob)["x"]
+    assert view.base is not None           # zero-copy: a view over the blob
+    assert not view.flags.writeable
+    copied = decode_pytree(blob, copy=True)["x"]
+    assert copied.flags.writeable
+    copied[:] = 0                           # writable, independent
+    np.testing.assert_array_equal(view, tree["x"])
+
+
+def test_non_contiguous_and_device_arrays():
+    jnp = pytest.importorskip("jax.numpy")
+    x = np.arange(24, dtype=np.float32).reshape(4, 6)
+    tree = {"t": x.T, "dev": jnp.arange(8)}   # transpose = non-contiguous
+    out = decode_pytree(encode_pytree(tree))
+    np.testing.assert_array_equal(out["t"], x.T)
+    np.testing.assert_array_equal(out["dev"], np.arange(8))
+
+
+# ---------------------------------------------------------------------------
+# header validation
+# ---------------------------------------------------------------------------
+
+def test_bad_magic_version_truncation():
+    blob = encode_pytree({"x": np.ones(4)})
+    with pytest.raises(CodecError):
+        decode_pytree(b"XXXX" + blob[4:])          # magic
+    bad_ver = bytearray(blob)
+    bad_ver[4:6] = (99).to_bytes(2, "big")
+    with pytest.raises(CodecError):
+        decode_pytree(bytes(bad_ver))              # wire version
+    with pytest.raises(CodecError):
+        decode_pytree(blob[:len(blob) - 8])        # truncated body
+    with pytest.raises(CodecError):
+        decode_pytree(b"ACR")                      # shorter than preamble
+
+
+def test_non_string_dict_keys_rejected():
+    with pytest.raises(CodecError):
+        encode_pytree({1: np.ones(2)})
+
+
+def test_unencodable_leaf_rejected():
+    with pytest.raises(CodecError):
+        encode_pytree({"fn": lambda: None})
+
+
+# ---------------------------------------------------------------------------
+# parity with the in-process channel
+# ---------------------------------------------------------------------------
+
+def _fake_episode(t=7, frame_dim=6, action_dim=3):
+    rng = np.random.default_rng(0)
+    traj = {
+        "obs_tokens": [rng.integers(0, 50, 5).astype(np.int32)
+                       for _ in range(t + 1)],
+        "frames": [rng.standard_normal(frame_dim).astype(np.float32)
+                   for _ in range(t + 1)],
+        "actions": [rng.integers(0, 8, action_dim).astype(np.int32)
+                    for _ in range(t + 1)],
+        "behavior_logp": [rng.standard_normal(action_dim).astype(np.float32)
+                          for _ in range(t + 1)],
+        "values": [float(v) for v in rng.standard_normal(t + 1)],
+        "rewards": [float(v) for v in rng.standard_normal(t)],
+        "dones": [0.0] * (t - 1) + [1.0],
+        "steps": list(range(t + 1)),
+        "policy_version": 3,
+        "task_id": 1,
+        "success": 1.0,
+    }
+    return episode_to_segments(traj, horizon=4)
+
+
+def test_segment_parity_with_in_process_channel():
+    """A rollout segment decoded off the wire must be leaf-for-leaf equal
+    (values, dtypes, shapes, scalar-ness) to the one the in-process
+    channel delivers."""
+    segments = _fake_episode()
+    local = FifoChannel(16)
+    for seg in segments:
+        local.put(seg)
+    popped = local.pop_batch(len(segments), timeout=1.0)
+    wired = decode_pytree(encode_pytree(segments))
+    assert len(wired) == len(popped)
+    for a, b in zip(popped, wired):
+        assert_tree_equal(b, a)
+        assert isinstance(b["policy_version"], np.int32)

@@ -358,3 +358,25 @@ def test_wm_attaches_without_subclassing():
     assert m["imagined_steps"] > 0
     assert set(m["wm_updates"]) == {"obs", "reward"}
     assert m["real_env_steps"] == m["env_steps"]
+
+
+def test_mixed_diet_rejects_horizon_mismatch():
+    """A mixed real/imagined diet collates both segment kinds into one
+    super-batch — bind() must refuse mismatched time axes loudly instead
+    of letting np.stack die inside the prefetcher thread."""
+    from repro.configs import get_config, reduced
+    from repro.configs.base import RLConfig, RuntimeConfig, WMConfig
+    from repro.wm import AcceRLWMSystem
+
+    cfg = reduced(get_config("deepseek-7b"), layers=2, d_model=64)
+    rl = RLConfig(grad_accum=1)
+    wm = WMConfig(imagine_horizon=2, history_frames=2, diffusion_steps=4)
+    rt = RuntimeConfig(num_rollout_workers=1, mix_real_fraction=0.25)
+    with pytest.raises(ValueError, match="segment_horizon"):
+        AcceRLWMSystem(cfg, rl, rt, wm, segment_horizon=4,
+                       max_episode_steps=8)
+    # matching horizons bind fine; the pure-imagined extreme (0.0) never
+    # mixes kinds, so mismatched horizons stay allowed there
+    AcceRLWMSystem(cfg, rl, rt, wm, segment_horizon=2, max_episode_steps=8)
+    rt0 = RuntimeConfig(num_rollout_workers=1, mix_real_fraction=0.0)
+    AcceRLWMSystem(cfg, rl, rt0, wm, segment_horizon=4, max_episode_steps=8)

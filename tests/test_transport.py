@@ -1,0 +1,299 @@
+"""Transport-layer contract tests (no subprocesses — real sockets/SHM,
+both ends in-process): the ExperienceChannel semantics across the wire
+(backpressure verdicts, blocking pops, close-while-blocked), the
+WeightStoreTransport parity with the local store (drain protocol
+included), and the worker-report metrics bridge."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime.experience import FifoChannel, RingChannel
+from repro.runtime.service import MetricsRegistry
+from repro.runtime.transport import (RemoteRolloutHost, RemoteWorkerSpec,
+                                     ShmChannel, SocketChannel,
+                                     TransportError, TransportServer,
+                                     WeightStoreTransport)
+from repro.runtime.transport.channel import shared_memory
+from repro.runtime.weight_store import VersionedWeightStore
+
+
+@pytest.fixture()
+def server():
+    srv = TransportServer()
+    store = VersionedWeightStore()
+    srv.set_store(store)
+    srv.start()
+    srv.local_store = store
+    yield srv
+    srv.stop()
+    srv.join()
+
+
+def _channel(server, cls=SocketChannel, capacity=8, policy="drop_oldest",
+             name=None, **kw):
+    name = name or f"chan-{len(server._channels)}"
+    local = FifoChannel(capacity, policy=policy, block_timeout=0.2)
+    server.add_channel(name, local)
+    remote = cls(server.address, name, **kw)
+    return local, remote
+
+
+# ---------------------------------------------------------------------------
+# SocketChannel: the ExperienceChannel contract over the wire
+# ---------------------------------------------------------------------------
+
+def test_socket_channel_roundtrip(server):
+    local, remote = _channel(server)
+    item = {"x": np.arange(6, dtype=np.float32), "v": np.int32(3)}
+    assert remote.put(item)
+    assert len(remote) == 1 == len(local)
+    got = remote.pop_batch(1, timeout=1.0)
+    np.testing.assert_array_equal(got[0]["x"], item["x"])
+    assert isinstance(got[0]["v"], np.int32)
+    assert remote.stats()["pushed"] == 1.0
+
+
+@pytest.mark.parametrize("policy,expect_ok", [("drop_oldest", True),
+                                              ("drop_newest", False),
+                                              ("block", False)])
+def test_backpressure_verdict_crosses_the_wire(server, policy, expect_ok):
+    """The server-side policy decides; the producer's boolean verdict is
+    the same one the in-process channel would have returned."""
+    local, remote = _channel(server, capacity=2, policy=policy)
+    assert remote.put({"i": np.int32(0)})
+    assert remote.put({"i": np.int32(1)})
+    assert remote.put({"i": np.int32(2)}) is expect_ok   # channel is full
+    assert local.total_dropped == 1
+
+
+def test_block_policy_unblocks_on_remote_consumer(server):
+    # the server-side channel blocks the remote producer until the LOCAL
+    # consumer (the parent trainer, in the real topology) frees a slot
+    local = FifoChannel(1, policy="block", block_timeout=2.0)
+    server.add_channel("blk", local)
+    r = SocketChannel(server.address, "blk")
+    assert r.put({"i": np.int32(0)})
+    t = threading.Thread(
+        target=lambda: (time.sleep(0.1), local.pop_batch(1, timeout=1.0)))
+    t.start()
+    t0 = time.monotonic()
+    assert r.put({"i": np.int32(1)})      # held until the pop frees a slot
+    assert time.monotonic() - t0 >= 0.05
+    t.join()
+    r.close()
+
+
+def test_pop_timeout_and_zero_timeout(server):
+    _, remote = _channel(server)
+    t0 = time.monotonic()
+    assert remote.pop_batch(1, timeout=0.3) is None
+    assert 0.25 <= time.monotonic() - t0 < 2.0
+    assert remote.pop_batch(1, timeout=0) is None       # non-blocking probe
+    remote.put({"i": np.int32(0)})
+    assert remote.pop_batch(1, timeout=0) is not None
+
+
+def test_close_unblocks_remote_pop(server):
+    """Satellite acceptance: close() while a remote pop_batch is blocked
+    returns None promptly (within one poll slice), it does not hang; the
+    channel then degrades to no-op puts."""
+    _, remote = _channel(server)
+    out = []
+    t = threading.Thread(
+        target=lambda: out.append(remote.pop_batch(4, timeout=60.0)))
+    t.start()
+    time.sleep(0.2)
+    t0 = time.monotonic()
+    remote.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive(), "close() left pop_batch hanging"
+    assert time.monotonic() - t0 < 2.0
+    assert out == [None]
+    assert remote.put({"i": np.int32(0)}) is False      # no exception storm
+    assert len(remote) == 0
+
+
+def test_server_stop_unblocks_remote_pop(server):
+    _, remote = _channel(server)
+    out = []
+    t = threading.Thread(
+        target=lambda: out.append(remote.pop_batch(4, timeout=60.0)))
+    t.start()
+    time.sleep(0.2)
+    server.stop()
+    t.join(timeout=5.0)
+    assert not t.is_alive(), "server shutdown left pop_batch hanging"
+    assert out == [None]
+
+
+def test_unknown_channel_is_a_transport_error(server):
+    remote = SocketChannel(server.address, "nope")
+    with pytest.raises(TransportError):
+        remote.put({"i": np.int32(0)})
+    with pytest.raises(TransportError):
+        remote.stats()
+    remote.close()
+
+
+def test_ring_channel_over_the_wire(server):
+    ring = RingChannel(8, seed=0)
+    server.add_channel("ring", ring)
+    remote = SocketChannel(server.address, "ring")
+    for i in range(12):
+        assert remote.put({"i": np.int32(i)})
+    assert len(remote) == 8
+    assert ring.sample(3) is not None
+    remote.close()
+
+
+# ---------------------------------------------------------------------------
+# ShmChannel: same protocol, shared-memory data plane
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(shared_memory is None,
+                    reason="multiprocessing.shared_memory unavailable")
+def test_shm_channel_large_and_small_payloads(server):
+    _, remote = _channel(server, cls=ShmChannel, capacity=8,
+                         shm_threshold=256)
+    small = {"x": np.ones(4, np.float32)}                # in-band
+    big = {"w": np.arange(4096, dtype=np.float32)}       # out-of-band
+    assert remote.put(small) and remote.put(big)
+    got = remote.pop_batch(2, timeout=1.0)
+    np.testing.assert_array_equal(got[0]["x"], small["x"])
+    np.testing.assert_array_equal(got[1]["w"], big["w"])
+    remote.close()
+
+
+# ---------------------------------------------------------------------------
+# WeightStoreTransport: remote publish/acquire with the drain protocol
+# ---------------------------------------------------------------------------
+
+def _params(v):
+    return {"w": np.full((4, 3), np.float32(v)),
+            "nested": {"b": np.arange(6, dtype=np.float32) + v}}
+
+
+def test_weight_transport_acquire_parity(server):
+    remote = WeightStoreTransport(server.address, state_ttl=0.0)
+    assert remote.acquire(timeout=0.2) is None           # nothing published
+    for v in range(3):
+        server.local_store.begin_publish()
+        assert remote.draining, "drain signal must be visible remotely"
+        server.local_store.publish(_params(v), v)
+        got, version = remote.acquire(newer_than=v - 1, timeout=5.0)
+        assert version == v and not remote.draining
+        np.testing.assert_array_equal(got["w"], _params(v)["w"])
+        np.testing.assert_array_equal(got["nested"]["b"],
+                                      _params(v)["nested"]["b"])
+    assert remote.acquire(newer_than=2, timeout=0.1) is None
+    assert remote.version() == 2
+    remote.close()
+
+
+def test_weight_transport_remote_publish(server):
+    """A trainer across the wire: remote begin_publish/publish drive the
+    parent store exactly like local calls."""
+    remote = WeightStoreTransport(server.address, state_ttl=0.0)
+    remote.begin_publish()
+    assert server.local_store.draining
+    remote.publish(_params(5), 5)
+    assert not server.local_store.draining
+    got, version = server.local_store.acquire(newer_than=4, timeout=1.0)
+    assert version == 5
+    np.testing.assert_array_equal(got["w"], _params(5)["w"])
+    remote.close()
+
+
+def test_weight_transport_close_unblocks_acquire(server):
+    remote = WeightStoreTransport(server.address)
+    out = []
+    t = threading.Thread(
+        target=lambda: out.append(remote.acquire(timeout=60.0)))
+    t.start()
+    time.sleep(0.2)
+    remote.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and out == [None]
+
+
+def test_weights_encoded_once_per_version(server):
+    """The server cache-serves one encoded blob per version — the
+    broadcast cost is O(1) in the number of remote consumers."""
+    server.local_store.publish(_params(1), 1)
+    clients = [WeightStoreTransport(server.address) for _ in range(3)]
+    for c in clients:
+        got, v = c.acquire(timeout=5.0)
+        assert v == 1
+    assert server._weights_cache[0] == 1
+    for c in clients:
+        c.close()
+
+
+# ---------------------------------------------------------------------------
+# worker-report metrics bridge (no subprocess)
+# ---------------------------------------------------------------------------
+
+def _fake_report():
+    return {
+        "health": {"healthy": True, "state": "running", "error": None},
+        "services": {"rollout-0": {"health": {"state": "running"},
+                                   "metrics": {"counters": {}}}},
+        "merged": {"counters": {"env_steps": 40.0, "episodes": 5.0,
+                                "successes": 2.0},
+                   "gauges": {"policy_version": 3.0},
+                   "series": {"return": {"count": 5, "mean": 0.4,
+                                         "last": 1.0}}},
+    }
+
+
+def test_host_mirrors_remote_report(server):
+    from repro.configs import get_config, reduced
+    from repro.configs.base import RLConfig, RuntimeConfig
+    spec = RemoteWorkerSpec(name="remote-rollout-9",
+                            cfg=reduced(get_config("deepseek-7b")),
+                            rl=RLConfig(), rt=RuntimeConfig(),
+                            address=server.address)
+    host = RemoteRolloutHost(spec, server)      # never started: bridge only
+    host.apply_report(_fake_report())
+    assert host.env_steps == 40 and host.episodes_done == 5
+    assert host.successes == 2
+    assert host.returns == [0.4] * 5            # count-weighted expansion
+    snap = host.metrics.snapshot()
+    assert snap["counters"]["env_steps"] == 40.0
+    assert snap["gauges"]["policy_version"] == 3.0
+    assert snap["series"]["return"] == {"count": 5, "mean": 0.4,
+                                        "last": 1.0}
+    assert host.metrics.series_mean("return") == 0.4
+    assert "rollout-0" in host.remote_services
+
+
+def test_host_flags_unhealthy_report(server):
+    from repro.configs import get_config, reduced
+    from repro.configs.base import RLConfig, RuntimeConfig
+    spec = RemoteWorkerSpec(name="remote-rollout-8",
+                            cfg=reduced(get_config("deepseek-7b")),
+                            rl=RLConfig(), rt=RuntimeConfig(),
+                            address=server.address)
+    host = RemoteRolloutHost(spec, server)
+    report = _fake_report()
+    report["health"] = {"healthy": False, "state": "failed",
+                        "error": "RuntimeError('boom')"}
+    host.apply_report(report)
+    assert host._remote_error is not None and "boom" in host._remote_error
+
+
+def test_metrics_registry_apply_remote_merges_local_series():
+    m = MetricsRegistry("t")
+    m.apply_remote({"counters": {"c": 5.0}, "gauges": {},
+                    "series": {"remote_only": {"count": 2, "mean": 1.5,
+                                               "last": 2.0}}})
+    m.record("local_only", 4.0)
+    snap = m.snapshot()
+    assert snap["counters"]["c"] == 5.0
+    assert snap["series"]["remote_only"]["mean"] == 1.5
+    assert snap["series"]["local_only"]["mean"] == 4.0
+    assert m.series_mean("remote_only") == 1.5
+    assert m.series_mean("local_only") == 4.0
+    assert m.series_mean("absent", default=-1.0) == -1.0
