@@ -11,6 +11,11 @@ policy makes —
   * **block** — producer throughput is clamped to the consumer's rate
     (accept rate ≈ pop rate), buying low drop counts with idle producers.
 
+A second section measures the WIRE data plane: the same producer payload
+pushed through a real ``TransportServer`` + ``SocketChannel`` pair, one
+item per round-trip (``put``) vs one codec blob per flush (``put_many``)
+— the framing/RTT overhead the batched endpoint exists to amortize.
+
 Channel-level only — no model, no jax — so the numbers isolate the data
 plane. Emits ``BENCH_backpressure.json`` (registered with the perf gate:
 the committed baseline under ``experiments/bench`` is compared by CI; the
@@ -93,6 +98,59 @@ def _drive(policy: str, *, duration_s: float, capacity: int = 64,
     }
 
 
+def _drive_wire(batched: bool, *, duration_s: float, item_floats: int = 512,
+                flush: int = 16) -> Dict:
+    """One producer pushes fixed-size items over a real socket transport;
+    ``batched`` flushes ``flush`` items per ``put_many`` round-trip,
+    otherwise one ``put`` RPC per item. A drain thread keeps the hosted
+    channel from saturating so the number isolates wire overhead."""
+    from repro.runtime.transport import SocketChannel, TransportServer
+
+    server = TransportServer()
+    local = FifoChannel(8192, policy="drop_oldest")
+    server.add_channel("bench", local)
+    server.start()
+    remote = SocketChannel(server.address, "bench")
+    payload = {"x": np.zeros(item_floats, np.float32),
+               "meta": {"t": 0.0, "idx": 0}}
+    stop = threading.Event()
+
+    def drain() -> None:
+        while not stop.is_set():
+            local.pop_batch(max(min(len(local), 256), 1), timeout=0.02)
+
+    drainer = threading.Thread(target=drain, daemon=True)
+    drainer.start()
+    sent = accepted = 0
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < duration_s:
+        if batched:
+            verdicts = remote.put_many([payload] * flush)
+            sent += flush
+            accepted += sum(verdicts)
+        else:
+            accepted += bool(remote.put(payload))
+            sent += 1
+    wall = time.monotonic() - t0
+    stop.set()
+    drainer.join(timeout=2.0)
+    remote.close()
+    server.stop()
+    server.join()
+    rpcs = int(server.metrics.counter("requests"))
+    return {
+        "mode": "batched" if batched else "single",
+        "t_wall_s": round(wall, 3),
+        "flush": flush if batched else 1,
+        "item_bytes": int(payload["x"].nbytes),
+        "items_sent": sent,
+        "items_accepted": accepted,
+        "rpcs": rpcs,
+        "items_per_rpc": round(sent / max(rpcs, 1), 2),
+        "items_per_sec": round(sent / wall, 1),
+    }
+
+
 def run(quick: bool = True) -> Dict:
     duration = 2.0 if quick else 8.0
     result: Dict = {"duration_s_requested": duration, "sweep": []}
@@ -127,6 +185,25 @@ def run(quick: bool = True) -> Dict:
             by["drop_newest"]["staleness_mean"]
             / max(by["drop_oldest"]["staleness_mean"], 1e-9), 2),
     }
+
+    # -- wire section: put vs put_many over a real socket transport ----------
+    wire = {"single": _drive_wire(False, duration_s=duration),
+            "batched": _drive_wire(True, duration_s=duration)}
+    speedup = round(wire["batched"]["items_per_sec"]
+                    / max(wire["single"]["items_per_sec"], 1e-9), 2)
+    wire["batched_over_single_throughput"] = speedup
+    for rec in (wire["single"], wire["batched"]):
+        print(f"  wire/{rec['mode']:8s}: {rec['items_per_sec']:8.1f} "
+              f"items/s  ({rec['items_per_rpc']:5.2f} items/rpc)")
+    print(f"  wire: batched/single throughput x{speedup}")
+    # put_many's whole point: fewer round-trips per item. The throughput
+    # win follows but is load-sensitive (shared CI runners), so ONLY the
+    # structural claim is hard-asserted; the ratio is reported data.
+    assert (wire["batched"]["items_per_rpc"]
+            > 4 * wire["single"]["items_per_rpc"]), \
+        "put_many must amortize framing across many items per RPC"
+    result["wire"] = wire
+
     save("BENCH_backpressure", result)
     return result
 

@@ -219,6 +219,26 @@ class WMConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class SupervisionConfig:
+    """Worker-lifecycle supervision (runtime/transport/supervision.py).
+
+    ``restart="never"`` keeps the PR 3 semantics: any worker failure marks
+    its slot FAILED and schedulers fail fast. ``"on_failure"`` respawns
+    (spawn mode) or re-accepts a redial (connect mode) with exponential
+    backoff, up to ``max_restarts`` inside a sliding ``window_s``."""
+
+    restart: str = "never"            # {"never", "on_failure"}
+    max_restarts: int = 2             # budget inside the sliding window
+    window_s: float = 60.0
+    backoff_initial_s: float = 0.1
+    backoff_factor: float = 2.0
+    backoff_max_s: float = 2.0
+    # connect-mode stall detector: a report gap beyond this is a failure
+    # (0 = auto: 10 heartbeats, floored at 2s)
+    liveness_timeout_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
 class TransportConfig:
     """Cross-process transport (runtime/transport): socket/SHM experience
     channels + the weight-store wire for remote rollout workers (the
@@ -228,11 +248,23 @@ class TransportConfig:
                                       # payloads out-of-band via shared memory
     host: str = "127.0.0.1"
     port: int = 0                     # 0 = ephemeral
+    listen_addr: str = ""             # "host:port" override of host/port —
+                                      # bind 0.0.0.0 for multi-host workers
+    token: str = ""                   # shared secret for the worker.hello
+                                      # handshake (connect-mode workers)
     remote_rollout_workers: int = 0   # spawned rollout worker PROCESSES
+    connect_rollout_workers: int = 0  # slots for workers that DIAL IN
+                                      # (repro.launch.worker, other hosts)
     envs_per_worker: int = 1          # rollout envs inside each process
     heartbeat_s: float = 0.25         # child metrics/health report interval
     connect_timeout_s: float = 20.0
     shm_threshold_bytes: int = 1 << 16
+    # wire-client resilience: transparent redial budget after a
+    # server-side connection drop (0 = fail fast)
+    reconnect_attempts: int = 0
+    reconnect_backoff_s: float = 0.1
+    supervision: SupervisionConfig = dataclasses.field(
+        default_factory=SupervisionConfig)
 
 
 @dataclasses.dataclass(frozen=True)

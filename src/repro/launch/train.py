@@ -9,11 +9,27 @@ scale differ.
         --shape train_4k --steps 3 --local
 
 ``--remote-rollout N`` switches to the asynchronous runtime demo instead:
-an :class:`AcceRLSystem` with N rollout worker processes spawned behind
-the transport subsystem (socket channels + weight-store wire), trained
-for ``--steps`` policy updates on a reduced config:
+an :class:`AcceRLSystem` with N rollout worker processes hosted by the
+Supervisor behind the transport subsystem (socket channels + weight-store
+wire), trained for ``--steps`` policy updates on a reduced config:
 
     PYTHONPATH=src python -m repro.launch.train --remote-rollout 2 --steps 3
+
+``--serve-workers N`` is the two-terminal multi-host demo: this process
+binds ``--listen`` and waits for N connect-mode workers to dial in with
+``--token``; each worker is a separate ``repro.launch.worker`` process
+(any reachable host):
+
+    # terminal 1
+    PYTHONPATH=src python -m repro.launch.train --serve-workers 1 \
+        --listen 127.0.0.1:5555 --token sekrit --steps 3
+    # terminal 2
+    PYTHONPATH=src python -m repro.launch.worker \
+        --address 127.0.0.1:5555 --token sekrit
+
+``--restart on_failure`` puts either flavor under a restart budget: a
+killed worker is respawned (spawn mode) or its slot re-opened for a
+redial (connect mode) instead of failing the run.
 """
 from __future__ import annotations
 
@@ -49,14 +65,28 @@ def main() -> None:
                          "elsewhere (auto), or force one side")
     ap.add_argument("--remote-rollout", type=int, default=0, metavar="N",
                     help="run the async AcceRLSystem demo with N rollout "
-                         "worker processes behind the transport subsystem "
+                         "worker processes spawned under the Supervisor "
                          "(reduced config; ignores --shape)")
+    ap.add_argument("--serve-workers", type=int, default=0, metavar="N",
+                    help="host N connect-mode worker slots and wait for "
+                         "repro.launch.worker processes to dial in "
+                         "(two-terminal multi-host demo)")
+    ap.add_argument("--listen", default="127.0.0.1:0", metavar="HOST:PORT",
+                    help="TransportServer bind address for --serve-workers")
+    ap.add_argument("--token", default="",
+                    help="shared worker.hello secret for --serve-workers")
+    ap.add_argument("--restart", default="never",
+                    choices=("never", "on_failure"),
+                    help="supervision policy for remote/connect workers")
+    ap.add_argument("--max-restarts", type=int, default=2,
+                    help="restart budget per worker slot (with "
+                         "--restart on_failure)")
     ap.add_argument("--remote-transport", default="socket",
                     choices=("socket", "shm"),
                     help="experience/weight wire for --remote-rollout")
     args = ap.parse_args()
 
-    if args.remote_rollout:
+    if args.remote_rollout or args.serve_workers:
         _run_remote_rollout(args)
         return
 
@@ -119,9 +149,11 @@ def main() -> None:
 
 
 def _run_remote_rollout(args) -> None:
-    """Asynchronous-system demo with remote rollout worker processes."""
+    """Asynchronous-system demo with supervised remote rollout workers —
+    spawned child processes and/or connect-mode workers dialing in."""
     from repro.configs import reduced
-    from repro.configs.base import RuntimeConfig, TransportConfig
+    from repro.configs.base import (RuntimeConfig, SupervisionConfig,
+                                    TransportConfig)
     from repro.runtime import AcceRLSystem
 
     cfg = reduced(get_config(args.arch), layers=2, d_model=64)
@@ -130,13 +162,26 @@ def _run_remote_rollout(args) -> None:
                   kernel_dispatch=args.kernel_dispatch)
     rt = RuntimeConfig(
         num_rollout_workers=1, inference_batch=4,
-        transport=TransportConfig(remote_rollout_workers=args.remote_rollout,
-                                  kind=args.remote_transport))
+        transport=TransportConfig(
+            remote_rollout_workers=args.remote_rollout,
+            connect_rollout_workers=args.serve_workers,
+            kind=args.remote_transport,
+            listen_addr=args.listen if args.serve_workers else "",
+            token=args.token,
+            supervision=SupervisionConfig(restart=args.restart,
+                                          max_restarts=args.max_restarts)))
     system = AcceRLSystem(cfg, rl, rt, suite="spatial", segment_horizon=4,
                           max_episode_steps=12, batch_episodes=4)
-    print(f"async system: 1 local + {args.remote_rollout} remote rollout "
-          f"worker(s) over {args.remote_transport} "
-          f"@ {system.transport_server.address}")
+    host, port = system.transport_server.address
+    print(f"async system: 1 local + {args.remote_rollout} spawned + "
+          f"{args.serve_workers} connect-mode rollout worker(s) over "
+          f"{args.remote_transport} @ {host}:{port} "
+          f"(restart={args.restart})")
+    if args.serve_workers:
+        token_arg = f" --token {args.token}" if args.token else ""
+        print(f"dial in from another terminal/host:\n"
+              f"  PYTHONPATH=src python -m repro.launch.worker "
+              f"--address {host}:{port}{token_arg}")
     t0 = time.time()
     m = system.run_async(train_steps=args.steps, wall_timeout_s=300.0)
     print(f"trained {m['train_steps']} steps in {time.time() - t0:.1f}s | "

@@ -47,10 +47,12 @@ from repro.runtime.rollout import RolloutWorker  # noqa: F401
 from repro.runtime.trainer import TrainerWorker  # noqa: F401
 from repro.runtime.transport import (  # noqa: F401
     ChannelClosed,
-    RemoteRolloutHost,
     RemoteWorkerSpec,
+    RestartPolicy,
     ShmChannel,
     SocketChannel,
+    SupervisedWorker,
+    Supervisor,
     TransportError,
     TransportServer,
     WeightStoreTransport,

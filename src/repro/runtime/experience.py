@@ -37,6 +37,13 @@ class ExperienceChannel(abc.ABC):
     def put(self, item: Any) -> bool:
         """Offer one item; False iff rejected by the backpressure policy."""
 
+    def put_many(self, items: List[Any]) -> List[bool]:
+        """Offer a batch; one backpressure verdict per item. In-process
+        this is just a loop, but remote channels override it into a single
+        wire round-trip (one codec blob per flush instead of one per
+        item), so producers should flush episodes through it."""
+        return [self.put(item) for item in items]
+
     @abc.abstractmethod
     def __len__(self) -> int:
         ...

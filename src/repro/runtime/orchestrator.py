@@ -65,14 +65,20 @@ class AcceRLSystem:
         self.attachments: List = []
         tcfg = rt.transport
         self.transport_server = None
+        self.supervisor = None
         self.remote_hosts: List = []
-        if tcfg.remote_rollout_workers > 0:
+        n_remote = tcfg.remote_rollout_workers + tcfg.connect_rollout_workers
+        if n_remote > 0:
             # registered FIRST: the wire endpoint starts before any child
             # spawns and stops last, so shutdown stays cooperative
             from repro.runtime.transport import TransportServer
+            from repro.runtime.transport.channel import parse_address
+            host, port = tcfg.host, tcfg.port
+            if tcfg.listen_addr:
+                host, port = parse_address(tcfg.listen_addr)
             self.transport_server = self.registry.register(TransportServer(
-                host=tcfg.host, port=tcfg.port,
-                shm_threshold=tcfg.shm_threshold_bytes))
+                host=host, port=port,
+                shm_threshold=tcfg.shm_threshold_bytes, token=tcfg.token))
             self.transport_server.add_channel("experience", self.experience)
             if self.frame_channel is not None:
                 self.transport_server.add_channel("frames",
@@ -93,14 +99,26 @@ class AcceRLSystem:
                 frame_channel=self.frame_channel))
             for i in range(rt.num_rollout_workers)
         ]
-        if tcfg.remote_rollout_workers > 0:
-            # each host spawns + contains ONE child process running its own
-            # inference pool + rollout envs, bridged back over the wire
-            from repro.runtime.transport import (RemoteRolloutHost,
-                                                 RemoteWorkerSpec)
-            for i in range(tcfg.remote_rollout_workers):
-                spec = RemoteWorkerSpec(
-                    name=f"remote-rollout-{i}", cfg=cfg, rl=rl, rt=rt,
+        if n_remote > 0:
+            # ONE Supervisor owns every non-local worker slot: spawned
+            # (child process) and connected (dialed in from another host)
+            # incarnations run the same worker body under the same
+            # RestartPolicy state machine
+            from repro.runtime.transport import (RemoteWorkerSpec,
+                                                 RestartPolicy, Supervisor)
+            sup = tcfg.supervision
+            policy = RestartPolicy(
+                mode=sup.restart, max_restarts=sup.max_restarts,
+                window_s=sup.window_s,
+                backoff_initial_s=sup.backoff_initial_s,
+                backoff_factor=sup.backoff_factor,
+                backoff_max_s=sup.backoff_max_s)
+            self.supervisor = self.registry.register(
+                Supervisor(self.transport_server, policy))
+
+            def make_spec(name: str, idx: int) -> RemoteWorkerSpec:
+                return RemoteWorkerSpec(
+                    name=name, cfg=cfg, rl=rl, rt=rt,
                     address=self.transport_server.address,
                     channel="experience",
                     frame_channel=("frames" if self.frame_channel is not None
@@ -108,15 +126,26 @@ class AcceRLSystem:
                     suite=suite, segment_horizon=segment_horizon,
                     max_episode_steps=max_episode_steps,
                     num_envs=tcfg.envs_per_worker,
-                    seed=seed * 1000 + rt.num_rollout_workers + i,
+                    seed=seed * 1000 + rt.num_rollout_workers + idx,
                     use_shm=(tcfg.kind == "shm"),
                     shm_threshold=tcfg.shm_threshold_bytes,
                     connect_timeout_s=tcfg.connect_timeout_s,
                     latency_mean_ms=remote_latency_ms,
                     latency_sigma=remote_latency_sigma,
-                    heartbeat_s=tcfg.heartbeat_s)
+                    heartbeat_s=tcfg.heartbeat_s, token=tcfg.token,
+                    reconnect_attempts=tcfg.reconnect_attempts,
+                    reconnect_backoff_s=tcfg.reconnect_backoff_s)
+
+            for i in range(tcfg.remote_rollout_workers):
+                spec = make_spec(f"remote-rollout-{i}", i)
                 self.remote_hosts.append(self.registry.register(
-                    RemoteRolloutHost(spec, self.transport_server)))
+                    self.supervisor.add_spawned(spec)))
+            for i in range(tcfg.connect_rollout_workers):
+                spec = make_spec(f"connect-rollout-{i}",
+                                 tcfg.remote_rollout_workers + i)
+                self.remote_hosts.append(self.registry.register(
+                    self.supervisor.add_connected(
+                        spec, liveness_timeout_s=sup.liveness_timeout_s)))
 
     # ------------------------------------------------------------- attachments
     def attach(self, attachment) -> "AcceRLSystem":
@@ -140,8 +169,9 @@ class AcceRLSystem:
         if self.remote_hosts:
             raise RuntimeError(
                 "the synchronous baseline is single-process: remote "
-                "rollout workers (rt.transport.remote_rollout_workers) "
-                "free-run and cannot join the step/episode barriers")
+                "rollout workers (rt.transport.remote_rollout_workers / "
+                "connect_rollout_workers) free-run and cannot join the "
+                "step/episode barriers")
         return BarrierScheduler(episodes_per_round=episodes_per_round).run(
             self, train_steps=train_steps, wall_timeout_s=wall_timeout_s)
 

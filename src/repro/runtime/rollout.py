@@ -174,15 +174,18 @@ class RolloutWorker(Service):
         traj["success"] = float(success)
 
         segments = episode_to_segments(traj, self.segment_horizon)
-        for seg in segments:
-            self.experience.put(seg)
+        # batched flush: one backpressure verdict per segment, and over a
+        # remote channel ONE codec blob + round-trip per episode instead
+        # of one per segment
+        self.experience.put_many(segments)
         self.metrics.inc("segments", float(len(segments)))
-        # bridged gauges: a RemoteServiceHost mirrors these to the parent,
-        # so policy-staleness is visible for out-of-process workers too
+        # bridged gauges: a SupervisedWorker slot mirrors these to the
+        # parent, so policy-staleness is visible for out-of-process
+        # workers too
         self.metrics.set_gauge("policy_version", float(version))
         if self.frame_channel is not None:
-            for i in range(len(traj["rewards"])):
-                self.frame_channel.put({
+            self.frame_channel.put_many([
+                {
                     "frame": traj["frames"][i],
                     "next_frame": traj["frames"][i + 1],
                     "tokens": traj["obs_tokens"][i],
@@ -192,7 +195,9 @@ class RolloutWorker(Service):
                     "success": np.float32(
                         traj["success"] if i == len(traj["rewards"]) - 1
                         else 0.0),
-                })
+                }
+                for i in range(len(traj["rewards"]))
+            ])
         self.metrics.inc("episodes")
         self.metrics.inc("successes", float(success))
         self.metrics.record("return", ep_return)

@@ -56,9 +56,18 @@ class MetricsRegistry:
         self._counters: Dict[str, float] = {}
         self._gauges: Dict[str, float] = {}
         self._series: Dict[str, List[float]] = {}
-        # cross-process bridge: series summaries adopted from a remote
-        # replica (RemoteServiceHost mirrors its child through these)
+        # cross-process bridge: counters/gauges/series adopted from a
+        # remote replica (a supervised worker slot mirrors its child
+        # through these). Counters are split into the CURRENT incarnation's
+        # absolute values plus a base folded in at each restart
+        # (``begin_remote_incarnation``), so a worker that restarts and
+        # re-reports from zero aggregates monotonically instead of
+        # rewinding or double-counting.
+        self._remote_counters: Dict[str, float] = {}
+        self._remote_counter_base: Dict[str, float] = {}
+        self._remote_gauges: Dict[str, float] = {}
         self._remote_series: Dict[str, Dict] = {}
+        self._remote_series_base: Dict[str, Dict] = {}
 
     # -- counters -----------------------------------------------------------
     def inc(self, key: str, by: float = 1.0) -> float:
@@ -69,7 +78,13 @@ class MetricsRegistry:
 
     def counter(self, key: str, default: float = 0.0) -> float:
         with self._lock:
-            return self._counters.get(key, default)
+            if (key not in self._counters
+                    and key not in self._remote_counters
+                    and key not in self._remote_counter_base):
+                return default
+            return (self._counters.get(key, 0.0)
+                    + self._remote_counter_base.get(key, 0.0)
+                    + self._remote_counters.get(key, 0.0))
 
     # -- gauges -------------------------------------------------------------
     def set_gauge(self, key: str, value: float) -> None:
@@ -78,6 +93,8 @@ class MetricsRegistry:
 
     def gauge(self, key: str, default: float = 0.0) -> float:
         with self._lock:
+            if key in self._remote_gauges:
+                return self._remote_gauges[key]
             return self._gauges.get(key, default)
 
     # -- series -------------------------------------------------------------
@@ -94,22 +111,61 @@ class MetricsRegistry:
             s = self._series.get(key)
             if s:
                 return sum(s) / len(s)
-            remote = self._remote_series.get(key)
+            remote = self._merged_remote_series().get(key)
             return remote["mean"] if remote else default
 
     # -- cross-process bridging ---------------------------------------------
     def apply_remote(self, snapshot: Dict) -> None:
         """Adopt a snapshot reported by a remote (cross-process) replica:
-        counters/gauges overwrite same-named local keys — the remote is
-        the source of truth for them — and series arrive pre-summarized
-        (count/mean/last), feeding ``snapshot()`` / ``series_mean()``."""
+        the remote is the source of truth for its counters/gauges, and
+        series arrive pre-summarized (count/mean/last), feeding
+        ``snapshot()`` / ``series_mean()``.
+
+        Re-applying the same snapshot is idempotent (absolute values, not
+        deltas); counters from a NEW incarnation of the worker must be
+        preceded by :meth:`begin_remote_incarnation` so the previous
+        incarnation's totals fold into a base instead of being rewound."""
         with self._lock:
             for k, v in snapshot.get("counters", {}).items():
-                self._counters[k] = float(v)
+                self._remote_counters[k] = float(v)
             for k, v in snapshot.get("gauges", {}).items():
-                self._gauges[k] = float(v)
+                self._remote_gauges[k] = float(v)
             self._remote_series = {k: dict(v) for k, v in
                                    snapshot.get("series", {}).items()}
+
+    def begin_remote_incarnation(self) -> None:
+        """A supervised worker is being restarted: fold the dead
+        incarnation's counters/series into the monotone base (so totals
+        never rewind or double-count when the replacement re-reports from
+        zero) and reset its gauges (a gauge describes the live process —
+        there is none until the replacement reports)."""
+        with self._lock:
+            for k, v in self._remote_counters.items():
+                self._remote_counter_base[k] = (
+                    self._remote_counter_base.get(k, 0.0) + v)
+            self._remote_counters = {}
+            self._remote_gauges = {}
+            self._remote_series_base = self._merged_remote_series()
+            self._remote_series = {}
+
+    def _merged_remote_series(self) -> Dict[str, Dict]:
+        """Count-weighted fold of the base (dead incarnations) and current
+        series summaries. Caller holds the lock."""
+        merged = {k: dict(v) for k, v in self._remote_series_base.items()}
+        for k, cur in self._remote_series.items():
+            base = merged.get(k)
+            if base is None or not base["count"]:
+                merged[k] = dict(cur)
+                continue
+            total = base["count"] + cur["count"]
+            if cur["count"]:
+                merged[k] = {
+                    "count": total,
+                    "mean": (base["mean"] * base["count"]
+                             + cur["mean"] * cur["count"]) / total,
+                    "last": cur["last"],
+                }
+        return merged
 
     # -- timers -------------------------------------------------------------
     @contextlib.contextmanager
@@ -123,16 +179,22 @@ class MetricsRegistry:
 
     def snapshot(self) -> Dict:
         with self._lock:
-            series = {k: dict(v) for k, v in self._remote_series.items()}
+            series = self._merged_remote_series()
             series.update({
                 k: {"count": len(v),
                     "mean": (sum(v) / len(v)) if v else 0.0,
                     "last": v[-1] if v else 0.0}
                 for k, v in self._series.items()
             })
+            counters = dict(self._counters)
+            for k in set(self._remote_counters) | set(
+                    self._remote_counter_base):
+                counters[k] = (counters.get(k, 0.0)
+                               + self._remote_counter_base.get(k, 0.0)
+                               + self._remote_counters.get(k, 0.0))
             return {
-                "counters": dict(self._counters),
-                "gauges": dict(self._gauges),
+                "counters": counters,
+                "gauges": {**self._gauges, **self._remote_gauges},
                 "series": series,
             }
 
@@ -240,6 +302,14 @@ class Service:
             with self._state_lock:
                 self._state = ServiceState.FAILED
             traceback.print_exc()
+
+    def mark_failed(self, error: BaseException) -> None:
+        """Mark this service FAILED from outside its own threads — how a
+        supervisor surfaces a failure that happened in another process
+        (or on the wire) with the exact semantics of a local crash."""
+        self.error = error
+        with self._state_lock:
+            self._state = ServiceState.FAILED
 
     def stop(self) -> None:
         """Signal shutdown (non-blocking; pair with ``join``)."""

@@ -5,14 +5,18 @@ crossing a process boundary; this package is the crossing:
 
   * :mod:`codec`   — versioned, zero-copy-friendly pytree wire format;
   * :mod:`channel` — :class:`SocketChannel` / :class:`ShmChannel`, the
-    ExperienceChannel contract (incl. backpressure verdicts) over the wire;
+    ExperienceChannel contract (incl. backpressure verdicts and batched
+    ``put_many``) over the wire, on a reconnecting :class:`WireClient`;
   * :mod:`server`  — :class:`TransportServer`, the parent-side endpoint
-    (a Service on the bus) hosting channels + the weight store;
+    (a Service on the bus) hosting channels + the weight store + the
+    ``worker.hello`` token handshake;
   * :mod:`weights` — :class:`WeightStoreTransport`, remote
     publish/acquire with the drain protocol;
-  * :mod:`remote`  — :class:`RemoteRolloutHost` / ``worker_main``, the
-    spawned worker process pair with metrics/health bridging and crash
-    containment.
+  * :mod:`remote`  — ``worker_main`` + :class:`RemoteWorkerSpec`, the
+    worker process body (one body, two lifecycles);
+  * :mod:`supervision` — :class:`Supervisor` / :class:`SupervisedWorker`
+    / :class:`RestartPolicy` and the Spawned/Connected endpoints: worker
+    lifecycle decoupled from transport, with restart budgets.
 """
 from repro.runtime.transport.codec import (  # noqa: F401
     CodecError,
@@ -29,8 +33,16 @@ from repro.runtime.transport.channel import (  # noqa: F401
 from repro.runtime.transport.server import TransportServer  # noqa: F401
 from repro.runtime.transport.weights import WeightStoreTransport  # noqa: F401
 from repro.runtime.transport.remote import (  # noqa: F401
-    RemoteRolloutHost,
-    RemoteServiceHost,
     RemoteWorkerSpec,
+    spec_from_wire,
+    spec_to_wire,
     worker_main,
+)
+from repro.runtime.transport.supervision import (  # noqa: F401
+    ConnectedEndpoint,
+    RestartPolicy,
+    SpawnedEndpoint,
+    SupervisedWorker,
+    Supervisor,
+    WorkerEndpoint,
 )

@@ -41,7 +41,15 @@ except ImportError:  # pragma: no cover — stdlib on every target platform
 POLL_S = 0.5          # per-RPC slice of a long pop/acquire wait
 
 __all__ = ["TransportError", "ChannelClosed", "WireClient", "long_poll",
-           "SocketChannel", "ShmChannel", "shm_read", "shm_write"]
+           "SocketChannel", "ShmChannel", "shm_read", "shm_write",
+           "parse_address"]
+
+
+def parse_address(address: str) -> Tuple[str, int]:
+    """``"host:port"`` → ``(host, port)``; a bare ``":port"``/``"port"``
+    falls back to loopback. The one parser every CLI/config shares."""
+    host, _, port = address.rpartition(":")
+    return (host or "127.0.0.1", int(port))
 
 
 class TransportError(RuntimeError):
@@ -88,30 +96,83 @@ class WireClient:
     the lock (requests are short except deliberately-bounded long-polls).
     ``close()`` from any thread shuts the socket down, which unblocks a
     caller parked in ``recv`` with :class:`ChannelClosed`.
+
+    With ``reconnect_attempts > 0`` the client survives a *server-side*
+    connection drop: a failed round-trip redials with exponential backoff
+    and re-issues the request up to that many times before surfacing
+    :class:`ChannelClosed`. Retried requests are at-least-once — most
+    server endpoints are either idempotent (``worker.report``,
+    ``store.publish`` by version, ``store.state``) or tolerant of a
+    duplicate (``chan.put``/``put_many``: a re-accepted segment is
+    ordinary replay data). The exception is ``chan.pop``: if the reply is
+    lost AFTER the server popped, the retry pops a fresh batch and the
+    first one is gone — equivalent to a channel drop, acceptable for
+    experience data (and remote pops are off the training hot path:
+    remote workers produce, the trainer pops locally). ``on_reconnect``
+    fires after each successful redial, under the call lock — proxies use
+    it to bust version caches so state (e.g. the newest weight version)
+    is re-acquired on the fresh connection.
     """
 
     def __init__(self, address: Tuple[str, int], *,
                  connect_timeout: float = 20.0,
-                 shm_threshold: int = 1 << 16):
-        deadline = time.monotonic() + connect_timeout
-        last: Optional[Exception] = None
+                 shm_threshold: int = 1 << 16,
+                 reconnect_attempts: int = 0,
+                 reconnect_backoff_s: float = 0.1,
+                 reconnect_backoff_max_s: float = 2.0,
+                 on_reconnect=None):
+        self.address = tuple(address)
+        self._connect_timeout = connect_timeout
+        self._lock = threading.Lock()
+        self._shm_threshold = shm_threshold
+        self._reconnect_attempts = reconnect_attempts
+        self._reconnect_backoff_s = reconnect_backoff_s
+        self._reconnect_backoff_max_s = reconnect_backoff_max_s
+        self._on_reconnect = on_reconnect
+        self.reconnects = 0
+        self.closed = False
+        self._sock = self._dial(connect_timeout)
+
+    def _dial(self, timeout: float) -> socket.socket:
+        deadline = time.monotonic() + timeout
         while True:
             try:
-                self._sock = socket.create_connection(
-                    address, timeout=connect_timeout)
+                sock = socket.create_connection(self.address,
+                                                timeout=max(timeout, 0.05))
                 break
             except OSError as e:       # server may still be binding
-                last = e
                 if time.monotonic() >= deadline:
                     raise TransportError(
                         f"cannot connect to transport server at "
-                        f"{address}: {e}") from last
+                        f"{self.address}: {e}") from e
                 time.sleep(0.05)
-        self._sock.settimeout(None)
-        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        self._lock = threading.Lock()
-        self._shm_threshold = shm_threshold
-        self.closed = False
+        sock.settimeout(None)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return sock
+
+    def _redial(self, attempt: int) -> bool:
+        """One backoff-then-reconnect try (caller holds the lock)."""
+        delay = min(self._reconnect_backoff_s * (2 ** (attempt - 1)),
+                    self._reconnect_backoff_max_s)
+        time.sleep(delay)
+        if self.closed:
+            return False
+        try:
+            sock = self._dial(self._connect_timeout)
+        except TransportError:
+            return False
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        self._sock = sock
+        self.reconnects += 1
+        if self._on_reconnect is not None:
+            try:
+                self._on_reconnect()
+            except Exception:          # noqa: BLE001 — a cache-bust hook
+                pass                   # must never poison the data path
+        return True
 
     def request(self, header: Dict, body: bytes = b"", *,
                 oob: bool = False) -> Tuple[Dict, bytes]:
@@ -127,16 +188,25 @@ class WireClient:
             with self._lock:
                 if self.closed:
                     raise ChannelClosed("transport client is closed")
-                try:
-                    send_frame(self._sock, header, body)
-                    resp = recv_frame(self._sock)
-                except (OSError, ValueError) as e:
+                resp = None
+                last: Optional[Exception] = None
+                for attempt in range(self._reconnect_attempts + 1):
+                    if attempt and (self.closed or not self._redial(attempt)):
+                        break
+                    try:
+                        send_frame(self._sock, header, body)
+                        resp = recv_frame(self._sock)
+                        if resp is None:   # clean EOF: peer closed on us
+                            raise ConnectionError(
+                                "server closed the connection")
+                        break
+                    except (OSError, ValueError) as e:
+                        last = e
+                        resp = None
+                if resp is None:
                     self.close()
-                    raise ChannelClosed(f"transport connection lost: {e}") \
-                        from e
-            if resp is None:
-                self.close()
-                raise ChannelClosed("server closed the connection")
+                    raise ChannelClosed(
+                        f"transport connection lost: {last}") from last
             rh, rbody = resp
             if rh.get("err"):
                 raise TransportError(rh["err"])
@@ -198,11 +268,15 @@ class SocketChannel(ExperienceChannel):
 
     def __init__(self, address: Tuple[str, int], name: str, *,
                  connect_timeout: float = 20.0,
-                 shm_threshold: int = 1 << 16):
+                 shm_threshold: int = 1 << 16,
+                 reconnect_attempts: int = 0,
+                 reconnect_backoff_s: float = 0.1):
         self.name = name
         self.address = tuple(address)
         self._client = WireClient(address, connect_timeout=connect_timeout,
-                                  shm_threshold=shm_threshold)
+                                  shm_threshold=shm_threshold,
+                                  reconnect_attempts=reconnect_attempts,
+                                  reconnect_backoff_s=reconnect_backoff_s)
 
     # -- ExperienceChannel surface -------------------------------------------
     def put(self, item: Any) -> bool:
@@ -213,6 +287,25 @@ class SocketChannel(ExperienceChannel):
         except ChannelClosed:
             return False
         return bool(resp.get("ok"))
+
+    def put_many(self, items: List[Any]) -> List[bool]:
+        """Batched put: ONE codec blob + one round-trip for the whole
+        flush; the server answers a per-item verdict vector from the
+        hosted channel's own backpressure policy."""
+        items = list(items)
+        if not items:
+            return []
+        try:
+            resp, _ = self._client.request(
+                {"m": "chan.put_many", "chan": self.name,
+                 "count": len(items)},
+                encode_pytree(items), oob=self.oob)
+        except ChannelClosed:
+            return [False] * len(items)
+        verdicts = [bool(v) for v in resp.get("verdicts", ())]
+        # a malformed reply must not fabricate acceptance
+        verdicts += [False] * (len(items) - len(verdicts))
+        return verdicts[:len(items)]
 
     def pop_batch(self, n: int, timeout: Optional[float] = None
                   ) -> Optional[List[Any]]:
@@ -263,9 +356,13 @@ class ShmChannel(SocketChannel):
 
     def __init__(self, address: Tuple[str, int], name: str, *,
                  connect_timeout: float = 20.0,
-                 shm_threshold: int = 1 << 16):
+                 shm_threshold: int = 1 << 16,
+                 reconnect_attempts: int = 0,
+                 reconnect_backoff_s: float = 0.1):
         if shared_memory is None:
             raise TransportError(
                 "ShmChannel needs multiprocessing.shared_memory")
         super().__init__(address, name, connect_timeout=connect_timeout,
-                         shm_threshold=shm_threshold)
+                         shm_threshold=shm_threshold,
+                         reconnect_attempts=reconnect_attempts,
+                         reconnect_backoff_s=reconnect_backoff_s)

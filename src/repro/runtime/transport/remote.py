@@ -1,52 +1,54 @@
-"""Remote worker processes: RemoteServiceHost (parent) + worker_main (child).
+"""Remote worker process body: ``worker_main`` + its picklable spec.
 
 The paper's *physical isolation* claim means rollout/inference workers in
-their own OS processes. The shape here keeps the service architecture
-intact on both sides of the boundary:
+their own OS processes. This module is the CHILD side of that boundary —
+a self-contained worker (local :class:`~repro.runtime.inference.InferenceService`
+pulling weights through a :class:`WeightStoreTransport`, plus N
+:class:`~repro.runtime.rollout.RolloutWorker` envs pushing segments
+through a Socket/Shm channel) that heartbeats ``worker.report`` frames
+back to the parent. How such a worker *comes to exist* and how it is
+*supervised* live in :mod:`repro.runtime.transport.supervision`:
 
-  * the parent registers a :class:`RemoteRolloutHost` — an ordinary
-    :class:`~repro.runtime.service.Service` on the bus whose job is to
-    spawn, monitor, and contain ONE child process. If the child dies or
-    reports an internal failure, the host raises inside its monitor
-    thread, which marks it FAILED exactly like a local crash — schedulers
-    fail fast instead of hanging (crash containment crosses the boundary);
-  * the child (``worker_main``, always the ``spawn`` start method — never
-    fork a process holding jax threads) builds a self-contained worker: a
-    local :class:`~repro.runtime.inference.InferenceService` pulling
-    weights through a :class:`WeightStoreTransport`, plus N
-    :class:`~repro.runtime.rollout.RolloutWorker` envs pushing segments
-    through a Socket/Shm channel — the D-VLA-style high-concurrency
-    rollout worker with colocated inference;
-  * every heartbeat the child posts a ``worker.report`` (merged metric
-    snapshot + per-service health); the reply carries the stop flag, so
-    shutdown is cooperative with a terminate fallback. The host mirrors
-    the report into its own :class:`MetricsRegistry`
-    (``apply_remote``), which is how the remote worker appears in
-    ``AcceRLSystem.metrics()["services"]`` with no schema change.
+  * a :class:`~repro.runtime.transport.supervision.SpawnedEndpoint` runs
+    ``worker_main`` in a ``spawn``-start-method child (never fork a
+    process holding jax threads);
+  * a :class:`~repro.runtime.transport.supervision.ConnectedEndpoint`
+    waits for the SAME body to dial in from anywhere — the
+    ``repro.launch.worker`` CLI performs the ``worker.hello`` token
+    handshake, receives its spec over the wire (``spec_from_wire``), and
+    calls ``worker_main``. One worker body, two lifecycles.
+
+Every heartbeat carries the worker's *incarnation* id, so a restarted
+worker's reports are distinguishable from its dead predecessor's: the
+parent slot drops stale-incarnation reports (idempotent bridging) and the
+report *reply* tells a superseded incarnation to stop.
 """
 from __future__ import annotations
 
 import dataclasses
-import multiprocessing
 import sys
 import time
 from typing import Dict, List, Optional, Tuple
 
-from repro.configs.base import ModelConfig, RLConfig, RuntimeConfig
+from repro.configs.base import (HybridConfig, ModelConfig, MoEConfig,
+                                RLConfig, RuntimeConfig, SSMConfig,
+                                SupervisionConfig, TransportConfig)
 from repro.runtime.service import Service
 from repro.runtime.transport.channel import (ChannelClosed, ShmChannel,
                                              SocketChannel, TransportError,
                                              WireClient)
 from repro.runtime.transport.weights import WeightStoreTransport
 
-__all__ = ["RemoteWorkerSpec", "RemoteServiceHost", "RemoteRolloutHost",
-           "worker_main"]
+__all__ = ["RemoteWorkerSpec", "worker_main", "spec_to_wire",
+           "spec_from_wire"]
 
 
 @dataclasses.dataclass
 class RemoteWorkerSpec:
-    """Everything a spawned child needs — plain picklable data only (no
-    callables: env latency travels as (mean_ms, sigma), not a closure)."""
+    """Everything a remote worker needs — plain picklable data only (no
+    callables: env latency travels as (mean_ms, sigma), not a closure).
+    Also JSON-serializable via ``spec_to_wire`` so connect-mode workers
+    can receive it over the ``worker.hello`` handshake."""
 
     name: str
     cfg: ModelConfig
@@ -68,6 +70,45 @@ class RemoteWorkerSpec:
     latency_sigma: float = 1.0
     heartbeat_s: float = 0.25
     temperature: float = 1.0
+    # supervision: which incarnation of its slot this worker is — echoed
+    # in every report so the parent can drop stale reports and stop
+    # superseded workers
+    incarnation: int = 0
+    token: str = ""
+    # wire-client resilience: transparent redial budget after a
+    # server-side connection drop (0 = fail fast, PR 3 behavior)
+    reconnect_attempts: int = 0
+    reconnect_backoff_s: float = 0.1
+
+
+# ---------------------------------------------------------------------------
+# spec <-> wire (the worker.hello reply carries the spec as plain JSON)
+# ---------------------------------------------------------------------------
+
+def spec_to_wire(spec: RemoteWorkerSpec) -> Dict:
+    """Flatten a spec into JSON-safe nested dicts (tuples become lists on
+    the wire; ``spec_from_wire`` restores them)."""
+    return dataclasses.asdict(spec)
+
+
+def spec_from_wire(wire: Dict) -> RemoteWorkerSpec:
+    """Rebuild a :class:`RemoteWorkerSpec` from its wire dict."""
+    d = dict(wire)
+    cfg = dict(d["cfg"])
+    for key, cls in (("moe", MoEConfig), ("ssm", SSMConfig),
+                     ("hybrid", HybridConfig)):
+        if cfg.get(key) is not None:
+            cfg[key] = cls(**cfg[key])
+    d["cfg"] = ModelConfig(**cfg)
+    d["rl"] = RLConfig(**d["rl"])
+    rt = dict(d["rt"])
+    transport = dict(rt["transport"])
+    transport["supervision"] = SupervisionConfig(**transport["supervision"])
+    rt["transport"] = TransportConfig(**transport)
+    rt["batch_buckets"] = tuple(rt["batch_buckets"])
+    d["rt"] = RuntimeConfig(**rt)
+    d["address"] = (str(d["address"][0]), int(d["address"][1]))
+    return RemoteWorkerSpec(**d)
 
 
 # ---------------------------------------------------------------------------
@@ -113,7 +154,7 @@ def _build_report(services: List[Service]) -> Dict:
 
 
 def worker_main(spec: RemoteWorkerSpec) -> int:
-    """Child-process entry: build the remote service set, run it, report.
+    """Remote-worker entry: build the service set, run it, report.
 
     Returns the exit code (0 clean stop, 3 internal service failure).
     Heavy imports live here, not at module scope — the parent never pays
@@ -125,18 +166,17 @@ def worker_main(spec: RemoteWorkerSpec) -> int:
     from repro.runtime.rollout import RolloutWorker
 
     Channel = ShmChannel if spec.use_shm else SocketChannel
+    wire_kw = dict(connect_timeout=spec.connect_timeout_s,
+                   reconnect_attempts=spec.reconnect_attempts,
+                   reconnect_backoff_s=spec.reconnect_backoff_s)
     experience = Channel(spec.address, spec.channel,
-                         connect_timeout=spec.connect_timeout_s,
-                         shm_threshold=spec.shm_threshold)
+                         shm_threshold=spec.shm_threshold, **wire_kw)
     frames = (Channel(spec.address, spec.frame_channel,
-                      connect_timeout=spec.connect_timeout_s,
-                      shm_threshold=spec.shm_threshold)
+                      shm_threshold=spec.shm_threshold, **wire_kw)
               if spec.frame_channel else None)
     store = WeightStoreTransport(spec.address, use_shm=spec.use_shm,
-                                 connect_timeout=spec.connect_timeout_s,
-                                 shm_threshold=spec.shm_threshold)
-    control = WireClient(spec.address,
-                         connect_timeout=spec.connect_timeout_s)
+                                 shm_threshold=spec.shm_threshold, **wire_kw)
+    control = WireClient(spec.address, **wire_kw)
 
     latency = (lognormal_latency(spec.latency_mean_ms,
                                  sigma=spec.latency_sigma, seed=spec.seed)
@@ -159,19 +199,24 @@ def worker_main(spec: RemoteWorkerSpec) -> int:
     for s in services:
         s.start()
 
+    def report_once() -> Dict:
+        report = _build_report(services)
+        resp, _ = control.request({"m": "worker.report",
+                                   "worker": spec.name,
+                                   "incarnation": spec.incarnation,
+                                   "report": report})
+        return {"report": report, "resp": resp}
+
     exit_code = 0
     try:
         while True:
-            report = _build_report(services)
             try:
-                resp, _ = control.request({"m": "worker.report",
-                                           "worker": spec.name,
-                                           "report": report})
+                got = report_once()
             except (TransportError, ChannelClosed):
                 break                       # parent gone — shut down
-            if resp.get("stop"):
+            if got["resp"].get("stop"):
                 break
-            if not report["health"]["healthy"]:
+            if not got["report"]["health"]["healthy"]:
                 exit_code = 3               # parent saw the report; die loud
                 break
             time.sleep(spec.heartbeat_s)
@@ -181,8 +226,7 @@ def worker_main(spec: RemoteWorkerSpec) -> int:
         for s in services:
             s.join(timeout=5.0)
         try:                                # best-effort final numbers
-            control.request({"m": "worker.report", "worker": spec.name,
-                             "report": _build_report(services)})
+            report_once()
         except (TransportError, ChannelClosed):
             pass
         for closable in (experience, frames, store, control):
@@ -193,112 +237,3 @@ def worker_main(spec: RemoteWorkerSpec) -> int:
 
 def _child_entry(spec: RemoteWorkerSpec) -> None:
     sys.exit(worker_main(spec))
-
-
-# ---------------------------------------------------------------------------
-# parent side
-# ---------------------------------------------------------------------------
-
-class RemoteServiceHost(Service):
-    """Parent-side handle for one spawned worker process.
-
-    Lifecycle mapping: ``start`` spawns the child, the service thread is a
-    liveness monitor, ``stop`` raises the cooperative stop flag (delivered
-    in the next ``worker.report`` reply), ``join`` waits for the process
-    with a terminate → kill escalation so shutdown can never hang.
-    """
-
-    def __init__(self, spec: RemoteWorkerSpec, server, *,
-                 role: str = "rollout"):
-        super().__init__(spec.name, role=role)
-        self.spec = spec
-        self.server = server
-        server.register_worker_sink(spec.name, self)
-        self.process: Optional[multiprocessing.process.BaseProcess] = None
-        self._stop_remote = False
-        self._remote_error: Optional[str] = None
-        self.reports_seen = 0
-        self.remote_health: Dict = {}
-        self.remote_services: Dict = {}
-
-    # -- report sink (called from a server connection thread) -----------------
-    @property
-    def stop_requested(self) -> bool:
-        return self._stop_remote or self._stop.is_set()
-
-    def apply_report(self, report: Dict) -> None:
-        self.remote_health = report.get("health", {})
-        self.remote_services = report.get("services", {})
-        self.metrics.apply_remote(report.get("merged", {}))
-        self.reports_seen += 1
-        if not self.remote_health.get("healthy", True):
-            self._remote_error = (self.remote_health.get("error")
-                                  or "remote service failed")
-
-    # -- lifecycle ------------------------------------------------------------
-    def on_start(self) -> None:
-        ctx = multiprocessing.get_context("spawn")
-        self.process = ctx.Process(target=_child_entry, args=(self.spec,),
-                                   name=self.name, daemon=True)
-        self.process.start()
-
-    def _run(self) -> None:
-        proc = self.process
-        while not self._stop.is_set():
-            if self._remote_error is not None:
-                raise RuntimeError(
-                    f"remote worker {self.name!r} reported a failed "
-                    f"service: {self._remote_error}")
-            if proc is not None and not proc.is_alive():
-                if self.stop_requested:
-                    break
-                raise RuntimeError(
-                    f"remote worker {self.name!r} process died "
-                    f"(exitcode={proc.exitcode})")
-            time.sleep(0.05)
-
-    def on_stop(self) -> None:
-        self._stop_remote = True
-
-    def join(self, timeout: float = 5.0) -> None:
-        proc = self.process
-        if proc is not None:
-            proc.join(timeout=timeout)
-            if proc.is_alive():
-                proc.terminate()
-                proc.join(timeout=2.0)
-            if proc.is_alive():            # pragma: no cover — last resort
-                proc.kill()
-                proc.join(timeout=2.0)
-        super().join(timeout=1.0)
-
-
-class RemoteRolloutHost(RemoteServiceHost):
-    """Rollout-flavored host: mirrors the counters the orchestrator
-    aggregates across rollout workers, so a remote worker contributes to
-    ``env_steps`` / ``episodes`` / ``success_rate`` / ``mean_return``
-    exactly like a local one."""
-
-    def __init__(self, spec: RemoteWorkerSpec, server):
-        super().__init__(spec, server, role="rollout")
-
-    @property
-    def env_steps(self) -> int:
-        return int(self.metrics.counter("env_steps"))
-
-    @property
-    def episodes_done(self) -> int:
-        return int(self.metrics.counter("episodes"))
-
-    @property
-    def successes(self) -> int:
-        return int(self.metrics.counter("successes"))
-
-    @property
-    def returns(self) -> List[float]:
-        s = self.metrics.snapshot()["series"].get("return")
-        if not s or not s["count"]:
-            return []
-        # the child ships a count/mean summary; expanding it preserves the
-        # count-weighted global mean the orchestrator computes
-        return [s["mean"]] * int(s["count"])

@@ -10,6 +10,8 @@ Exposed endpoints (JSON header ``m`` field):
   ======================  ==================================================
   ``chan.put``            push one encoded item into a hosted channel —
                           the channel's own backpressure policy answers
+  ``chan.put_many``       one codec blob carrying a whole flush (an
+                          episode's segments); per-item verdict vector back
   ``chan.pop``            blocking ``pop_batch(n, timeout)`` (bounded
                           slices; clients long-poll)
   ``chan.len/stats``      depth / stats snapshot
@@ -18,8 +20,10 @@ Exposed endpoints (JSON header ``m`` field):
   ``store.state``         (version, draining) — the drain protocol's poll
   ``store.drain``         remote ``begin_publish`` (drain signal)
   ``store.publish``       remote publish (a trainer across the wire)
+  ``worker.hello``        connect-mode handshake: shared-token auth, then
+                          the supervisor assigns a slot and ships its spec
   ``worker.report``       child → parent metrics/health bridge; the reply
-                          carries the stop flag (cooperative shutdown)
+                          carries the per-incarnation stop flag
   ``ping``                liveness probe
   ======================  ==================================================
 
@@ -28,12 +32,19 @@ never head-of-line-block other clients. Large response bodies go
 out-of-band via shared memory when the client asks (``want_shm``) — the
 server defers the unlink until the same connection's next frame, which is
 the client's implicit ack.
+
+Orphan sweep: a client that dies between creating a request SHM segment
+and unlinking it (creator-unlinks-after-ack) leaks the segment — its own
+resource tracker is shared with the parent and therefore outlives it. The
+server remembers every client-created segment name it has seen and
+unlinks any still present when it closes.
 """
 from __future__ import annotations
 
+import collections
 import socket
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.runtime.service import Service
 from repro.runtime.transport.channel import shared_memory, shm_read, shm_write
@@ -46,15 +57,28 @@ __all__ = ["TransportServer"]
 class TransportServer(Service):
     """Serves channels + the weight store to remote worker processes."""
 
+    #: how many client-created SHM segment names to remember for the
+    #: orphan sweep (normal clients unlink promptly, so the live set is
+    #: tiny; the bound only caps pathological churn)
+    SHM_SWEEP_LIMIT = 4096
+
     def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
-                 shm_threshold: int = 1 << 16, name: str = "transport"):
+                 shm_threshold: int = 1 << 16, name: str = "transport",
+                 token: str = ""):
         super().__init__(name, role="transport")
         self._channels: Dict[str, Any] = {}
         self._store = None
         self._sinks: Dict[str, Any] = {}          # worker name -> host
+        self._token = token
+        self._hello: Optional[Callable[[Dict], Dict]] = None
         self._shm_threshold = shm_threshold
         self._conns: list = []
         self._conn_lock = threading.Lock()
+        # client-created SHM segments seen on requests, for the orphan
+        # sweep at close (an OrderedDict doubles as a bounded LRU set)
+        self._client_shm: "collections.OrderedDict[str, None]" = \
+            collections.OrderedDict()
+        self._client_shm_lock = threading.Lock()
         # weights are encoded once per published version, then cache-served
         # to every remote consumer (the LlamaRL-style broadcast amortized)
         self._weights_cache: Tuple[int, Optional[bytes]] = (-1, None)
@@ -76,6 +100,11 @@ class TransportServer(Service):
     def register_worker_sink(self, name: str, host: Any) -> None:
         """Route ``worker.report`` frames for ``name`` to ``host``."""
         self._sinks[name] = host
+
+    def set_hello_handler(self, handler: Callable[[Dict], Dict]) -> None:
+        """Install the ``worker.hello`` responder (the Supervisor): gets
+        the authenticated request header, answers the slot assignment."""
+        self._hello = handler
 
     # -- service surface ------------------------------------------------------
     def _run(self) -> None:
@@ -110,6 +139,35 @@ class TransportServer(Service):
                 c.close()
             except OSError:
                 pass
+        self._sweep_orphan_shm()
+
+    def _note_client_shm(self, name: str) -> None:
+        with self._client_shm_lock:
+            self._client_shm[name] = None
+            self._client_shm.move_to_end(name)
+            while len(self._client_shm) > self.SHM_SWEEP_LIMIT:
+                self._client_shm.popitem(last=False)
+
+    def _sweep_orphan_shm(self) -> None:
+        """Unlink client-created segments whose creator died before its
+        post-ack unlink (e.g. a SIGKILLed producer). Normal segments are
+        long gone — attach fails and the name is skipped."""
+        if shared_memory is None:
+            return
+        with self._client_shm_lock:
+            names, self._client_shm = list(self._client_shm), \
+                collections.OrderedDict()
+        for name in names:
+            try:
+                seg = shared_memory.SharedMemory(name=name)
+            except (FileNotFoundError, OSError):
+                continue
+            seg.close()
+            try:
+                seg.unlink()
+            except FileNotFoundError:
+                pass
+            self.metrics.inc("shm_orphans_swept")
 
     # -- connection loop ------------------------------------------------------
     def _serve(self, conn: socket.socket) -> None:
@@ -129,6 +187,7 @@ class TransportServer(Service):
                     break
                 header, body = frame
                 if header.get("shm"):      # request body arrived via SHM
+                    self._note_client_shm(header["shm"])
                     body = shm_read(header["shm"], header["shm_size"])
                 self.metrics.inc("requests")
                 self.metrics.inc("rx_bytes", float(len(body)))
@@ -165,6 +224,15 @@ class TransportServer(Service):
             if m == "chan.put":
                 ok = self._channels[h["chan"]].put(decode_pytree(body))
                 return {"ok": bool(ok)}, b""
+            if m == "chan.put_many":
+                items = decode_pytree(body)
+                chan = self._channels[h["chan"]]
+                put_many = getattr(chan, "put_many", None)
+                verdicts = (put_many(items) if put_many is not None
+                            else [chan.put(x) for x in items])
+                verdicts = [bool(v) for v in verdicts]
+                return {"ok": all(verdicts),
+                        "verdicts": verdicts}, b""
             if m == "chan.pop":
                 got = self._channels[h["chan"]].pop_batch(
                     h["n"], timeout=h.get("timeout", 0.0))
@@ -194,12 +262,28 @@ class TransportServer(Service):
                 self._store.publish(decode_pytree(body, copy=True),
                                     h["version"])
                 return {"ok": True}, b""
+            if m == "worker.hello":
+                if self._token and h.get("token") != self._token:
+                    self.metrics.inc("auth_failures")
+                    return {"err": "worker.hello: bad or missing token"}, b""
+                if self._hello is None:
+                    return {"err": "this server hosts no connect-mode "
+                                   "worker slots"}, b""
+                return dict(self._hello(h)), b""
             if m == "worker.report":
                 host = self._sinks.get(h["worker"])
                 if host is None:
                     return {"err": f"unknown worker {h['worker']!r}"}, b""
-                host.apply_report(h.get("report", {}))
-                return {"stop": bool(host.stop_requested)}, b""
+                incarnation = int(h.get("incarnation", 0))
+                host.apply_report(h.get("report", {}),
+                                  incarnation=incarnation)
+                # per-incarnation stop verdict: a superseded or
+                # budget-exhausted incarnation is told to exit even while
+                # the slot itself lives on
+                stop_for = getattr(host, "stop_for", None)
+                stop = (stop_for(incarnation) if stop_for is not None
+                        else host.stop_requested)
+                return {"stop": bool(stop)}, b""
             if m == "ping":
                 return {"ok": True}, b""
             return {"err": f"unknown method {m!r}"}, b""

@@ -36,12 +36,23 @@ class WeightStoreTransport:
 
     def __init__(self, address: Tuple[str, int], *, use_shm: bool = False,
                  connect_timeout: float = 20.0,
-                 shm_threshold: int = 1 << 16, state_ttl: float = 0.05):
+                 shm_threshold: int = 1 << 16, state_ttl: float = 0.05,
+                 reconnect_attempts: int = 0,
+                 reconnect_backoff_s: float = 0.1):
         self._client = WireClient(address, connect_timeout=connect_timeout,
-                                  shm_threshold=shm_threshold)
+                                  shm_threshold=shm_threshold,
+                                  reconnect_attempts=reconnect_attempts,
+                                  reconnect_backoff_s=reconnect_backoff_s,
+                                  on_reconnect=self._on_reconnect)
         self._use_shm = use_shm
         self._state_ttl = state_ttl
         self._state = (-float("inf"), -1, False)   # (stamp, version, drain)
+
+    def _on_reconnect(self) -> None:
+        """A server-side drop may have hidden publishes: bust the cached
+        (version, draining) so the next poll re-acquires the true newest
+        version instead of serving the pre-drop state for a TTL."""
+        self._state = (-float("inf"), -1, False)
 
     # -- state poll (cached) --------------------------------------------------
     def _fresh_state(self) -> Tuple[int, bool]:

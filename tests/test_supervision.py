@@ -1,0 +1,443 @@
+"""Supervision-layer unit tests (no jax subprocesses).
+
+The Supervisor's state machine is exercised against a fake endpoint (so
+failures are deterministic and instant), the connect-mode lifecycle
+against a REAL TransportServer with the token handshake over actual
+sockets, and the MetricsRegistry incarnation semantics (counters must
+aggregate monotonically across a worker restart, gauges must reset) on
+the registry directly."""
+import threading
+import time
+
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import RLConfig, RuntimeConfig
+from repro.runtime.service import MetricsRegistry, ServiceState
+from repro.runtime.transport import (RemoteWorkerSpec, RestartPolicy,
+                                     Supervisor, TransportError,
+                                     TransportServer, WireClient)
+from repro.runtime.transport.remote import spec_from_wire
+from repro.runtime.transport.supervision import (SupervisedWorker,
+                                                 WorkerEndpoint)
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+class StubServer:
+    """Just the sink/hello registration surface the supervisor needs."""
+
+    def __init__(self):
+        self.sinks = {}
+        self.hello = None
+
+    def register_worker_sink(self, name, host):
+        self.sinks[name] = host
+
+    def set_hello_handler(self, fn):
+        self.hello = fn
+
+
+class FakeEndpoint(WorkerEndpoint):
+    """Deterministic 'process': dies exactly when the test says so."""
+
+    mode = "spawn"
+
+    def __init__(self):
+        self.launches = 0
+        self.specs = []
+        self._failure = None
+
+    def launch(self, spec):
+        self.launches += 1
+        self.specs.append(spec)
+        self._failure = None
+
+    def failure(self):
+        return self._failure
+
+    def die(self, reason="process died (exitcode=-9)"):
+        self._failure = reason
+
+
+def _spec(name="remote-rollout-0", **kw):
+    return RemoteWorkerSpec(name=name,
+                            cfg=reduced(get_config("deepseek-7b")),
+                            rl=RLConfig(), rt=RuntimeConfig(),
+                            address=("127.0.0.1", 1), **kw)
+
+
+def _supervised(policy, n=1):
+    sup = Supervisor(StubServer(), policy, poll_s=0.005)
+    slots = []
+    for i in range(n):
+        slot = SupervisedWorker(_spec(f"remote-rollout-{i}"),
+                                FakeEndpoint(), sup.server)
+        slot.start()               # as the registry would (passive service)
+        sup.slots.append(slot)
+        slots.append(slot)
+    return sup, slots
+
+
+def _wait(cond, timeout=5.0, msg="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return
+        time.sleep(0.002)
+    raise AssertionError(f"timed out waiting for {msg}")
+
+
+# ---------------------------------------------------------------------------
+# RestartPolicy
+# ---------------------------------------------------------------------------
+
+def test_restart_policy_backoff_and_validation():
+    p = RestartPolicy(mode="on_failure", backoff_initial_s=0.1,
+                      backoff_factor=2.0, backoff_max_s=0.5)
+    assert p.backoff_s(1) == pytest.approx(0.1)
+    assert p.backoff_s(2) == pytest.approx(0.2)
+    assert p.backoff_s(3) == pytest.approx(0.4)
+    assert p.backoff_s(4) == pytest.approx(0.5)     # capped
+    with pytest.raises(ValueError):
+        RestartPolicy(mode="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# supervisor state machine (fake endpoints)
+# ---------------------------------------------------------------------------
+
+def test_restart_within_budget_keeps_slot_healthy_and_counters_monotonic():
+    policy = RestartPolicy(mode="on_failure", max_restarts=3,
+                           backoff_initial_s=0.01, backoff_max_s=0.05)
+    sup, (slot,) = _supervised(policy)
+    endpoint = slot.endpoint
+    sup.start()
+    try:
+        _wait(lambda: endpoint.launches == 1, msg="initial launch")
+        assert slot.incarnation == 1
+        slot.apply_report({"merged": {"counters": {"env_steps": 40.0},
+                                      "gauges": {"weight_version": 7.0},
+                                      "series": {}}}, incarnation=1)
+        endpoint.die()
+        _wait(lambda: endpoint.launches == 2, msg="respawn")
+        assert slot.incarnation == 2 and slot.restarts == 1
+        assert slot.error is None and slot.healthy
+        # the replacement starts counting from zero — totals must not
+        # rewind (monotonic) and the gauge must reset with the process
+        assert slot.env_steps == 40
+        assert slot.metrics.gauge("weight_version", -1.0) == -1.0
+        slot.apply_report({"merged": {"counters": {"env_steps": 5.0},
+                                      "gauges": {"weight_version": 9.0},
+                                      "series": {}}}, incarnation=2)
+        assert slot.env_steps == 45
+        assert slot.metrics.gauge("weight_version") == 9.0
+        # the spec handed to the new incarnation carries its id
+        assert [s.incarnation for s in endpoint.specs] == [1, 2]
+    finally:
+        sup.stop()
+        sup.join()
+
+
+def test_budget_exhaustion_marks_slot_failed():
+    policy = RestartPolicy(mode="on_failure", max_restarts=1,
+                           backoff_initial_s=0.01, window_s=60.0)
+    sup, (slot,) = _supervised(policy)
+    endpoint = slot.endpoint
+    sup.start()
+    try:
+        _wait(lambda: endpoint.launches == 1, msg="initial launch")
+        endpoint.die()
+        _wait(lambda: endpoint.launches == 2, msg="the one budgeted restart")
+        endpoint.die()
+        _wait(lambda: slot.error is not None, msg="budget exhaustion")
+        assert slot.status == ServiceState.FAILED
+        assert "restart budget exhausted" in repr(slot.error)
+        assert endpoint.launches == 2               # no launch past budget
+        assert sup.error is None                    # the supervisor lives
+        # exhausted slot tells any lingering incarnation to stop
+        assert slot.stop_for(slot.incarnation)
+    finally:
+        sup.stop()
+        sup.join()
+
+
+def test_never_mode_fails_on_first_death_like_pr3():
+    sup, (slot,) = _supervised(RestartPolicy(mode="never"))
+    endpoint = slot.endpoint
+    sup.start()
+    try:
+        _wait(lambda: endpoint.launches == 1, msg="initial launch")
+        endpoint.die("process died (exitcode=-9)")
+        _wait(lambda: slot.error is not None, msg="containment")
+        assert "died" in repr(slot.error)
+        assert endpoint.launches == 1
+    finally:
+        sup.stop()
+        sup.join()
+
+
+def test_reported_unhealthy_service_is_a_failure_too():
+    policy = RestartPolicy(mode="on_failure", max_restarts=2,
+                           backoff_initial_s=0.01)
+    sup, (slot,) = _supervised(policy)
+    endpoint = slot.endpoint
+    sup.start()
+    try:
+        _wait(lambda: endpoint.launches == 1, msg="initial launch")
+        slot.apply_report(
+            {"health": {"healthy": False, "state": "failed",
+                        "error": "RuntimeError('boom')"},
+             "merged": {}}, incarnation=1)
+        _wait(lambda: endpoint.launches == 2, msg="restart on bad report")
+        assert slot.restarts == 1 and slot.error is None
+    finally:
+        sup.stop()
+        sup.join()
+
+
+def test_stopping_during_backoff_never_relaunches():
+    policy = RestartPolicy(mode="on_failure", max_restarts=5,
+                           backoff_initial_s=10.0)   # park it in backoff
+    sup, (slot,) = _supervised(policy)
+    endpoint = slot.endpoint
+    sup.start()
+    try:
+        _wait(lambda: endpoint.launches == 1, msg="initial launch")
+        endpoint.die()
+        _wait(lambda: slot.phase == "backoff", msg="backoff entry")
+        slot.stop()
+        _wait(lambda: slot.phase == "done", msg="stop short-circuit")
+        assert endpoint.launches == 1
+    finally:
+        sup.stop()
+        sup.join()
+        slot.join()
+
+
+# ---------------------------------------------------------------------------
+# connect mode over a real server: token handshake, stall, redial re-accept
+# ---------------------------------------------------------------------------
+
+def _hello(address, token, worker=None):
+    client = WireClient(address)
+    try:
+        header = {"m": "worker.hello", "token": token}
+        if worker:
+            header["worker"] = worker
+        return client.request(header)[0]
+    finally:
+        client.close()
+
+
+def test_connect_lifecycle_token_stall_and_redial():
+    server = TransportServer(token="sekrit")
+    policy = RestartPolicy(mode="on_failure", max_restarts=3,
+                           backoff_initial_s=0.01, backoff_max_s=0.05)
+    sup = Supervisor(server, policy, poll_s=0.005)
+    spec = _spec("connect-rollout-0", heartbeat_s=0.05, token="sekrit")
+    slot = sup.add_connected(spec, liveness_timeout_s=0.3)
+    server.start()
+    sup.start()
+    control = None
+    try:
+        _wait(lambda: slot.phase == "waiting", msg="slot open")
+        # -- token gate --------------------------------------------------
+        with pytest.raises(TransportError, match="token"):
+            _hello(server.address, "wrong")
+        # -- handshake ships the spec ------------------------------------
+        resp = _hello(server.address, "sekrit")
+        assert resp["ok"] and resp["name"] == "connect-rollout-0"
+        assert resp["incarnation"] == 1
+        got = spec_from_wire(resp["spec"])
+        assert got.name == spec.name and got.incarnation == 1
+        assert got.cfg == spec.cfg
+        # -- a live slot rejects a second dialer -------------------------
+        with pytest.raises(TransportError, match="no open worker slot"):
+            _hello(server.address, "sekrit")
+        # -- heartbeats keep it alive; counters bridge -------------------
+        control = WireClient(server.address)
+        report = {"health": {"healthy": True},
+                  "merged": {"counters": {"env_steps": 11.0},
+                             "gauges": {}, "series": {}}}
+        resp, _ = control.request({"m": "worker.report",
+                                   "worker": "connect-rollout-0",
+                                   "incarnation": 1, "report": report})
+        assert resp["stop"] is False
+        assert slot.env_steps == 11
+        # -- stall: stop reporting; the slot re-opens under the budget ---
+        _wait(lambda: slot.phase == "waiting", timeout=5.0,
+              msg="stall detection + slot re-open")
+        assert slot.restarts == 1 and slot.error is None
+        # -- redial is re-accepted as a NEW incarnation ------------------
+        resp = _hello(server.address, "sekrit")
+        assert resp["ok"] and resp["incarnation"] == 2
+        # zombie reports from incarnation 1 are dropped and told to stop
+        resp, _ = control.request({"m": "worker.report",
+                                   "worker": "connect-rollout-0",
+                                   "incarnation": 1, "report": report})
+        assert resp["stop"] is True
+        assert slot.env_steps == 11               # not double-counted
+        # the replacement's reports stack monotonically
+        resp, _ = control.request({"m": "worker.report",
+                                   "worker": "connect-rollout-0",
+                                   "incarnation": 2, "report": report})
+        assert resp["stop"] is False
+        assert slot.env_steps == 22
+    finally:
+        if control is not None:
+            control.close()
+        sup.stop()
+        sup.join()
+        server.stop()
+        server.join()
+
+
+def test_stall_heal_during_backoff_cancels_relaunch():
+    """A liveness 'failure' that was only a stall (GC pause, brief
+    partition): if the worker's reports resume while the slot is still in
+    backoff, the SAME incarnation goes back up — no relaunch, no strand."""
+    sup = Supervisor(StubServer(),
+                     RestartPolicy(mode="on_failure", max_restarts=2,
+                                   backoff_initial_s=5.0),  # park in backoff
+                     poll_s=0.005)
+    slot = sup.add_connected(_spec("connect-rollout-0"),
+                             liveness_timeout_s=0.2)
+    slot.start()
+    sup.start()
+    try:
+        _wait(lambda: slot.phase == "waiting", msg="slot open")
+        assert sup.handle_hello({})["ok"]
+        _wait(lambda: slot.phase == "backoff", msg="stall -> backoff")
+        assert slot.restarts == 1
+        slot.apply_report({"merged": {"counters": {"env_steps": 7.0},
+                                      "gauges": {}, "series": {}}},
+                          incarnation=1)
+        _wait(lambda: slot.phase == "up", msg="heal in place")
+        assert slot.incarnation == 1 and slot.error is None
+        assert not slot.stop_for(1)
+        assert slot.env_steps == 7
+    finally:
+        sup.stop()
+        sup.join()
+        slot.stop()
+        slot.join()
+
+
+def test_stalled_worker_readopts_slot_after_it_reopened():
+    """Same stall, detected later: the slot already re-opened for a
+    redial ('waiting') when the presumed-dead worker's reports resume —
+    it re-adopts its incarnation instead of being told to stop while the
+    attach window burns the rest of the budget."""
+    sup = Supervisor(StubServer(),
+                     RestartPolicy(mode="on_failure", max_restarts=3,
+                                   backoff_initial_s=0.01),
+                     poll_s=0.005)
+    slot = sup.add_connected(_spec("connect-rollout-0"),
+                             liveness_timeout_s=0.2)
+    slot.start()
+    sup.start()
+    try:
+        _wait(lambda: slot.phase == "waiting", msg="slot open")
+        assert sup.handle_hello({})["ok"]
+        _wait(lambda: slot.phase == "waiting" and slot.restarts == 1,
+              msg="stall -> slot re-opened")
+        slot.apply_report({"merged": {"counters": {"env_steps": 7.0},
+                                      "gauges": {}, "series": {}}},
+                          incarnation=1)
+        assert slot.phase == "up"              # re-adopted synchronously
+        assert slot.incarnation == 1 and slot.error is None
+        assert not slot.stop_for(1)
+        assert slot.env_steps == 7
+    finally:
+        sup.stop()
+        sup.join()
+        slot.stop()
+        slot.join()
+
+
+def test_hello_without_connect_slots_is_an_error():
+    server = TransportServer()
+    server.start()
+    try:
+        with pytest.raises(TransportError, match="no connect-mode"):
+            _hello(server.address, "")
+    finally:
+        server.stop()
+        server.join()
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry under restart (satellite): monotone counters, gauge reset
+# ---------------------------------------------------------------------------
+
+def test_apply_remote_is_idempotent_within_an_incarnation():
+    m = MetricsRegistry("t")
+    snap = {"counters": {"env_steps": 40.0}, "gauges": {"v": 3.0},
+            "series": {}}
+    m.apply_remote(snap)
+    m.apply_remote(snap)                       # re-sent report: no change
+    assert m.counter("env_steps") == 40.0
+    assert m.gauge("v") == 3.0
+
+
+def test_counters_aggregate_monotonically_across_incarnations():
+    m = MetricsRegistry("t")
+    m.apply_remote({"counters": {"env_steps": 40.0, "episodes": 5.0},
+                    "gauges": {}, "series": {}})
+    m.begin_remote_incarnation()
+    # the replacement reports from zero — totals must never rewind
+    m.apply_remote({"counters": {"env_steps": 3.0}, "gauges": {},
+                    "series": {}})
+    assert m.counter("env_steps") == 43.0
+    assert m.counter("episodes") == 5.0        # key absent so far: kept
+    m.apply_remote({"counters": {"env_steps": 9.0, "episodes": 1.0},
+                    "gauges": {}, "series": {}})
+    assert m.counter("env_steps") == 49.0      # absolute-per-incarnation
+    assert m.counter("episodes") == 6.0
+    snap = m.snapshot()
+    assert snap["counters"] == {"env_steps": 49.0, "episodes": 6.0}
+
+
+def test_gauges_reset_on_new_incarnation():
+    m = MetricsRegistry("t")
+    m.apply_remote({"counters": {}, "gauges": {"policy_version": 7.0},
+                    "series": {}})
+    m.begin_remote_incarnation()
+    assert m.gauge("policy_version", default=-1.0) == -1.0
+    assert "policy_version" not in m.snapshot()["gauges"]
+    m.apply_remote({"counters": {}, "gauges": {"policy_version": 1.0},
+                    "series": {}})
+    assert m.gauge("policy_version") == 1.0
+
+
+def test_series_fold_count_weighted_across_incarnations():
+    m = MetricsRegistry("t")
+    m.apply_remote({"counters": {}, "gauges": {},
+                    "series": {"return": {"count": 4, "mean": 1.0,
+                                          "last": 2.0}}})
+    m.begin_remote_incarnation()
+    m.apply_remote({"counters": {}, "gauges": {},
+                    "series": {"return": {"count": 1, "mean": 6.0,
+                                          "last": 6.0}}})
+    s = m.snapshot()["series"]["return"]
+    assert s["count"] == 5
+    assert s["mean"] == pytest.approx(2.0)     # (4*1 + 1*6) / 5
+    assert s["last"] == 6.0
+    assert m.series_mean("return") == pytest.approx(2.0)
+
+
+def test_local_counters_coexist_with_remote_incarnations():
+    m = MetricsRegistry("t")
+    m.inc("restarts")                          # supervisor-side local count
+    m.apply_remote({"counters": {"env_steps": 10.0}, "gauges": {},
+                    "series": {}})
+    m.begin_remote_incarnation()
+    m.inc("restarts")
+    m.apply_remote({"counters": {"env_steps": 2.0}, "gauges": {},
+                    "series": {}})
+    snap = m.snapshot()
+    assert snap["counters"]["restarts"] == 2.0
+    assert snap["counters"]["env_steps"] == 12.0

@@ -1,8 +1,12 @@
 """Transport-layer contract tests (no subprocesses — real sockets/SHM,
 both ends in-process): the ExperienceChannel semantics across the wire
-(backpressure verdicts, blocking pops, close-while-blocked), the
+(backpressure verdicts, batched put_many, blocking pops,
+close-while-blocked), WireClient reconnect after a server-side drop, the
 WeightStoreTransport parity with the local store (drain protocol
-included), and the worker-report metrics bridge."""
+included), the SHM orphan sweep, and the worker-report metrics bridge."""
+import multiprocessing
+import os
+import socket
 import threading
 import time
 
@@ -11,8 +15,8 @@ import pytest
 
 from repro.runtime.experience import FifoChannel, RingChannel
 from repro.runtime.service import MetricsRegistry
-from repro.runtime.transport import (RemoteRolloutHost, RemoteWorkerSpec,
-                                     ShmChannel, SocketChannel,
+from repro.runtime.transport import (RemoteWorkerSpec, RestartPolicy,
+                                     ShmChannel, SocketChannel, Supervisor,
                                      TransportError, TransportServer,
                                      WeightStoreTransport)
 from repro.runtime.transport.channel import shared_memory
@@ -137,6 +141,29 @@ def test_unknown_channel_is_a_transport_error(server):
     remote.close()
 
 
+def test_put_many_one_roundtrip_with_per_item_verdicts(server):
+    """A whole flush crosses the wire as ONE codec blob/RPC, and the
+    server answers the same per-item verdict vector the in-process
+    channel would have produced."""
+    local, remote = _channel(server, capacity=4, policy="drop_newest")
+    items = [{"i": np.int32(i), "x": np.full(8, float(i), np.float32)}
+             for i in range(6)]
+    before = server.metrics.counter("requests")
+    verdicts = remote.put_many(items)
+    assert server.metrics.counter("requests") == before + 1
+    assert verdicts == [True] * 4 + [False] * 2  # capacity-4 drop_newest
+    assert len(local) == 4
+    got = remote.pop_batch(4, timeout=1.0)
+    np.testing.assert_array_equal(got[2]["x"], items[2]["x"])
+    assert remote.put_many([]) == []
+
+
+def test_put_many_after_close_is_all_false(server):
+    _, remote = _channel(server)
+    remote.close()
+    assert remote.put_many([{"i": np.int32(0)}] * 3) == [False] * 3
+
+
 def test_ring_channel_over_the_wire(server):
     ring = RingChannel(8, seed=0)
     server.add_channel("ring", ring)
@@ -232,6 +259,133 @@ def test_weights_encoded_once_per_version(server):
 
 
 # ---------------------------------------------------------------------------
+# WireClient reconnect-with-backoff after a server-side connection drop
+# ---------------------------------------------------------------------------
+
+def _drop_server_side(server):
+    """Kill every live connection from the SERVER side — the failure a
+    reconnecting client must survive."""
+    with server._conn_lock:
+        conns = list(server._conns)
+    for c in conns:
+        try:
+            c.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+
+
+def test_socket_channel_resumes_after_server_side_drop(server):
+    local, remote = _channel(server, reconnect_attempts=5,
+                             reconnect_backoff_s=0.02)
+    assert remote.put({"i": np.int32(0)})
+    _drop_server_side(server)
+    assert remote.put({"i": np.int32(1)})     # transparently redialed
+    assert remote._client.reconnects >= 1
+    assert not remote.closed
+    assert len(local) == 2
+
+
+def test_no_reconnect_budget_fails_fast(server):
+    """PR 3 semantics are the default: no redial budget means a dropped
+    connection degrades to no-op puts immediately."""
+    _, remote = _channel(server)
+    assert remote.put({"i": np.int32(0)})
+    _drop_server_side(server)
+    assert remote.put({"i": np.int32(1)}) is False
+    assert remote.closed
+
+
+def test_weight_transport_reacquires_version_after_drop(server):
+    """A drop may hide publishes behind the state-cache TTL: the
+    on_reconnect hook busts the cache so the newest version is re-acquired
+    on the fresh connection."""
+    remote = WeightStoreTransport(server.address, state_ttl=30.0,
+                                  reconnect_attempts=5,
+                                  reconnect_backoff_s=0.02)
+    server.local_store.publish(_params(1), 1)
+    assert remote.acquire(timeout=5.0)[1] == 1
+    assert remote.version() == 1
+    server.local_store.publish(_params(2), 2)
+    assert remote.version() == 1              # within TTL: cached state
+    _drop_server_side(server)
+    got, version = remote.acquire(newer_than=1, timeout=5.0)
+    assert version == 2
+    np.testing.assert_array_equal(got["w"], _params(2)["w"])
+    assert remote.version() == 2              # cache busted on reconnect
+    assert remote._client.reconnects >= 1
+    remote.close()
+
+
+# ---------------------------------------------------------------------------
+# SHM orphan sweep: a producer SIGKILLed between create and unlink
+# ---------------------------------------------------------------------------
+
+def _shm_exists(name: str) -> bool:
+    from multiprocessing import resource_tracker, shared_memory as shm_mod
+    try:
+        seg = shm_mod.SharedMemory(name=name)
+    except FileNotFoundError:
+        return False
+    seg.close()
+    try:    # attaching registered the name on this process's tracker —
+            # undo that so the probe itself doesn't log a leak at exit
+        resource_tracker.unregister(seg._name, "shared_memory")
+    except Exception:
+        pass
+    return True
+
+
+def _orphan_producer(address, name_file):
+    """Child body: create a request segment, get the server's reply, then
+    die by SIGKILL *before* the creator-side unlink — the leak scenario."""
+    import signal
+    from multiprocessing import resource_tracker
+    from repro.runtime.transport.channel import WireClient, shm_write
+    from repro.runtime.transport.codec import encode_pytree
+
+    client = WireClient(tuple(address))
+    body = encode_pytree({"x": np.arange(1024, dtype=np.float32)})
+    seg = shm_write(body)
+    client.request({"m": "chan.put", "chan": "orphan", "shm": seg.name,
+                    "shm_size": len(body)})
+    # keep the shared tracker's books clean (it outlives this process, so
+    # it would neither unlink the segment nor forget it on its own)
+    try:
+        resource_tracker.unregister(seg._name, "shared_memory")
+    except Exception:
+        pass
+    with open(name_file, "w") as f:
+        f.write(seg.name)
+        f.flush()
+        os.fsync(f.fileno())
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+@pytest.mark.skipif(shared_memory is None,
+                    reason="multiprocessing.shared_memory unavailable")
+def test_server_sweeps_orphaned_shm_of_sigkilled_producer(tmp_path):
+    """Regression (ISSUE 4): a worker killed between SHM create and its
+    post-ack unlink leaks the segment; TransportServer.close() sweeps it."""
+    server = TransportServer()
+    server.add_channel("orphan", FifoChannel(8))
+    server.start()
+    name_file = tmp_path / "segname"
+    ctx = multiprocessing.get_context("spawn")
+    proc = ctx.Process(target=_orphan_producer,
+                       args=(server.address, str(name_file)))
+    proc.start()
+    proc.join(timeout=60.0)
+    assert not proc.is_alive()
+    assert proc.exitcode == -9, "producer must die by SIGKILL"
+    name = name_file.read_text().strip()
+    assert name and _shm_exists(name), "segment should be orphaned (leaked)"
+    server.stop()
+    server.join()
+    assert not _shm_exists(name), "close() must sweep the orphan"
+    assert server.metrics.counter("shm_orphans_swept") >= 1
+
+
+# ---------------------------------------------------------------------------
 # worker-report metrics bridge (no subprocess)
 # ---------------------------------------------------------------------------
 
@@ -248,14 +402,19 @@ def _fake_report():
     }
 
 
-def test_host_mirrors_remote_report(server):
+def _slot(server, name="remote-rollout-9"):
     from repro.configs import get_config, reduced
     from repro.configs.base import RLConfig, RuntimeConfig
-    spec = RemoteWorkerSpec(name="remote-rollout-9",
+    spec = RemoteWorkerSpec(name=name,
                             cfg=reduced(get_config("deepseek-7b")),
                             rl=RLConfig(), rt=RuntimeConfig(),
                             address=server.address)
-    host = RemoteRolloutHost(spec, server)      # never started: bridge only
+    # never started: the slot is used as a pure report bridge
+    return Supervisor(server, RestartPolicy()).add_spawned(spec)
+
+
+def test_slot_mirrors_remote_report(server):
+    host = _slot(server)
     host.apply_report(_fake_report())
     assert host.env_steps == 40 and host.episodes_done == 5
     assert host.successes == 2
@@ -269,19 +428,31 @@ def test_host_mirrors_remote_report(server):
     assert "rollout-0" in host.remote_services
 
 
-def test_host_flags_unhealthy_report(server):
-    from repro.configs import get_config, reduced
-    from repro.configs.base import RLConfig, RuntimeConfig
-    spec = RemoteWorkerSpec(name="remote-rollout-8",
-                            cfg=reduced(get_config("deepseek-7b")),
-                            rl=RLConfig(), rt=RuntimeConfig(),
-                            address=server.address)
-    host = RemoteRolloutHost(spec, server)
+def test_slot_flags_unhealthy_report(server):
+    host = _slot(server, name="remote-rollout-8")
     report = _fake_report()
     report["health"] = {"healthy": False, "state": "failed",
                         "error": "RuntimeError('boom')"}
     host.apply_report(report)
     assert host._remote_error is not None and "boom" in host._remote_error
+
+
+def test_slot_drops_stale_incarnation_reports(server):
+    """Idempotent bridging across restarts: a zombie incarnation's report
+    neither lands in the registry nor bumps reports_seen — and its reply
+    would carry the stop flag."""
+    host = _slot(server, name="remote-rollout-7")
+    host.apply_report(_fake_report(), incarnation=0)
+    assert host.reports_seen == 1
+    host.incarnation = 1                        # supervisor moved on
+    host.metrics.begin_remote_incarnation()
+    host.apply_report(_fake_report(), incarnation=0)     # zombie
+    assert host.reports_seen == 1
+    assert host.stop_for(0) and not host.stop_for(1)
+    host.apply_report(_fake_report(), incarnation=1)     # replacement
+    assert host.reports_seen == 2
+    # the dead incarnation's 40 steps stay; the new one's 40 stack on top
+    assert host.env_steps == 80
 
 
 def test_metrics_registry_apply_remote_merges_local_series():
