@@ -191,7 +191,9 @@ class RLConfig:
     # fused_loss: run the action head + GIPO/entropy/KL loss block-fused on
     # hidden states (never materializing [B,T,A,Va] logits); exact parity
     # with the reference path. Only effective for algo == "gipo".
-    fused_loss: bool = False
+    # Default ON since PR 5 (soaked on the async benchmarks + parity CI);
+    # fused_loss=False remains the opt-out (--no-fused-loss).
+    fused_loss: bool = True
     # kernel_dispatch: routing for the fused-loss op: "auto" = Pallas on
     # TPU, jnp twin elsewhere; "pallas"/"jnp" force one side (testing).
     # Attention routing has no per-config knob — use the process-wide
@@ -244,8 +246,11 @@ class TransportConfig:
     channels + the weight-store wire for remote rollout workers (the
     paper's physical isolation of rollout from training)."""
 
-    kind: str = "socket"              # {"socket", "shm"} — shm moves large
-                                      # payloads out-of-band via shared memory
+    kind: str = "socket"              # {"socket", "shm", "ring"} — shm moves
+                                      # large payloads out-of-band through
+                                      # per-message shared memory; ring
+                                      # through two persistent SHM rings per
+                                      # channel (zero per-message churn)
     host: str = "127.0.0.1"
     port: int = 0                     # 0 = ephemeral
     listen_addr: str = ""             # "host:port" override of host/port —
@@ -263,6 +268,15 @@ class TransportConfig:
     # server-side connection drop (0 = fail fast)
     reconnect_attempts: int = 0
     reconnect_backoff_s: float = 0.1
+    # -- streaming data plane ------------------------------------------------
+    # put_window > 0: rollout flushes go through a pipelined PutStream
+    # (fire-and-forget frames, windowed async acks, exactly-once replay
+    # after a reconnect) instead of one blocking RPC per flush. 0 keeps
+    # the PR 4 request/response path.
+    put_window: int = 0
+    # ring capacity per direction for kind="ring" (the persistent SHM
+    # ring data plane; must hold several encoded flushes)
+    ring_bytes: int = 8 << 20
     supervision: SupervisionConfig = dataclasses.field(
         default_factory=SupervisionConfig)
 

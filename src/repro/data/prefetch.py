@@ -36,10 +36,25 @@ class Prefetcher:
         return self
 
     def _run(self) -> None:
+        # a pop_many source is drained in COALESCED partial batches (one
+        # lock/RPC per drain, items accumulate here until a super-batch
+        # is full) instead of exact-n pops that wait for the batch to
+        # round out while ready items sit in the channel
+        pop_many = getattr(self.source, "pop_many", None)
+        pending = []
         while not self._stop.is_set():
-            segments = self.source.pop_batch(self.batch_size, timeout=0.1)
-            if segments is None:
-                continue
+            if pop_many is not None:
+                got = pop_many(self.batch_size - len(pending), timeout=0.1)
+                if got:
+                    pending.extend(got)
+                if len(pending) < self.batch_size:
+                    continue
+                segments, pending = pending, []
+            else:
+                segments = self.source.pop_batch(self.batch_size,
+                                                 timeout=0.1)
+                if segments is None:
+                    continue
             batch = self.collate(segments)
             self.batches_built += 1
             while not self._stop.is_set():

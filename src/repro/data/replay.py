@@ -89,6 +89,23 @@ class FIFOReplayBuffer:
             self._not_full.notify_all()
             return out
 
+    def pop_upto(self, max_items: int, timeout: Optional[float] = None
+                 ) -> Optional[List[Any]]:
+        """Coalescing pop: whatever is queued, at most ``max_items``,
+        under ONE lock acquisition — blocks (up to ``timeout``) only for
+        the first segment. The batch-drain primitive ``pop_many`` rides
+        on (one RPC per drain over a remote channel)."""
+        if max_items <= 0:
+            return None
+        with self._not_empty:
+            if not self._not_empty.wait_for(lambda: len(self._q) >= 1,
+                                            timeout=timeout):
+                return None
+            out = [self._q.popleft()
+                   for _ in range(min(max_items, len(self._q)))]
+            self._not_full.notify_all()
+            return out
+
     def drain(self) -> List[Any]:
         """Pop everything currently queued (sync-mode round collection)."""
         with self._lock:

@@ -56,9 +56,11 @@ def main() -> None:
     ap.add_argument("--local", action="store_true",
                     help="reduced config on the local device mesh (CPU demo)")
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--fused-loss", action="store_true",
+    ap.add_argument("--fused-loss", action=argparse.BooleanOptionalAction,
+                    default=True,
                     help="run the action head + GIPO loss tail block-fused "
-                         "(kernels/dispatch.py) — no [B,S,Va] logits in HBM")
+                         "(kernels/dispatch.py) — no [B,S,Va] logits in "
+                         "HBM; default ON, --no-fused-loss opts out")
     ap.add_argument("--kernel-dispatch", default="auto",
                     choices=("auto", "pallas", "jnp"),
                     help="hot-op routing: Pallas on TPU / jnp twins "
@@ -82,8 +84,14 @@ def main() -> None:
                     help="restart budget per worker slot (with "
                          "--restart on_failure)")
     ap.add_argument("--remote-transport", default="socket",
-                    choices=("socket", "shm"),
-                    help="experience/weight wire for --remote-rollout")
+                    choices=("socket", "shm", "ring"),
+                    help="experience/weight wire for --remote-rollout: "
+                         "per-message sockets, per-message SHM segments, "
+                         "or persistent SHM rings (streaming data plane)")
+    ap.add_argument("--put-window", type=int, default=0, metavar="W",
+                    help="pipeline rollout flushes through a PutStream "
+                         "with W frames in flight (0 = one RPC per flush; "
+                         "ring transport always streams)")
     args = ap.parse_args()
 
     if args.remote_rollout or args.serve_workers:
@@ -166,6 +174,7 @@ def _run_remote_rollout(args) -> None:
             remote_rollout_workers=args.remote_rollout,
             connect_rollout_workers=args.serve_workers,
             kind=args.remote_transport,
+            put_window=args.put_window,
             listen_addr=args.listen if args.serve_workers else "",
             token=args.token,
             supervision=SupervisionConfig(restart=args.restart,

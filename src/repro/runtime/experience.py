@@ -44,6 +44,32 @@ class ExperienceChannel(abc.ABC):
         item), so producers should flush episodes through it."""
         return [self.put(item) for item in items]
 
+    def pop_many(self, max_items: int, timeout: Optional[float] = None
+                 ) -> Optional[List[Any]]:
+        """Coalescing drain: block (up to ``timeout``) only for the FIRST
+        item, then take everything immediately available up to
+        ``max_items`` — never fewer than one on success, never blocks to
+        round a batch out. Remote channels override it into ONE wire
+        round-trip and codec blob per drain; consumers that can accept
+        partial batches (the prefetcher, the mixed source) should drain
+        through it. Default rides on ``pop_batch`` where a subclass
+        provides one."""
+        if max_items <= 0:
+            return None
+        pop_batch = getattr(self, "pop_batch", None)
+        if pop_batch is None:
+            raise NotImplementedError(
+                f"{type(self).__name__} has no pop path")
+        got = pop_batch(1, timeout=timeout)
+        if not got:
+            return None
+        if max_items > 1:
+            more = pop_batch(min(max_items - 1, len(self)), timeout=0) \
+                if len(self) else None
+            if more:
+                got = list(got) + list(more)
+        return got
+
     @abc.abstractmethod
     def __len__(self) -> int:
         ...
@@ -74,6 +100,11 @@ class FifoChannel(ExperienceChannel):
     def pop_batch(self, n: int, timeout: Optional[float] = None
                   ) -> Optional[List[Any]]:
         return self._buf.pop_batch(n, timeout=timeout)
+
+    def pop_many(self, max_items: int, timeout: Optional[float] = None
+                 ) -> Optional[List[Any]]:
+        # single lock acquisition in the buffer, not two pop_batch calls
+        return self._buf.pop_upto(max_items, timeout=timeout)
 
     def drain(self) -> List[Any]:
         return self._buf.drain()
@@ -148,11 +179,29 @@ class MixedExperienceSource:
         self._pending: List[Any] = []
 
     def _take(self, chan, k: int) -> int:
-        got = chan.pop_batch(min(k, len(chan)), timeout=0) if k else None
+        # coalesced non-blocking drain: one call (one RPC when the side
+        # is remote), no separate len() probe to race against producers
+        got = chan.pop_many(k, timeout=0) if k else None
         if got:
             self._pending.extend(got)
             return len(got)
         return 0
+
+    def _mix_round(self, need: int, want_real: int, taken_real: int) -> int:
+        """ONE non-blocking take at the mix policy (the single home of
+        the ratio rules): real share first (capped by availability),
+        backfill across sides only for intermediate fractions — the
+        extremes are hard pins (0.0 never touches real, 1.0 never
+        imagined). Returns how many real items were taken."""
+        k_real = min(max(want_real - taken_real, 0), len(self.real))
+        if (0.0 < self.real_fraction
+                and len(self.imagined) < need - k_real):
+            k_real = min(need - len(self.imagined), len(self.real))
+        got_real = self._take(self.real, min(k_real, need))
+        self.real_consumed += got_real
+        k_img = need - got_real if self.real_fraction < 1.0 else 0
+        self.imagined_consumed += self._take(self.imagined, k_img)
+        return got_real
 
     def pop_batch(self, n: int, timeout: Optional[float] = None,
                   poll_s: float = 0.005) -> Optional[List[Any]]:
@@ -165,23 +214,33 @@ class MixedExperienceSource:
                 out, self._pending = (self._pending[:n],
                                       self._pending[n:])
                 return out
-            # real share first (capped by availability); backfill across
-            # sides only for intermediate fractions — the extremes are
-            # hard pins (0.0 never touches real, 1.0 never imagined)
-            k_real = min(max(want_real - taken_real, 0), len(self.real))
-            if (0.0 < self.real_fraction
-                    and len(self.imagined) < need - k_real):
-                k_real = min(need - len(self.imagined), len(self.real))
-            got_real = self._take(self.real, min(k_real, need))
-            taken_real += got_real
-            self.real_consumed += got_real
-            k_img = need - got_real if self.real_fraction < 1.0 else 0
-            got_img = self._take(self.imagined, k_img)
-            self.imagined_consumed += got_img
+            taken_real += self._mix_round(need, want_real, taken_real)
             if len(self._pending) >= n:
                 continue
             if deadline is not None and time.monotonic() >= deadline:
                 return None        # gathered items carry to the next call
+            time.sleep(poll_s)
+
+    def pop_many(self, max_items: int, timeout: Optional[float] = None,
+                 poll_s: float = 0.005) -> Optional[List[Any]]:
+        """Coalescing drain at the mixed ratio: returns as soon as ANY
+        items are available (≤ ``max_items``) instead of waiting to round
+        out an exact batch — the prefetcher accumulates partials, so the
+        mix is still targeted per drain but a starved side never stalls
+        the pipeline. The extremes stay hard pins (0.0 never touches
+        real, 1.0 never imagined)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        want_real = int(round(max_items * self.real_fraction))
+        while True:
+            if self._pending:
+                out, self._pending = (self._pending[:max_items],
+                                      self._pending[max_items:])
+                return out
+            self._mix_round(max_items, want_real, 0)
+            if self._pending:
+                continue
+            if deadline is not None and time.monotonic() >= deadline:
+                return None
             time.sleep(poll_s)
 
     def __len__(self) -> int:

@@ -128,6 +128,9 @@ class AcceRLSystem:
                     num_envs=tcfg.envs_per_worker,
                     seed=seed * 1000 + rt.num_rollout_workers + idx,
                     use_shm=(tcfg.kind == "shm"),
+                    use_ring=(tcfg.kind == "ring"),
+                    ring_bytes=tcfg.ring_bytes,
+                    put_window=tcfg.put_window,
                     shm_threshold=tcfg.shm_threshold_bytes,
                     connect_timeout_s=tcfg.connect_timeout_s,
                     latency_mean_ms=remote_latency_ms,

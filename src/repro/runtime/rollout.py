@@ -176,9 +176,14 @@ class RolloutWorker(Service):
         segments = episode_to_segments(traj, self.segment_horizon)
         # batched flush: one backpressure verdict per segment, and over a
         # remote channel ONE codec blob + round-trip per episode instead
-        # of one per segment
-        self.experience.put_many(segments)
+        # of one per segment (or one pipelined stream frame, in which
+        # case the verdicts here are provisional and the channel's
+        # stream stats carry the authoritative accept counts)
+        verdicts = self.experience.put_many(segments)
         self.metrics.inc("segments", float(len(segments)))
+        rejected = sum(1 for v in verdicts if not v)
+        if rejected:
+            self.metrics.inc("segments_rejected", float(rejected))
         # bridged gauges: a SupervisedWorker slot mirrors these to the
         # parent, so policy-staleness is visible for out-of-process
         # workers too

@@ -4,9 +4,13 @@ PR 2 left ``pop_batch`` / ``publish``/``acquire`` as the seam for
 crossing a process boundary; this package is the crossing:
 
   * :mod:`codec`   — versioned, zero-copy-friendly pytree wire format;
-  * :mod:`channel` — :class:`SocketChannel` / :class:`ShmChannel`, the
-    ExperienceChannel contract (incl. backpressure verdicts and batched
-    ``put_many``) over the wire, on a reconnecting :class:`WireClient`;
+  * :mod:`channel` — :class:`SocketChannel` / :class:`ShmChannel` /
+    :class:`ShmRingChannel`, the ExperienceChannel contract (incl.
+    backpressure verdicts, batched ``put_many``, coalesced ``pop_many``)
+    over the wire, on a reconnecting :class:`WireClient`, plus
+    :class:`PutStream`, the pipelined windowed-ack put path;
+  * :mod:`ring`    — :class:`ShmRing`, the persistent SPSC shared-memory
+    ring replacing per-message segments on the highest-rate channels;
   * :mod:`server`  — :class:`TransportServer`, the parent-side endpoint
     (a Service on the bus) hosting channels + the weight store + the
     ``worker.hello`` token handshake;
@@ -25,11 +29,14 @@ from repro.runtime.transport.codec import (  # noqa: F401
 )
 from repro.runtime.transport.channel import (  # noqa: F401
     ChannelClosed,
+    PutStream,
     ShmChannel,
+    ShmRingChannel,
     SocketChannel,
     TransportError,
     WireClient,
 )
+from repro.runtime.transport.ring import RingError, ShmRing  # noqa: F401
 from repro.runtime.transport.server import TransportServer  # noqa: F401
 from repro.runtime.transport.weights import WeightStoreTransport  # noqa: F401
 from repro.runtime.transport.remote import (  # noqa: F401

@@ -46,8 +46,8 @@ ALIGNMENT = 64
 _PREAMBLE = struct.Struct("!4sHIQ")
 PREAMBLE_SIZE = _PREAMBLE.size
 
-__all__ = ["CodecError", "encode_pytree", "decode_pytree",
-           "send_frame", "recv_frame", "recv_exact",
+__all__ = ["CodecError", "encode_pytree", "decode_pytree", "plan_pytree",
+           "EncodePlan", "send_frame", "recv_frame", "recv_exact",
            "MAGIC", "WIRE_VERSION", "PREAMBLE_SIZE"]
 
 
@@ -118,13 +118,52 @@ def _align(n: int) -> int:
     return (n + ALIGNMENT - 1) // ALIGNMENT * ALIGNMENT
 
 
-def encode_pytree(tree: Any) -> bytes:
-    """Serialize a pytree into one self-describing, aligned blob.
+class EncodePlan:
+    """A sized, ready-to-write encoding of one pytree.
 
-    Leaf offsets are relative to the data section (which starts at the
-    first alignment boundary after the header), so the header never
-    depends on its own serialized length.
+    Splitting serialization into *plan* (size known) and *write* lets a
+    caller reserve exactly ``nbytes`` in a preallocated destination — a
+    :class:`~repro.runtime.transport.ring.ShmRing` reservation — and
+    materialize the blob in place, skipping the intermediate ``bytes``
+    copy that ``encode_pytree`` pays on the socket path.
     """
+
+    __slots__ = ("nbytes", "_header", "_recs", "_leaves", "_data_start")
+
+    def __init__(self, header: bytes, recs: List[Dict],
+                 leaves: List[np.ndarray]):
+        self._header = header
+        self._recs = recs
+        self._leaves = leaves
+        self._data_start = _align(PREAMBLE_SIZE + len(header))
+        data = _align(recs[-1]["o"] + recs[-1]["n"]) if recs else 0
+        self.nbytes = self._data_start + data
+
+    def write_into(self, out, offset: int = 0) -> int:
+        """Write the full blob at ``out[offset:]``; returns ``nbytes``."""
+        view = memoryview(out)
+        _PREAMBLE.pack_into(view, offset, MAGIC, WIRE_VERSION,
+                            len(self._header), self.nbytes)
+        h0 = offset + PREAMBLE_SIZE
+        view[h0:h0 + len(self._header)] = self._header
+        base = offset + self._data_start
+        for rec, arr in zip(self._recs, self._leaves):
+            if rec["n"]:
+                start = base + rec["o"]
+                try:
+                    # ONE memcpy leaf → destination; planned leaves are
+                    # C-contiguous, so the cast is free
+                    src = memoryview(arr).cast("B")
+                except (TypeError, ValueError, BufferError):
+                    # extension dtypes (bf16 et al.) may not export a
+                    # PEP 3118 buffer — fall back to the tobytes copy
+                    src = arr.tobytes()
+                view[start:start + rec["n"]] = src
+        return self.nbytes
+
+
+def plan_pytree(tree: Any) -> EncodePlan:
+    """Stage one of :func:`encode_pytree`: flatten + size, no data copy."""
     leaves: List[np.ndarray] = []
     recs: List[Dict] = []
     schema = _build_schema(tree, leaves, recs)
@@ -135,16 +174,19 @@ def encode_pytree(tree: Any) -> bytes:
         offset = _align(offset + arr.nbytes)
     header = json.dumps({"schema": schema, "leaves": recs},
                         separators=(",", ":")).encode()
-    data_start = _align(PREAMBLE_SIZE + len(header))
-    total = data_start + offset
+    return EncodePlan(header, recs, leaves)
 
-    buf = bytearray(total)
-    _PREAMBLE.pack_into(buf, 0, MAGIC, WIRE_VERSION, len(header), total)
-    buf[PREAMBLE_SIZE:PREAMBLE_SIZE + len(header)] = header
-    for rec, arr in zip(recs, leaves):
-        if rec["n"]:
-            start = data_start + rec["o"]
-            buf[start:start + rec["n"]] = arr.tobytes()
+
+def encode_pytree(tree: Any) -> bytes:
+    """Serialize a pytree into one self-describing, aligned blob.
+
+    Leaf offsets are relative to the data section (which starts at the
+    first alignment boundary after the header), so the header never
+    depends on its own serialized length.
+    """
+    plan = plan_pytree(tree)
+    buf = bytearray(plan.nbytes)
+    plan.write_into(buf)
     return bytes(buf)
 
 
@@ -205,14 +247,27 @@ def decode_pytree(buf: Union[bytes, bytearray, memoryview], *,
 # message framing (RPC envelope: JSON header + optional binary body)
 # ---------------------------------------------------------------------------
 
-def recv_exact(sock: socket.socket, n: int) -> Optional[bytearray]:
-    """Read exactly ``n`` bytes; None on clean EOF before any byte."""
+#: bodies up to this size are coalesced into the preamble+header sendall
+#: — one syscall (and one thread wake on the receiver) per frame instead
+#: of two; bigger bodies go separately to avoid the concat copy
+_SEND_COALESCE_MAX = 1 << 18
+
+
+def recv_exact(stream, n: int) -> Optional[bytearray]:
+    """Read exactly ``n`` bytes; None on clean EOF before any byte.
+
+    ``stream`` is a socket OR any buffered reader with ``readinto``
+    (e.g. ``sock.makefile("rb")``) — a streaming consumer reads many
+    small frames per syscall through the buffer, which is most of the
+    pipelined put path's win on the ack stream.
+    """
     buf = bytearray(n)
     view = memoryview(buf)
+    reader = getattr(stream, "recv_into", None) or stream.readinto
     got = 0
     while got < n:
-        k = sock.recv_into(view[got:], n - got)
-        if k == 0:
+        k = reader(view[got:])
+        if not k:
             if got == 0:
                 return None
             raise CodecError(f"connection closed mid-frame "
@@ -221,20 +276,34 @@ def recv_exact(sock: socket.socket, n: int) -> Optional[bytearray]:
     return buf
 
 
+def frame_bytes(header: Dict, body: Union[bytes, memoryview] = b"") -> bytes:
+    """One framed message as bytes — for senders that coalesce several
+    frames into a single ``sendall`` (the pipelined put stream)."""
+    hj = json.dumps(header, separators=(",", ":")).encode()
+    pre = _PREAMBLE.pack(MAGIC, WIRE_VERSION, len(hj), len(body))
+    return pre + hj + bytes(body)
+
+
 def send_frame(sock: socket.socket, header: Dict,
                body: Union[bytes, memoryview] = b"") -> int:
     """Write one framed message; returns bytes sent."""
     hj = json.dumps(header, separators=(",", ":")).encode()
     pre = _PREAMBLE.pack(MAGIC, WIRE_VERSION, len(hj), len(body))
-    sock.sendall(pre + hj)
-    if len(body):
-        sock.sendall(body)
+    if 0 < len(body) <= _SEND_COALESCE_MAX:
+        if not isinstance(body, bytes):
+            body = bytes(body)
+        sock.sendall(pre + hj + body)
+    else:
+        sock.sendall(pre + hj)
+        if len(body):
+            sock.sendall(body)
     return len(pre) + len(hj) + len(body)
 
 
-def recv_frame(sock: socket.socket) -> Optional[Tuple[Dict, bytes]]:
-    """Read one framed message; None when the peer closed cleanly."""
-    pre = recv_exact(sock, PREAMBLE_SIZE)
+def recv_frame(stream) -> Optional[Tuple[Dict, bytes]]:
+    """Read one framed message (socket or buffered reader — see
+    :func:`recv_exact`); None when the peer closed cleanly."""
+    pre = recv_exact(stream, PREAMBLE_SIZE)
     if pre is None:
         return None
     magic, version, hlen, blen = _PREAMBLE.unpack_from(pre, 0)
@@ -242,13 +311,13 @@ def recv_frame(sock: socket.socket) -> Optional[Tuple[Dict, bytes]]:
         raise CodecError(f"bad frame magic {magic!r}")
     if version != WIRE_VERSION:
         raise CodecError(f"frame wire version {version} unsupported")
-    hdr = recv_exact(sock, hlen)
+    hdr = recv_exact(stream, hlen)
     if hdr is None:
         raise CodecError("connection closed before frame header")
     header = json.loads(bytes(hdr))
     body = b""
     if blen:
-        got = recv_exact(sock, blen)
+        got = recv_exact(stream, blen)
         if got is None:
             raise CodecError("connection closed before frame body")
         body = bytes(got)

@@ -64,6 +64,12 @@ class RemoteWorkerSpec:
     num_envs: int = 1
     seed: int = 0
     use_shm: bool = False
+    # streaming data plane: use_ring routes segments through persistent
+    # SHM rings (ShmRingChannel); put_window > 0 pipelines flushes
+    # through a windowed-ack PutStream (works with any channel kind)
+    use_ring: bool = False
+    ring_bytes: int = 8 << 20
+    put_window: int = 0
     shm_threshold: int = 1 << 16
     connect_timeout_s: float = 20.0
     latency_mean_ms: Optional[float] = None
@@ -165,18 +171,35 @@ def worker_main(spec: RemoteWorkerSpec) -> int:
     from repro.runtime.inference import InferenceService
     from repro.runtime.rollout import RolloutWorker
 
-    Channel = ShmChannel if spec.use_shm else SocketChannel
+    from repro.runtime.transport.channel import ShmRingChannel
+
     wire_kw = dict(connect_timeout=spec.connect_timeout_s,
                    reconnect_attempts=spec.reconnect_attempts,
-                   reconnect_backoff_s=spec.reconnect_backoff_s)
-    experience = Channel(spec.address, spec.channel,
-                         shm_threshold=spec.shm_threshold, **wire_kw)
-    frames = (Channel(spec.address, spec.frame_channel,
-                      shm_threshold=spec.shm_threshold, **wire_kw)
+                   reconnect_backoff_s=spec.reconnect_backoff_s,
+                   shm_threshold=spec.shm_threshold)
+    if spec.use_ring:
+        Channel = ShmRingChannel
+        chan_kw = dict(wire_kw, ring_bytes=spec.ring_bytes,
+                       put_window=(spec.put_window or 32))
+    else:
+        Channel = ShmChannel if spec.use_shm else SocketChannel
+        chan_kw = dict(wire_kw, put_window=spec.put_window)
+    experience = Channel(spec.address, spec.channel, **chan_kw)
+    frames = (Channel(spec.address, spec.frame_channel, **chan_kw)
               if spec.frame_channel else None)
-    store = WeightStoreTransport(spec.address, use_shm=spec.use_shm,
-                                 shm_threshold=spec.shm_threshold, **wire_kw)
-    control = WireClient(spec.address, **wire_kw)
+    # the weight wire keeps the per-message SHM path even in ring mode:
+    # acquires are rare (one per published version) and the blob cache
+    # already amortizes encoding, so there is no churn worth a ring
+    store = WeightStoreTransport(spec.address,
+                                 use_shm=spec.use_shm or spec.use_ring,
+                                 shm_threshold=spec.shm_threshold,
+                                 connect_timeout=spec.connect_timeout_s,
+                                 reconnect_attempts=spec.reconnect_attempts,
+                                 reconnect_backoff_s=spec.reconnect_backoff_s)
+    control = WireClient(spec.address,
+                         connect_timeout=spec.connect_timeout_s,
+                         reconnect_attempts=spec.reconnect_attempts,
+                         reconnect_backoff_s=spec.reconnect_backoff_s)
 
     latency = (lognormal_latency(spec.latency_mean_ms,
                                  sigma=spec.latency_sigma, seed=spec.seed)

@@ -1,0 +1,298 @@
+"""Persistent shared-memory ring buffer: the streaming data plane.
+
+The per-message SHM path (:class:`~repro.runtime.transport.channel.ShmChannel`)
+pays a ``shm_open`` + ``mmap`` + ``unlink`` syscall trio for every payload
+and forces the server to keep an LRU of orphan segment names. A
+:class:`ShmRing` replaces that churn with ONE segment per channel
+direction, created at connect time and reused for every record — payloads
+cross the boundary at memcpy speed and the only thing the server ever has
+to sweep is the ring itself.
+
+Layout (one 64-byte header cacheline, then ``capacity`` data bytes)::
+
+    0   8s  magic "ACRLRNG1"
+    8   u64 capacity                (data bytes; multiple of 16)
+    16  u64 write   — RESERVE offset: monotone byte offset the producer
+                      has claimed (advanced BEFORE the payload memcpy)
+    24  u64 commit  — COMMIT offset: records below it are fully written;
+                      the consumer never reads past it (torn-write guard)
+    32  u64 read    — consumer offset (monotone)
+    40  u64 items_committed
+    48  u64 items_read
+    56  u64 torn_discards          (recover() bumps it per discarded tail)
+
+Records are contiguous — ``[u64 seq | u32 nbytes | u32 flags | payload]``
+padded to 8 bytes. A record that would straddle the end of the data area
+is preceded by a WRAP marker (``nbytes = 0xFFFFFFFF``) and restarts at
+offset 0; a tail shorter than a record header is skipped implicitly by
+both sides. Offsets are monotone (never wrapped), so ``free = capacity -
+(write - read)`` with no ambiguity between full and empty.
+
+Torn-write protection is the two-offset header: the producer publishes
+``write`` (reserve) before the memcpy and ``commit`` only after it, so a
+producer dying mid-copy leaves ``write > commit`` — the consumer never
+sees the partial record, and the next producer to take over the ring
+calls :meth:`recover` to discard the uncommitted tail. Each record also
+carries its sequence number (``items_committed`` at reserve time); a
+mismatch against ``items_read`` on the consumer side means the ring was
+corrupted and raises :class:`RingError` instead of yielding garbage.
+
+Discipline: single producer, single consumer (one process each side) —
+exactly the shape of one transport connection. Both sides may live in
+the same process (tests, benchmarks).
+"""
+from __future__ import annotations
+
+import struct
+import time
+from typing import Dict, Optional
+
+try:
+    from multiprocessing import shared_memory
+except ImportError:  # pragma: no cover — stdlib on every target platform
+    shared_memory = None
+
+MAGIC = b"ACRLRNG1"
+HEADER_SIZE = 64
+RECORD_HEADER = struct.Struct("<QII")          # seq, nbytes, flags
+WRAP = 0xFFFFFFFF                              # nbytes sentinel: skip to 0
+
+_U64 = struct.Struct("<Q")
+_OFF_CAPACITY = 8
+_OFF_WRITE = 16
+_OFF_COMMIT = 24
+_OFF_READ = 32
+_OFF_ITEMS_COMMITTED = 40
+_OFF_ITEMS_READ = 48
+_OFF_TORN = 56
+
+#: polling granularity of blocking push/pop waits — the ring is a hot
+#: path, so the sleep is short; close()/deadlines bound every wait
+POLL_S = 0.0005
+
+__all__ = ["RingError", "ShmRing", "MAGIC", "HEADER_SIZE", "WRAP"]
+
+
+class RingError(RuntimeError):
+    """Structural ring failure: bad magic, oversized record, corruption."""
+
+
+def _pad8(n: int) -> int:
+    return (n + 7) & ~7
+
+
+class ShmRing:
+    """Single-producer single-consumer byte ring over one SHM segment."""
+
+    def __init__(self, shm: "shared_memory.SharedMemory", *, created: bool):
+        self._shm = shm
+        self.created = created
+        self.closed = False
+        buf = shm.buf
+        if bytes(buf[:8]) != MAGIC:
+            raise RingError(f"bad ring magic in segment {shm.name!r}")
+        self.capacity = _U64.unpack_from(buf, _OFF_CAPACITY)[0]
+        if HEADER_SIZE + self.capacity > len(buf):
+            raise RingError(f"ring segment {shm.name!r} truncated")
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def create(cls, capacity: int, name: Optional[str] = None) -> "ShmRing":
+        """Create a fresh ring with at least ``capacity`` data bytes."""
+        if shared_memory is None:
+            raise RingError("shared memory unavailable on this platform")
+        capacity = max(_pad8(capacity), 4 * RECORD_HEADER.size)
+        capacity = (capacity + 15) & ~15               # multiple of 16
+        shm = shared_memory.SharedMemory(
+            create=True, size=HEADER_SIZE + capacity, name=name)
+        shm.buf[:HEADER_SIZE] = bytes(HEADER_SIZE)     # zero all offsets
+        shm.buf[:8] = MAGIC
+        _U64.pack_into(shm.buf, _OFF_CAPACITY, capacity)
+        return cls(shm, created=True)
+
+    @classmethod
+    def attach(cls, name: str) -> "ShmRing":
+        """Attach to a ring created by the peer (no unlink duty)."""
+        if shared_memory is None:
+            raise RingError("shared memory unavailable on this platform")
+        return cls(shared_memory.SharedMemory(name=name), created=False)
+
+    @property
+    def name(self) -> str:
+        return self._shm.name
+
+    # -- header accessors (each field is ONE aligned u64 write: no tearing
+    # across fields, and an 8-byte aligned store is atomic on every target)
+    def _get(self, off: int) -> int:
+        return _U64.unpack_from(self._shm.buf, off)[0]
+
+    def _set(self, off: int, value: int) -> None:
+        _U64.pack_into(self._shm.buf, off, value)
+
+    # -- producer -------------------------------------------------------------
+    def max_record(self) -> int:
+        """Largest payload a push can ever carry (sized so one record plus
+        its worst-case wrap skip always fits an empty ring)."""
+        return self.capacity // 2 - RECORD_HEADER.size
+
+    def reserve(self, nbytes: int,
+                timeout: Optional[float] = None) -> Optional[memoryview]:
+        """Claim space for one ``nbytes`` record; returns a writable view
+        of the payload area (None on timeout). The reservation is
+        published BEFORE the caller copies — :meth:`commit` makes it
+        visible to the consumer; an uncommitted reservation is what
+        :meth:`recover` discards."""
+        if self.closed:
+            return None
+        if nbytes > self.max_record():
+            raise RingError(f"record of {nbytes} bytes exceeds ring "
+                            f"max {self.max_record()} (capacity "
+                            f"{self.capacity})")
+        need = RECORD_HEADER.size + _pad8(nbytes)
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        buf = self._shm.buf
+        while True:
+            if self.closed:
+                return None
+            write = self._get(_OFF_WRITE)
+            pos = write % self.capacity
+            rem = self.capacity - pos
+            if rem < RECORD_HEADER.size:
+                skip, marker = rem, False          # implicit tail skip
+            elif rem < need:
+                skip, marker = rem, True           # WRAP marker, restart at 0
+            else:
+                skip, marker = 0, False
+            free = self.capacity - (write - self._get(_OFF_READ))
+            if free >= skip + need:
+                break
+            if self.closed or (deadline is not None
+                               and time.monotonic() >= deadline):
+                return None
+            time.sleep(POLL_S)
+        if marker:
+            RECORD_HEADER.pack_into(buf, HEADER_SIZE + pos, 0, WRAP, 0)
+        start = (write + skip) % self.capacity
+        RECORD_HEADER.pack_into(buf, HEADER_SIZE + start,
+                                self._get(_OFF_ITEMS_COMMITTED), nbytes, 0)
+        self._reserved_end = write + skip + need
+        self._set(_OFF_WRITE, self._reserved_end)  # reserve BEFORE payload
+        data0 = HEADER_SIZE + start + RECORD_HEADER.size
+        return buf[data0:data0 + nbytes]
+
+    def commit(self) -> None:
+        """Publish the record reserved by the last :meth:`reserve`."""
+        self._set(_OFF_ITEMS_COMMITTED,
+                  self._get(_OFF_ITEMS_COMMITTED) + 1)
+        self._set(_OFF_COMMIT, self._reserved_end)
+
+    def push(self, payload, timeout: Optional[float] = None) -> bool:
+        """Reserve + copy + commit one record; False on timeout (full)."""
+        data = memoryview(payload)
+        view = self.reserve(len(data), timeout=timeout)
+        if view is None:
+            return False
+        view[:] = data
+        self.commit()
+        return True
+
+    # -- consumer -------------------------------------------------------------
+    def pop(self, timeout: Optional[float] = None) -> Optional[bytes]:
+        """Pop the oldest committed record (None on timeout). Only
+        committed records are ever visible — a torn (reserved, never
+        committed) tail is invisible by construction."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        buf = self._shm.buf
+        while True:
+            if self.closed:
+                return None
+            read = self._get(_OFF_READ)
+            if read < self._get(_OFF_COMMIT):
+                pos = read % self.capacity
+                rem = self.capacity - pos
+                if rem < RECORD_HEADER.size:       # implicit tail skip
+                    self._set(_OFF_READ, read + rem)
+                    continue
+                seq, nbytes, _ = RECORD_HEADER.unpack_from(
+                    buf, HEADER_SIZE + pos)
+                if nbytes == WRAP:
+                    self._set(_OFF_READ, read + rem)
+                    continue
+                # bound by what reserve() can legally have written AND by
+                # the mapping — a corrupt length must raise, never yield
+                # a silently clamped short read
+                if (nbytes > self.max_record()
+                        or pos + RECORD_HEADER.size + nbytes
+                        > self.capacity):
+                    raise RingError(f"corrupt ring record: {nbytes} bytes "
+                                    f"claimed at offset {read}")
+                expect = self._get(_OFF_ITEMS_READ)
+                if seq != expect:
+                    raise RingError(f"corrupt ring: record seq {seq} != "
+                                    f"expected {expect}")
+                data0 = HEADER_SIZE + pos + RECORD_HEADER.size
+                out = bytes(buf[data0:data0 + nbytes])
+                self._set(_OFF_ITEMS_READ, expect + 1)
+                self._set(_OFF_READ,
+                          read + RECORD_HEADER.size + _pad8(nbytes))
+                return out
+            if self.closed or (deadline is not None
+                               and time.monotonic() >= deadline):
+                return None
+            time.sleep(POLL_S)
+
+    # -- recovery -------------------------------------------------------------
+    def recover(self) -> bool:
+        """Discard an uncommitted (torn) reservation left by a producer
+        that died mid-copy: reset ``write`` back to ``commit``. Call
+        before producing into a ring taken over from a dead peer.
+        Returns True iff a torn tail was discarded."""
+        write, commit = self._get(_OFF_WRITE), self._get(_OFF_COMMIT)
+        if write == commit:
+            return False
+        self._set(_OFF_WRITE, commit)
+        self._set(_OFF_TORN, self._get(_OFF_TORN) + 1)
+        return True
+
+    # -- introspection --------------------------------------------------------
+    def __len__(self) -> int:
+        """Committed-but-unread records."""
+        return int(self._get(_OFF_ITEMS_COMMITTED)
+                   - self._get(_OFF_ITEMS_READ))
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "capacity_bytes": float(self.capacity),
+            "used_bytes": float(self._get(_OFF_COMMIT)
+                                - self._get(_OFF_READ)),
+            "items_pushed": float(self._get(_OFF_ITEMS_COMMITTED)),
+            "items_popped": float(self._get(_OFF_ITEMS_READ)),
+            "depth_items": float(len(self)),
+            "torn_discards": float(self._get(_OFF_TORN)),
+        }
+
+    # -- lifecycle ------------------------------------------------------------
+    def close(self) -> None:
+        """Unmap (both sides); a blocked push/pop returns within one poll
+        slice. Unlinking is the creator's job (:meth:`unlink`)."""
+        if self.closed:
+            return
+        self.closed = True
+        # give any same-process waiter a chance to observe `closed` before
+        # the mapping disappears under it
+        time.sleep(POLL_S)
+        try:
+            self._shm.close()
+        except (OSError, BufferError):
+            pass
+
+    def unlink(self) -> None:
+        """Remove the segment name (idempotent; creator-owns-lifetime,
+        but the server may sweep a dead creator's ring — both tolerate
+        the other having gone first)."""
+        try:
+            self._shm.unlink()
+        except FileNotFoundError:
+            pass

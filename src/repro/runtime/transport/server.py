@@ -12,9 +12,19 @@ Exposed endpoints (JSON header ``m`` field):
                           the channel's own backpressure policy answers
   ``chan.put_many``       one codec blob carrying a whole flush (an
                           episode's segments); per-item verdict vector back
+  ``chan.put_stream``     one pipelined put-stream frame: applied at most
+                          once per ``(chan, stream, seq)`` — replayed
+                          frames are re-ACKed from the stored verdicts,
+                          never re-applied (exactly-once across reconnects)
   ``chan.pop``            blocking ``pop_batch(n, timeout)`` (bounded
                           slices; clients long-poll)
+  ``chan.pop_many``       coalesced drain: up to ``n`` items, ONE blob —
+                          blocks only for the first item
   ``chan.len/stats``      depth / stats snapshot
+  ``stream.open``         put-stream handshake: registers the dedup state
+                          and (ring mode) attaches the client→server ring
+  ``ring.open``           attaches this connection's server→client ring
+                          for ``want_ring`` pop replies
   ``store.acquire``       newest weights with version > ``newer_than``
                           (encoded once per version, then cache-served)
   ``store.state``         (version, draining) — the drain protocol's poll
@@ -31,27 +41,92 @@ Every connection gets its own handler thread; blocking pops therefore
 never head-of-line-block other clients. Large response bodies go
 out-of-band via shared memory when the client asks (``want_shm``) — the
 server defers the unlink until the same connection's next frame, which is
-the client's implicit ack.
+the client's implicit ack — or through the connection's persistent ring
+(``want_ring``), which needs no per-message ack at all.
 
 Orphan sweep: a client that dies between creating a request SHM segment
 and unlinking it (creator-unlinks-after-ack) leaks the segment — its own
 resource tracker is shared with the parent and therefore outlives it. The
 server remembers every client-created segment name it has seen and
-unlinks any still present when it closes.
+unlinks any still present when it closes. Ring segments need no LRU:
+their lifetime IS the connection's, so the handler sweeps its own rings
+in ``finally`` (the creator's unlink having won is fine — both sides
+tolerate the name being gone).
+
+Segment-churn accounting: the registry counters
+``shm_segments_created`` / ``shm_segments_attached`` /
+``shm_segments_unlinked`` (per-message data plane) vs
+``ring_records_in/out`` + ``rings_opened`` (persistent data plane) make
+the ring-vs-segment trade observable in ``metrics()["services"]``, not
+just in the benchmark.
 """
 from __future__ import annotations
 
 import collections
 import socket
 import threading
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.runtime.service import Service
 from repro.runtime.transport.channel import shared_memory, shm_read, shm_write
 from repro.runtime.transport.codec import (decode_pytree, encode_pytree,
                                            recv_frame, send_frame)
+from repro.runtime.transport.ring import RingError, ShmRing
 
 __all__ = ["TransportServer"]
+
+
+class _ConnContext:
+    """Per-connection transport state: the attached ring endpoints."""
+
+    __slots__ = ("c2s", "s2c")
+
+    def __init__(self):
+        self.c2s: Optional[ShmRing] = None    # put-stream payloads in
+        self.s2c: Optional[ShmRing] = None    # pop replies out
+
+    def rings(self) -> List[ShmRing]:
+        return [r for r in (self.c2s, self.s2c) if r is not None]
+
+
+class _StreamState:
+    """Dedup state for one put stream, keyed by (channel, stream id).
+
+    Survives the stream's connection (that is the point: a reconnect
+    replays the window and the state says what was already applied).
+    ``acks`` keeps the last few windows of verdicts so a replayed frame
+    can be re-ACKed faithfully.
+    """
+
+    __slots__ = ("last_seq", "acks", "keep", "lock", "ack_every",
+                 "pending_acks")
+
+    def __init__(self, window: int, ack_every: int = 1):
+        self.last_seq = -1
+        self.acks: "collections.OrderedDict[int, List[bool]]" = \
+            collections.OrderedDict()
+        self.keep = max(4 * window, 64)
+        # cumulative acking: reply once per `ack_every` frames (a reply
+        # per frame costs the producer a receiver-thread wakeup per
+        # flush); duplicates and stream.flush force an immediate drain
+        self.ack_every = max(1, min(ack_every, max(window // 2, 1)))
+        self.pending_acks: Dict[int, List[bool]] = {}
+        # serializes dedup-check + apply: a frame replayed on a fresh
+        # connection must not race its original, still stalled on the
+        # dying one (e.g. a block-policy put)
+        self.lock = threading.Lock()
+
+    def record(self, seq: int, verdicts: List[bool]) -> None:
+        self.last_seq = seq
+        self.acks[seq] = verdicts
+        self.pending_acks[seq] = verdicts
+        while len(self.acks) > self.keep:
+            self.acks.popitem(last=False)
+
+    def drain_acks(self) -> Dict[str, List[bool]]:
+        out = {str(k): v for k, v in self.pending_acks.items()}
+        self.pending_acks = {}
+        return out
 
 
 class TransportServer(Service):
@@ -72,6 +147,12 @@ class TransportServer(Service):
         self._token = token
         self._hello: Optional[Callable[[Dict], Dict]] = None
         self._shm_threshold = shm_threshold
+        # put-stream dedup state, keyed by (chan, stream id); survives the
+        # stream's connection so replays after a reconnect are applied at
+        # most once (bounded LRU: streams are few and long-lived)
+        self._streams: "collections.OrderedDict[Tuple[str, str], _StreamState]" = \
+            collections.OrderedDict()
+        self._streams_lock = threading.Lock()
         self._conns: list = []
         self._conn_lock = threading.Lock()
         # client-created SHM segments seen on requests, for the orphan
@@ -172,14 +253,19 @@ class TransportServer(Service):
     # -- connection loop ------------------------------------------------------
     def _serve(self, conn: socket.socket) -> None:
         pending_shm = None                 # reply segment awaiting its ack
+        ctx = _ConnContext()
+        # buffered reads: a pipelined producer's back-to-back frames are
+        # consumed per-buffer, not per-syscall
+        rfile = conn.makefile("rb")
         try:
             while not self._stop.is_set():
-                frame = recv_frame(conn)
+                frame = recv_frame(rfile)
                 if pending_shm is not None:
                     # the next frame (or EOF) is the client's implicit ack
                     pending_shm.close()
                     try:
                         pending_shm.unlink()
+                        self.metrics.inc("shm_segments_unlinked")
                     except FileNotFoundError:
                         pass
                     pending_shm = None
@@ -188,37 +274,82 @@ class TransportServer(Service):
                 header, body = frame
                 if header.get("shm"):      # request body arrived via SHM
                     self._note_client_shm(header["shm"])
+                    self.metrics.inc("shm_segments_attached")
                     body = shm_read(header["shm"], header["shm_size"])
                 self.metrics.inc("requests")
                 self.metrics.inc("rx_bytes", float(len(body)))
-                resp, resp_body = self._dispatch(header, body)
-                if (header.get("want_shm") and shared_memory is not None
-                        and len(resp_body) >= self._shm_threshold):
-                    pending_shm = shm_write(resp_body)
-                    resp = {**resp, "shm": pending_shm.name,
-                            "shm_size": len(resp_body)}
-                    resp_body = b""
+                resp, resp_body = self._dispatch(header, body, ctx)
+                if resp is None:           # cumulative-ack frame: no reply
+                    continue
+                if resp_body:
+                    # the ring (persistent, no per-message ack) wins over
+                    # per-message segments when the connection has one
+                    if (header.get("want_ring") and ctx.s2c is not None
+                            and ctx.s2c.push(resp_body, timeout=2.0)):
+                        self.metrics.inc("ring_records_out")
+                        self.metrics.inc("ring_bytes_out",
+                                         float(len(resp_body)))
+                        resp = {**resp, "ring_nbytes": len(resp_body)}
+                        resp_body = b""
+                    elif (header.get("want_shm")
+                            and shared_memory is not None
+                            and len(resp_body) >= self._shm_threshold):
+                        pending_shm = shm_write(resp_body)
+                        self.metrics.inc("shm_segments_created")
+                        resp = {**resp, "shm": pending_shm.name,
+                                "shm_size": len(resp_body)}
+                        resp_body = b""
                 self.metrics.inc(
                     "tx_bytes", float(send_frame(conn, resp, resp_body)))
-        except (OSError, ValueError):
+        except (OSError, ValueError, RingError):
             pass                           # peer vanished — their problem
         finally:
             if pending_shm is not None:
                 pending_shm.close()
                 try:
                     pending_shm.unlink()
+                    self.metrics.inc("shm_segments_unlinked")
                 except FileNotFoundError:
                     pass
-            try:
-                conn.close()
-            except OSError:
-                pass
+            # ring lifetime == connection lifetime: sweep this handler's
+            # rings (the creator's own unlink having won is fine)
+            for ring in ctx.rings():
+                ring.close()
+                ring.unlink()
+                self.metrics.inc("rings_swept")
+            for closer in (rfile.close, conn.close):
+                try:
+                    closer()
+                except OSError:
+                    pass
             with self._conn_lock:
                 if conn in self._conns:
                     self._conns.remove(conn)
 
+    # -- put-stream dedup state ----------------------------------------------
+    #: put-stream dedup states kept (LRU). Evicting a LIVE stream's state
+    #: forfeits its exactly-once guarantee on the next replay, so the
+    #: bound sits far above any real topology (streams ≈ 2 per worker)
+    #: and evictions are surfaced as a counter.
+    STREAM_STATE_LIMIT = 4096
+
+    def _stream_state(self, chan: str, stream: str, window: int = 32,
+                      ack_every: int = 1) -> _StreamState:
+        key = (chan, stream)
+        with self._streams_lock:
+            st = self._streams.get(key)
+            if st is None:
+                st = self._streams[key] = _StreamState(window, ack_every)
+            self._streams.move_to_end(key)
+            while len(self._streams) > self.STREAM_STATE_LIMIT:
+                self._streams.popitem(last=False)
+                self.metrics.inc("stream_states_evicted")
+            return st
+
     # -- request dispatch -----------------------------------------------------
-    def _dispatch(self, h: Dict, body: bytes) -> Tuple[Dict, bytes]:
+    def _dispatch(self, h: Dict, body: bytes,
+                  ctx: Optional[_ConnContext] = None) -> Tuple[Dict, bytes]:
+        ctx = ctx if ctx is not None else _ConnContext()
         try:
             m = h.get("m")
             if m == "chan.put":
@@ -233,12 +364,89 @@ class TransportServer(Service):
                 verdicts = [bool(v) for v in verdicts]
                 return {"ok": all(verdicts),
                         "verdicts": verdicts}, b""
+            if m == "ring.open":
+                # client-created rings for this connection; re-open on the
+                # same connection (shouldn't happen) replaces cleanly
+                if h.get("c2s"):
+                    if ctx.c2s is not None:
+                        ctx.c2s.close()
+                    ctx.c2s = ShmRing.attach(h["c2s"])
+                if h.get("s2c"):
+                    if ctx.s2c is not None:
+                        ctx.s2c.close()
+                    ctx.s2c = ShmRing.attach(h["s2c"])
+                self.metrics.inc("rings_opened")
+                return {"ok": True}, b""
+            if m == "stream.open":
+                if h["chan"] not in self._channels:
+                    return {"err": f"unknown channel {h['chan']!r}"}, b""
+                st = self._stream_state(h["chan"], h["stream"],
+                                        int(h.get("window", 32)),
+                                        int(h.get("ack_every", 1)))
+                if h.get("ring"):
+                    if ctx.c2s is not None:
+                        ctx.c2s.close()
+                    ctx.c2s = ShmRing.attach(h["ring"])
+                    self.metrics.inc("rings_opened")
+                return {"ok": True, "last_seq": st.last_seq}, b""
+            if m == "stream.flush":
+                st = self._stream_state(h["chan"], h["stream"])
+                with st.lock:
+                    return {"ok": True, "acks": st.drain_acks()}, b""
+            if m == "chan.put_stream":
+                # ring payloads are consumed UNCONDITIONALLY (records and
+                # frames must stay aligned), dedup decides application
+                if h.get("ring_nbytes") is not None:
+                    if ctx.c2s is None:
+                        return {"err": "put_stream ring frame without an "
+                                       "attached ring"}, b""
+                    body = ctx.c2s.pop(timeout=5.0)
+                    if body is None or len(body) != h["ring_nbytes"]:
+                        return {"err": "put ring record missing or "
+                                       "truncated"}, b""
+                    self.metrics.inc("ring_records_in")
+                    self.metrics.inc("ring_bytes_in", float(len(body)))
+                st = self._stream_state(h["chan"], h["stream"])
+                seq = int(h["seq"])
+                with st.lock:
+                    if seq <= st.last_seq:   # replayed, already applied
+                        self.metrics.inc("stream_dup_frames")
+                        acks = st.drain_acks()
+                        acks[str(seq)] = st.acks.get(seq, [])
+                        return {"ok": True, "dup": True, "acks": acks}, b""
+                    items = decode_pytree(body)
+                    chan = self._channels[h["chan"]]
+                    put_many = getattr(chan, "put_many", None)
+                    verdicts = (put_many(items) if put_many is not None
+                                else [chan.put(x) for x in items])
+                    verdicts = [bool(v) for v in verdicts]
+                    st.record(seq, verdicts)
+                    acks = (st.drain_acks()
+                            if len(st.pending_acks) >= st.ack_every
+                            else None)
+                self.metrics.inc("stream_frames")
+                self.metrics.inc("stream_items", float(len(verdicts)))
+                if acks is None:
+                    return None, b""          # cumulative: ack later
+                return {"ok": True, "acks": acks}, b""
             if m == "chan.pop":
                 got = self._channels[h["chan"]].pop_batch(
                     h["n"], timeout=h.get("timeout", 0.0))
                 if got is None:
                     return {"ok": False}, b""
                 return {"ok": True}, encode_pytree(got)
+            if m == "chan.pop_many":
+                chan = self._channels[h["chan"]]
+                pop_many = getattr(chan, "pop_many", None)
+                if pop_many is not None:
+                    got = pop_many(h["n"], timeout=h.get("timeout", 0.0))
+                else:
+                    got = chan.pop_batch(
+                        min(h["n"], max(len(chan), 1)),
+                        timeout=h.get("timeout", 0.0))
+                if got is None:
+                    return {"ok": False}, b""
+                return {"ok": True, "count": len(got)}, encode_pytree(got)
             if m == "chan.len":
                 return {"len": len(self._channels[h["chan"]])}, b""
             if m == "chan.stats":

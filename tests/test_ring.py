@@ -1,0 +1,194 @@
+"""ShmRing contract tests: SPSC ordering, wraparound, full-ring
+backpressure, torn-write/partial-commit invisibility + recovery, and the
+cross-process data path (ISSUE 5 satellite coverage)."""
+import multiprocessing
+
+import numpy as np
+import pytest
+
+from repro.runtime.transport.ring import (HEADER_SIZE, RECORD_HEADER,
+                                          RingError, ShmRing, shared_memory)
+
+pytestmark = pytest.mark.skipif(
+    shared_memory is None, reason="multiprocessing.shared_memory unavailable")
+
+
+@pytest.fixture()
+def ring():
+    r = ShmRing.create(1 << 12)
+    yield r
+    r.close()
+    r.unlink()
+
+
+def test_roundtrip_order_and_stats(ring):
+    payloads = [bytes([i]) * (i + 1) for i in range(10)]
+    for p in payloads:
+        assert ring.push(p, timeout=1.0)
+    assert len(ring) == 10
+    for p in payloads:
+        assert ring.pop(timeout=1.0) == p
+    s = ring.stats()
+    assert s["items_pushed"] == 10 and s["items_popped"] == 10
+    assert s["used_bytes"] == 0 and s["torn_discards"] == 0
+
+
+def test_empty_pop_times_out(ring):
+    assert ring.pop(timeout=0.05) is None
+
+
+def test_wraparound_many_sizes():
+    """Records of varying size cross the end-of-buffer boundary hundreds
+    of times; every payload survives byte-exact and in order."""
+    r = ShmRing.create(256)
+    try:
+        rng = np.random.default_rng(0)
+        for i in range(1000):
+            n = int(rng.integers(1, r.max_record() + 1))
+            payload = bytes([i % 251]) * n
+            assert r.push(payload, timeout=1.0)
+            assert r.pop(timeout=1.0) == payload, f"iteration {i}, n={n}"
+        # offsets are monotone: we really did lap the buffer many times
+        assert r.stats()["items_pushed"] == 1000
+    finally:
+        r.close()
+        r.unlink()
+
+
+def test_wraparound_with_queued_records():
+    """Several records in flight while the write position laps the read
+    position — the interleaving exercises the WRAP-marker path with a
+    non-empty queue."""
+    r = ShmRing.create(512)
+    try:
+        sent = popped = 0
+        expect = []
+        for i in range(300):
+            payload = bytes([i % 256]) * (17 + (i * 13) % 60)
+            assert r.push(payload, timeout=1.0)
+            expect.append(payload)
+            sent += 1
+            while len(r) > 3:                # drain with a bounded lag
+                got = r.pop(timeout=1.0)
+                assert got == expect[popped]
+                popped += 1
+        while popped < sent:
+            assert r.pop(timeout=1.0) == expect[popped]
+            popped += 1
+    finally:
+        r.close()
+        r.unlink()
+
+
+def test_full_ring_blocks_then_frees():
+    r = ShmRing.create(128)
+    try:
+        assert r.push(b"a" * 40, timeout=0.1)
+        assert r.push(b"b" * 40, timeout=0.1)
+        assert not r.push(b"c" * 40, timeout=0.05)   # full: verdict, no hang
+        assert r.pop(timeout=0.1) == b"a" * 40
+        assert r.push(b"c" * 40, timeout=0.5)        # space freed
+    finally:
+        r.close()
+        r.unlink()
+
+
+def test_oversized_record_raises():
+    r = ShmRing.create(256)
+    try:
+        with pytest.raises(RingError):
+            r.push(b"x" * (r.max_record() + 1), timeout=0.1)
+    finally:
+        r.close()
+        r.unlink()
+
+
+def test_torn_write_is_invisible_and_recoverable():
+    """A producer that died between reserve (write advanced) and commit:
+    the consumer NEVER sees the partial record, and recover() discards
+    the uncommitted tail so a successor producer can take over."""
+    r = ShmRing.create(1 << 10)
+    try:
+        assert r.push(b"committed", timeout=0.1)
+        view = r.reserve(64, timeout=0.1)        # reserve ...
+        view[:32] = b"q" * 32                    # ... copy HALF ...
+        view.release()                           # ... and die (no commit)
+        # the committed record is served; the torn one is invisible
+        consumer = ShmRing.attach(r.name)
+        assert consumer.pop(timeout=0.1) == b"committed"
+        assert consumer.pop(timeout=0.05) is None
+        # a successor producer recovers the ring before producing
+        successor = ShmRing.attach(r.name)
+        assert successor.recover() is True
+        assert successor.stats()["torn_discards"] == 1
+        assert successor.recover() is False      # idempotent
+        assert successor.push(b"after", timeout=0.5)
+        assert consumer.pop(timeout=0.5) == b"after"
+        consumer.close()
+        successor.close()
+    finally:
+        r.close()
+        r.unlink()
+
+
+def test_corrupt_record_raises_not_garbage():
+    r = ShmRing.create(512)
+    try:
+        assert r.push(b"x" * 24, timeout=0.1)
+        # stomp the record header's seq field
+        RECORD_HEADER.pack_into(r._shm.buf, HEADER_SIZE, 999, 24, 0)
+        with pytest.raises(RingError):
+            r.pop(timeout=0.1)
+    finally:
+        r.close()
+        r.unlink()
+
+
+def test_attach_bad_magic_raises():
+    seg = shared_memory.SharedMemory(create=True, size=HEADER_SIZE + 64)
+    try:
+        with pytest.raises(RingError):
+            ShmRing.attach(seg.name)
+    finally:
+        seg.close()
+        seg.unlink()
+
+
+def test_close_unblocks_waiters(ring):
+    import threading
+    out = []
+    t = threading.Thread(target=lambda: out.append(ring.pop(timeout=30.0)))
+    t.start()
+    import time
+    time.sleep(0.1)
+    ring.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and out == [None]
+
+
+def _child_producer(name, count):
+    r = ShmRing.attach(name)
+    for i in range(count):
+        payload = np.full(64 + i % 32, i % 256, np.uint8).tobytes()
+        if not r.push(payload, timeout=30.0):
+            raise SystemExit(2)
+    r.close()
+
+
+def test_cross_process_spsc():
+    """The real topology: producer in another (spawned) process, consumer
+    here — every record arrives intact and in order."""
+    r = ShmRing.create(1 << 12)
+    try:
+        count = 200
+        ctx = multiprocessing.get_context("spawn")
+        proc = ctx.Process(target=_child_producer, args=(r.name, count))
+        proc.start()
+        for i in range(count):
+            got = r.pop(timeout=60.0)
+            assert got == np.full(64 + i % 32, i % 256, np.uint8).tobytes()
+        proc.join(timeout=30.0)
+        assert proc.exitcode == 0
+    finally:
+        r.close()
+        r.unlink()
