@@ -236,8 +236,22 @@ class SupervisionConfig:
     backoff_factor: float = 2.0
     backoff_max_s: float = 2.0
     # connect-mode stall detector: a report gap beyond this is a failure
-    # (0 = auto: 10 heartbeats, floored at 2s)
+    # (0 = auto: liveness_heartbeats missed beats, floored at the floor)
     liveness_timeout_s: float = 0.0
+    liveness_heartbeats: float = 10.0
+    liveness_floor_s: float = 2.0
+    # -- elastic autoscaling (runtime/transport/supervision.ElasticPolicy)
+    # max_workers > 0 arms the autoscaler: the supervisor scales the
+    # fleet between min/max from the experience-queue depth fraction and
+    # the weight-staleness signal, draining (not killing) on scale-down
+    min_workers: int = 0
+    max_workers: int = 0
+    elastic_interval_s: float = 2.0
+    scale_up_depth: float = 0.25
+    scale_down_depth: float = 0.9
+    staleness_cap: float = 0.0        # published - oldest-acted version;
+                                      # 0 disables the staleness signal
+    drain_timeout_s: float = 10.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -277,6 +291,15 @@ class TransportConfig:
     # ring capacity per direction for kind="ring" (the persistent SHM
     # ring data plane; must hold several encoded flushes)
     ring_bytes: int = 8 << 20
+    # -- resilient control plane (runtime/transport/resilience) --------------
+    # journal_dir non-empty: hosted channel contents, stream dedup
+    # watermarks, and weight-store publishes are write-ahead journaled
+    # there (compacted once the log passes journal_compact_bytes);
+    # resume_journal: recover that directory's state at startup instead
+    # of requiring it empty — the --resume-journal replacement-server path
+    journal_dir: str = ""
+    journal_compact_bytes: int = 64 << 20
+    resume_journal: bool = False
     supervision: SupervisionConfig = dataclasses.field(
         default_factory=SupervisionConfig)
 

@@ -117,6 +117,12 @@ class FIFOReplayBuffer:
     def peek_depth(self) -> int:
         return len(self)
 
+    def peek_all(self) -> List[Any]:
+        """Non-destructive copy of the queued items, oldest first
+        (journal snapshot capture)."""
+        with self._lock:
+            return list(self._q)
+
 
 class RingReplayBuffer:
     """Uniform-sampling ring buffer (the paper's ``B_wm``)."""

@@ -92,7 +92,22 @@ def main() -> None:
                     help="pipeline rollout flushes through a PutStream "
                          "with W frames in flight (0 = one RPC per flush; "
                          "ring transport always streams)")
+    ap.add_argument("--journal-dir", default="", metavar="DIR",
+                    help="write-ahead journal the TransportServer's hosted "
+                         "state (channel contents, stream watermarks, "
+                         "weight publishes) into DIR so a replacement "
+                         "server can recover it")
+    ap.add_argument("--resume-journal", action="store_true",
+                    help="recover --journal-dir's state at startup (the "
+                         "replacement-server path after a crash) instead "
+                         "of requiring the directory to be fresh")
+    ap.add_argument("--elastic-workers", type=int, default=0, metavar="MAX",
+                    help="autoscale the remote worker fleet up to MAX "
+                         "slots from queue-depth/weight-staleness signals "
+                         "(0 = fixed fleet)")
     args = ap.parse_args()
+    if args.resume_journal and not args.journal_dir:
+        ap.error("--resume-journal needs --journal-dir")
 
     if args.remote_rollout or args.serve_workers:
         _run_remote_rollout(args)
@@ -177,8 +192,13 @@ def _run_remote_rollout(args) -> None:
             put_window=args.put_window,
             listen_addr=args.listen if args.serve_workers else "",
             token=args.token,
-            supervision=SupervisionConfig(restart=args.restart,
-                                          max_restarts=args.max_restarts)))
+            journal_dir=args.journal_dir,
+            resume_journal=args.resume_journal,
+            supervision=SupervisionConfig(
+                restart=args.restart,
+                max_restarts=args.max_restarts,
+                max_workers=args.elastic_workers,
+                min_workers=(1 if args.elastic_workers else 0))))
     system = AcceRLSystem(cfg, rl, rt, suite="spatial", segment_horizon=4,
                           max_episode_steps=12, batch_episodes=4)
     host, port = system.transport_server.address

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import random
 import sys
 import time
 from typing import Optional
@@ -53,7 +54,9 @@ def run(address: str, *, token: str = "", name: Optional[str] = None,
                 print(f"worker: no slot within {hello_timeout_s:.0f}s — "
                       f"giving up ({e})", file=sys.stderr)
                 return 2
-            time.sleep(retry_s)
+            # ±25% jitter: a fleet redialing a replaced server spreads
+            # its hellos instead of hammering the listener in lockstep
+            time.sleep(retry_s * (0.75 + 0.5 * random.random()))
     # the spec's address is as the SERVER sees itself; dial-side knows the
     # reachable one (NAT/0.0.0.0 binds), so the dialed address wins
     spec = dataclasses.replace(spec_from_wire(resp["spec"]), address=addr)

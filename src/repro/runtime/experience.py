@@ -109,6 +109,10 @@ class FifoChannel(ExperienceChannel):
     def drain(self) -> List[Any]:
         return self._buf.drain()
 
+    def peek_all(self) -> List[Any]:
+        """Non-destructive copy (journal snapshot capture)."""
+        return self._buf.peek_all()
+
     def __len__(self) -> int:
         return len(self._buf)
 

@@ -66,6 +66,7 @@ class AcceRLSystem:
         tcfg = rt.transport
         self.transport_server = None
         self.supervisor = None
+        self.journal = None
         self.remote_hosts: List = []
         n_remote = tcfg.remote_rollout_workers + tcfg.connect_rollout_workers
         if n_remote > 0:
@@ -76,14 +77,34 @@ class AcceRLSystem:
             host, port = tcfg.host, tcfg.port
             if tcfg.listen_addr:
                 host, port = parse_address(tcfg.listen_addr)
+            if tcfg.journal_dir:
+                # resilient control plane: wrap the experience channel so
+                # every accepted put / pop is write-ahead journaled, and
+                # journal weight publishes through the store hook — BEFORE
+                # the trainer and server capture channel references
+                from repro.runtime.transport import TransportJournal
+                self.journal = TransportJournal(
+                    tcfg.journal_dir,
+                    compact_bytes=tcfg.journal_compact_bytes,
+                    resume=tcfg.resume_journal)
+                self.journal.attach_store(self.store)
+                self.experience = self.journal.wrap("experience",
+                                                    self.experience)
             self.transport_server = self.registry.register(TransportServer(
                 host=host, port=port,
-                shm_threshold=tcfg.shm_threshold_bytes, token=tcfg.token))
+                shm_threshold=tcfg.shm_threshold_bytes, token=tcfg.token,
+                journal=self.journal))
             self.transport_server.add_channel("experience", self.experience)
             if self.frame_channel is not None:
                 self.transport_server.add_channel("frames",
                                                   self.frame_channel)
             self.transport_server.set_store(self.store)
+            if self.journal is not None and tcfg.resume_journal:
+                # adopt the previous incarnation's state before anything
+                # starts: channels refill, stream watermarks rebuild (so
+                # redialing producers replay exactly-once), the newest
+                # recovered weights republish
+                self.transport_server.resume_from_journal()
         self.inference = self.registry.register(
             InferenceService(cfg, self.store, rt, seed=seed))
         self.trainer = self.registry.register(
@@ -148,7 +169,65 @@ class AcceRLSystem:
                                  tcfg.remote_rollout_workers + i)
                 self.remote_hosts.append(self.registry.register(
                     self.supervisor.add_connected(
-                        spec, liveness_timeout_s=sup.liveness_timeout_s)))
+                        spec, liveness_timeout_s=sup.liveness_timeout_s,
+                        liveness_heartbeats=sup.liveness_heartbeats,
+                        liveness_floor_s=sup.liveness_floor_s)))
+            if sup.max_workers > 0:
+                self._enable_elastic(make_spec, n_remote)
+
+    # --------------------------------------------------------------- elastic
+    def _enable_elastic(self, make_spec, n_static: int) -> None:
+        """Arm the supervisor's autoscaler with signals derived from
+        state already on the bus: experience-queue depth fraction and
+        the weight-version lag of the slowest live worker (the
+        ``policy_version``/``weight_version`` gauges each report
+        bridges)."""
+        from repro.runtime.transport import ElasticPolicy
+        sup = self.rt.transport.supervision
+        tcfg = self.rt.transport
+        policy = ElasticPolicy(
+            min_workers=sup.min_workers,
+            max_workers=max(sup.max_workers, n_static),
+            interval_s=sup.elastic_interval_s,
+            scale_up_depth=sup.scale_up_depth,
+            scale_down_depth=sup.scale_down_depth,
+            staleness_cap=sup.staleness_cap,
+            drain_timeout_s=sup.drain_timeout_s)
+
+        def elastic_spec(seq: int):
+            return make_spec(f"elastic-rollout-{seq}", n_static + seq)
+
+        def elastic_signals() -> Dict[str, float]:
+            depth_frac = (len(self.experience)
+                          / max(self.rt.replay_capacity, 1))
+            published = self.store.version()
+            versions = []
+            for slot in self.supervisor.slots:
+                if slot.error is not None or slot.phase == "done":
+                    continue
+                g = slot.metrics.snapshot()["gauges"]
+                v = g.get("policy_version", g.get("weight_version"))
+                if v is not None:
+                    versions.append(float(v))
+            staleness = (published - min(versions)
+                         if versions and published >= 0 else 0.0)
+            return {"depth_frac": float(depth_frac),
+                    "staleness": float(max(staleness, 0.0))}
+
+        def register_slot(slot) -> None:
+            # NOT on the ServiceRegistry: this runs on the supervision
+            # thread mid-run and the registry dict is not thread-safe.
+            # remote_hosts is enough — metrics aggregation reads it, and
+            # supervisor.on_stop raises every slot's stop flag.
+            slot.start()
+            self.remote_hosts.append(slot)
+
+        self.supervisor.enable_elastic(
+            policy, elastic_spec, elastic_signals,
+            mode=("connect" if (tcfg.connect_rollout_workers
+                                and not tcfg.remote_rollout_workers)
+                  else "spawn"),
+            register=register_slot)
 
     # ------------------------------------------------------------- attachments
     def attach(self, attachment) -> "AcceRLSystem":

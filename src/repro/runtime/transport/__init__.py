@@ -19,8 +19,16 @@ crossing a process boundary; this package is the crossing:
   * :mod:`remote`  — ``worker_main`` + :class:`RemoteWorkerSpec`, the
     worker process body (one body, two lifecycles);
   * :mod:`supervision` — :class:`Supervisor` / :class:`SupervisedWorker`
-    / :class:`RestartPolicy` and the Spawned/Connected endpoints: worker
-    lifecycle decoupled from transport, with restart budgets.
+    / :class:`RestartPolicy` / :class:`ElasticPolicy` and the
+    Spawned/Connected endpoints: worker lifecycle decoupled from
+    transport, with restart budgets and elastic autoscaling;
+  * :mod:`resilience` — :class:`TransportJournal` /
+    :class:`JournaledChannel` / :func:`recover`: write-ahead journal +
+    compacting snapshots for the server's hosted state, so a replacement
+    server (``--resume-journal``) survives a SIGKILL with exactly-once
+    stream replay; plus the stale-SHM sweep;
+  * :mod:`faults`  — :class:`FaultPlan`, env-gated deterministic fault
+    injection (never imported unless ``REPRO_FAULTS`` is set).
 """
 from repro.runtime.transport.codec import (  # noqa: F401
     CodecError,
@@ -45,8 +53,16 @@ from repro.runtime.transport.remote import (  # noqa: F401
     spec_to_wire,
     worker_main,
 )
+from repro.runtime.transport.resilience import (  # noqa: F401
+    JournaledChannel,
+    RecoveredState,
+    TransportJournal,
+    recover,
+    sweep_stale_shm,
+)
 from repro.runtime.transport.supervision import (  # noqa: F401
     ConnectedEndpoint,
+    ElasticPolicy,
     RestartPolicy,
     SpawnedEndpoint,
     SupervisedWorker,

@@ -43,6 +43,7 @@ from __future__ import annotations
 import binascii
 import collections
 import os
+import random
 import socket
 import threading
 import time
@@ -59,7 +60,21 @@ try:
 except ImportError:  # pragma: no cover — stdlib on every target platform
     shared_memory = None
 
+# import-gated fault injection (see transport.faults): inert — not even
+# imported — unless REPRO_FAULTS is set
+if os.environ.get("REPRO_FAULTS"):
+    from repro.runtime.transport.faults import fault_point as _fault
+else:
+    _fault = None
+
 POLL_S = 0.5          # per-RPC slice of a long pop/acquire wait
+
+
+def _jittered(delay: float) -> float:
+    """±25% jitter on a backoff delay: N workers redialing a replaced
+    server spread their attempts instead of thundering-herd the listener
+    in exponential lockstep."""
+    return delay * (0.75 + 0.5 * random.random())
 
 __all__ = ["TransportError", "ChannelClosed", "WireClient", "long_poll",
            "PutStream", "SocketChannel", "ShmChannel", "ShmRingChannel",
@@ -82,10 +97,21 @@ class ChannelClosed(TransportError):
 
 
 def shm_write(data: bytes) -> "shared_memory.SharedMemory":
-    """Create a shared-memory segment holding ``data`` (caller unlinks)."""
+    """Create a shared-memory segment holding ``data`` (caller unlinks).
+
+    Segments carry the ``acrl<pid>x…`` naming scheme so a later server
+    incarnation can sweep any that a SIGKILLed creator leaked
+    (:func:`repro.runtime.transport.resilience.sweep_stale_shm`)."""
     if shared_memory is None:
         raise TransportError("shared memory unavailable on this platform")
-    shm = shared_memory.SharedMemory(create=True, size=max(len(data), 1))
+    from repro.runtime.transport.resilience import shm_name
+    while True:
+        try:
+            shm = shared_memory.SharedMemory(name=shm_name(), create=True,
+                                             size=max(len(data), 1))
+            break
+        except FileExistsError:            # 32-bit token collision
+            continue
     shm.buf[:len(data)] = data
     return shm
 
@@ -198,7 +224,7 @@ class WireClient:
         """One backoff-then-reconnect try (caller holds the lock)."""
         delay = min(self._reconnect_backoff_s * (2 ** (attempt - 1)),
                     self._reconnect_backoff_max_s)
-        time.sleep(delay)
+        time.sleep(_jittered(delay))
         if self.closed:
             return False
         try:
@@ -238,6 +264,8 @@ class WireClient:
                     if attempt and (self.closed or not self._redial(attempt)):
                         break
                     try:
+                        if _fault is not None:
+                            _fault("client.request")
                         send_frame(self._sock, header, body)
                         resp = recv_frame(self._sock)
                         if resp is None:   # clean EOF: peer closed on us
@@ -458,6 +486,8 @@ class PutStream:
         references it goes out; socket mode carries ``payload`` bytes as
         the frame body. Frames are appended to the coalescing buffer —
         :meth:`_maybe_flush_sendbuf` / :meth:`_flush_sendbuf` ship it."""
+        if _fault is not None:
+            _fault("client.stream_send")
         header = {"m": "chan.put_stream", "chan": self.chan,
                   "stream": self.stream_id, "seq": seq, "count": count}
         if self._ring is not None:
@@ -660,9 +690,9 @@ class PutStream:
         window in order (receiver thread only). The server dedups by
         seq, so already-applied frames are re-acked, not re-applied."""
         for attempt in range(1, self._reconnect_attempts + 1):
-            time.sleep(min(
+            time.sleep(_jittered(min(
                 self._reconnect_backoff_s * (2 ** (attempt - 1)),
-                self._reconnect_backoff_max_s))
+                self._reconnect_backoff_max_s)))
             with self._cv:
                 if self.closed:
                     return False

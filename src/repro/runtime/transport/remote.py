@@ -26,6 +26,7 @@ report *reply* tells a superseded incarnation to stop.
 from __future__ import annotations
 
 import dataclasses
+import random
 import sys
 import time
 from typing import Dict, List, Optional, Tuple
@@ -242,7 +243,10 @@ def worker_main(spec: RemoteWorkerSpec) -> int:
             if not got["report"]["health"]["healthy"]:
                 exit_code = 3               # parent saw the report; die loud
                 break
-            time.sleep(spec.heartbeat_s)
+            # ±25% jitter: N workers' heartbeats (and their redials after
+            # a server replacement) decorrelate instead of arriving as
+            # one synchronized burst per period
+            time.sleep(spec.heartbeat_s * (0.75 + 0.5 * random.random()))
     finally:
         for s in reversed(services):
             s.stop()

@@ -1,0 +1,737 @@
+"""Resilient control plane: journaled TransportServer state + recovery.
+
+PRs 3-5 made *workers* disposable (restart budgets, redial-to-rejoin,
+exactly-once stream replay), but the parent ``TransportServer`` remained
+a single point of failure: its death lost every hosted channel, the
+weight store, and all per-stream dedup watermarks. This module removes
+that: a write-ahead **journal** records every state mutation the server
+hosts, periodic **compacting snapshots** bound replay time, and a
+replacement server (``--resume-journal``) recovers to the last committed
+record — so an in-flight :class:`~repro.runtime.transport.channel.PutStream`
+window replays exactly-once across a server *death*, not just a
+connection drop.
+
+File format (``<dir>/log-<gen>.bin`` + ``snap-<gen>.bin``, both starting
+with the 8-byte magic)::
+
+    record := u32 payload_len | u32 crc32(payload) | payload
+    payload := u32 header_len | header_json | body
+
+``header_json`` carries ``{"op": ..., ...}``; ``body`` is an opaque codec
+blob. Appends **group-commit**: records accumulate in a pending buffer
+and are written — one ``write(2)`` for the whole batch — at every commit
+point: before any wire reply or cumulative stream ack leaves the server,
+after a journaled pop hands items to a local consumer, on weight
+publishes, and on an idle-tick timer. Between commit points nothing
+external depends on a buffered record, so a crash loses only frames
+whose ack never left — which the producer replays. The page cache is
+the durability domain: it survives a SIGKILLed *process*, which is the
+failure this journal defends — machine-level durability would need
+``fsync`` per commit and is deliberately out of scope (snapshots DO
+fsync). A torn final record (crc or length mismatch) marks the end of
+the committed prefix and is discarded on recovery.
+
+Journaled operations and their replay semantics:
+
+  ============  ===========================================================
+  ``chan_meta``  declares a channel's capacity + backpressure policy so
+                 replay can emulate evictions
+  ``put``        the ACCEPTED items of one flush (rejected items never
+                 enter the journal); replay appends and applies
+                 ``drop_oldest`` eviction at capacity. A streamed flush
+                 FUSES its dedup watermark into the same record
+                 (``stream``/``seq``/``verdicts`` header keys): one
+                 append per frame, and items + watermark are atomic by
+                 construction — a crash can never recover the items
+                 without the watermark that dedups their replay
+  ``pop``        ``n`` items left the front of the channel
+  ``stream``     a put-stream dedup watermark ``(chan, stream, seq)``
+                 + its verdicts alone (streamed frames into channels the
+                 journal does not wrap) — replay keeps the max seq
+                 (idempotent)
+  ``stream_snap``  a full stream-state capture (snapshot compaction)
+  ``publish``    a weight-store publish: version + encoded params blob
+                 — replay keeps the newest version (idempotent)
+  ``snap_end``   snapshot validity marker (a snapshot without one is an
+                 interrupted compaction and is ignored)
+  ============  ===========================================================
+
+**Write ordering.** Every mutation is *apply-then-append* under a
+per-channel wrapper lock (:class:`JournaledChannel`), so the journal
+never claims an op the in-memory state has not performed. The one
+crash window this leaves — applied but not yet journaled, then SIGKILL —
+is healed by the data path itself: the producer never received an ack
+for that frame, so it replays it to the replacement server, whose
+recovered watermark does not cover it, and it is applied exactly once.
+Wire pops are at-most-once across a server death (a reply lost after the
+journal append loses that batch — equivalent to a channel drop, which
+experience data tolerates by design).
+
+**Compaction.** ``compact()`` takes every channel wrapper lock (sorted
+order — the global lock order is ``stream lock < channel wrapper lock <
+journal lock``), rotates to a fresh log generation, captures channel
+contents while still holding the locks (so no put/pop can straddle the
+rotation), then captures stream/store state *after* the rotation —
+those records are idempotent, so one landing in the soon-deleted old log
+is covered by the later capture. The snapshot is written to a temp file,
+fsynced, renamed, and only then are older generations deleted — a crash
+at any point leaves a recoverable chain (``snap-g`` + ``log-g`` +
+``log-g+1``…).
+
+Also here: the ``acrl<pid>x<token>`` SHM naming scheme and
+:func:`sweep_stale_shm`, which a starting server runs to unlink segments
+and rings leaked by a SIGKILLed previous incarnation (only names whose
+creator pid is dead are touched, so concurrent runs on one host are
+safe).
+"""
+from __future__ import annotations
+
+import binascii
+import dataclasses
+import json
+import os
+import pathlib
+import re
+import struct
+import threading
+import time
+import zlib
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+from repro.runtime.transport.codec import decode_pytree, encode_pytree
+
+__all__ = ["JOURNAL_MAGIC", "TransportJournal", "JournaledChannel",
+           "RecoveredState", "read_records", "recover", "shm_name",
+           "sweep_stale_shm", "SHM_NAME_PREFIX"]
+
+JOURNAL_MAGIC = b"ACRLJRN1"
+_REC = struct.Struct("<II")                    # payload_len, crc32
+_HLEN = struct.Struct("<I")                    # header_json length
+_GEN_RE = re.compile(r"^(log|snap)-(\d{8})\.bin$")
+
+#: hard ceiling on one record (a flush blob is ~MBs at most; a length
+#: beyond this is corruption, not data)
+MAX_RECORD = 1 << 31
+
+
+# ---------------------------------------------------------------------------
+# SHM hygiene: nameable segments + the stale sweep
+# ---------------------------------------------------------------------------
+
+SHM_NAME_PREFIX = "acrl"
+
+
+def shm_name() -> str:
+    """A segment name that encodes its creator pid (``acrl<pidhex>x<tok>``)
+    so :func:`sweep_stale_shm` can tell live segments from leaks."""
+    return (f"{SHM_NAME_PREFIX}{os.getpid():x}x"
+            f"{binascii.hexlify(os.urandom(4)).decode()}")
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:            # exists, owned by someone else
+        return True
+    except OSError:
+        return True
+    return True
+
+
+def sweep_stale_shm() -> int:
+    """Unlink ``acrl``-named SHM segments whose creator pid is dead — the
+    rings and payload segments a SIGKILLed previous server (or worker)
+    incarnation leaked. Linux-only (``/dev/shm``); a no-op elsewhere.
+    Returns the number of segments removed."""
+    base = pathlib.Path("/dev/shm")
+    if not base.is_dir():
+        return 0
+    swept = 0
+    for p in base.glob(SHM_NAME_PREFIX + "*"):
+        pid_hex, sep, _ = p.name[len(SHM_NAME_PREFIX):].partition("x")
+        if not sep:
+            continue
+        try:
+            pid = int(pid_hex, 16)
+        except ValueError:
+            continue
+        if pid <= 0 or _pid_alive(pid):
+            continue
+        try:
+            p.unlink()
+            swept += 1
+        except OSError:
+            pass
+    return swept
+
+
+# ---------------------------------------------------------------------------
+# record framing
+# ---------------------------------------------------------------------------
+
+def _record_bytes(op: str, header: Optional[Dict] = None,
+                  body: bytes = b"") -> bytes:
+    hdr = dict(header or ())
+    hdr["op"] = op
+    hjson = json.dumps(hdr, separators=(",", ":")).encode()
+    payload = b"".join((_HLEN.pack(len(hjson)), hjson, body))
+    return _REC.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+def read_records(path: pathlib.Path
+                 ) -> Tuple[List[Tuple[Dict, bytes]], bool, int]:
+    """Parse one journal/snapshot file. Returns ``(records, torn,
+    valid_bytes)`` — ``torn`` is True iff the file ends in a partial or
+    corrupt record; ``valid_bytes`` is the length of the committed prefix
+    (magic included), i.e. where an append may safely continue."""
+    data = path.read_bytes()
+    if len(data) < len(JOURNAL_MAGIC) or not data.startswith(JOURNAL_MAGIC):
+        return [], bool(data), 0
+    records: List[Tuple[Dict, bytes]] = []
+    off = len(JOURNAL_MAGIC)
+    while off < len(data):
+        if off + _REC.size > len(data):
+            return records, True, off
+        plen, crc = _REC.unpack_from(data, off)
+        start, end = off + _REC.size, off + _REC.size + plen
+        if plen < _HLEN.size or plen > MAX_RECORD or end > len(data):
+            return records, True, off
+        payload = data[start:end]
+        if zlib.crc32(payload) != crc:
+            return records, True, off
+        hlen, = _HLEN.unpack_from(payload, 0)
+        if _HLEN.size + hlen > plen:
+            return records, True, off
+        try:
+            hdr = json.loads(payload[_HLEN.size:_HLEN.size + hlen])
+        except ValueError:
+            return records, True, off
+        records.append((hdr, bytes(payload[_HLEN.size + hlen:])))
+        off = end
+    return records, False, off
+
+
+# ---------------------------------------------------------------------------
+# the journal
+# ---------------------------------------------------------------------------
+
+def _scan_generations(directory: pathlib.Path) -> Dict[str, List[int]]:
+    gens: Dict[str, List[int]] = {"log": [], "snap": []}
+    if directory.is_dir():
+        for p in directory.iterdir():
+            m = _GEN_RE.match(p.name)
+            if m:
+                gens[m.group(1)].append(int(m.group(2)))
+    gens["log"].sort()
+    gens["snap"].sort()
+    return gens
+
+
+class TransportJournal:
+    """Sequenced append log + compacting snapshots for hosted state.
+
+    Thread-safe: appends serialize on an internal lock; channel mutations
+    additionally serialize apply-then-append on their
+    :class:`JournaledChannel` wrapper lock. ``resume=True`` continues an
+    existing directory (truncating a torn tail before appending);
+    ``resume=False`` on a non-empty journal directory raises rather than
+    silently shadowing recoverable state."""
+
+    def __init__(self, directory, *, compact_bytes: int = 64 << 20,
+                 resume: bool = False):
+        self.directory = pathlib.Path(directory)
+        self.directory.mkdir(parents=True, exist_ok=True)
+        self.compact_bytes = int(compact_bytes)
+        self._lock = threading.Lock()
+        self._compact_lock = threading.Lock()
+        self._pub_lock = threading.Lock()
+        self._channels: Dict[str, "JournaledChannel"] = {}
+        self._last_publish: Optional[Tuple[int, bytes]] = None
+        self._pending = bytearray()
+        self.records_appended = 0
+        self.flushes = 0
+        self.compactions = 0
+        self.torn_truncated = 0
+        self.closed = False
+        gens = _scan_generations(self.directory)
+        existing = gens["log"] or gens["snap"]
+        if existing and not resume:
+            raise ValueError(
+                f"journal directory {self.directory} already holds "
+                f"state (gen {max(gens['log'] + gens['snap'])}); pass "
+                f"resume=True (--resume-journal) to continue it, or "
+                f"point journal_dir at a fresh directory")
+        self.gen = max(gens["log"] + gens["snap"], default=0)
+        self._file: Optional[Any] = None
+        self._log_bytes = 0
+        self._open_log(self.gen, fresh=not existing)
+
+    # -- file plumbing --------------------------------------------------------
+    def _log_path(self, gen: int) -> pathlib.Path:
+        return self.directory / f"log-{gen:08d}.bin"
+
+    def _snap_path(self, gen: int) -> pathlib.Path:
+        return self.directory / f"snap-{gen:08d}.bin"
+
+    def _open_log(self, gen: int, *, fresh: bool) -> None:
+        """Open ``log-<gen>`` for appending (caller holds ``_lock`` or is
+        ``__init__``). An existing log is truncated to its committed
+        prefix first — appending after a torn tail would hide every
+        record that follows it from recovery."""
+        path = self._log_path(gen)
+        if not fresh and path.exists():
+            _, torn, keep = read_records(path)
+            if torn:
+                with path.open("r+b") as f:
+                    f.truncate(keep)
+                self.torn_truncated += 1
+            f = path.open("ab", buffering=0)
+            if keep == 0:                  # empty/garbage file: re-magic
+                f.write(JOURNAL_MAGIC)
+            self._log_bytes = max(keep, len(JOURNAL_MAGIC))
+        else:
+            f = path.open("wb", buffering=0)
+            f.write(JOURNAL_MAGIC)
+            self._log_bytes = len(JOURNAL_MAGIC)
+        self._file = f
+
+    #: a pending buffer past this size is flushed inline by ``append``
+    #: (bounds group-commit memory under a burst with no ack boundary)
+    FLUSH_BYTES = 1 << 20
+
+    # -- append path ----------------------------------------------------------
+    def append(self, op: str, header: Optional[Dict] = None,
+               body: bytes = b"") -> None:
+        """Append one record to the pending group-commit buffer.
+
+        Records hit the file (page cache — the durability domain, see
+        module docstring) at the next :meth:`flush`, which callers issue
+        at every COMMIT POINT: before a wire reply or stream ack leaves
+        the server, and after a journaled pop hands items to a local
+        consumer. Between commit points nothing external depends on the
+        buffered records — a crash loses only frames whose ack never
+        left (the producer replays them) — so a windowed-ack stream
+        pays one ``write(2)`` per ack batch, not per frame."""
+        rec = _record_bytes(op, header, body)
+        with self._lock:
+            if self._file is None:
+                return                     # closed — shutdown race, drop
+            self._pending += rec
+            self._log_bytes += len(rec)
+            self.records_appended += 1
+            if len(self._pending) >= self.FLUSH_BYTES:
+                self._flush_locked()
+
+    def _flush_locked(self) -> None:
+        if self._pending and self._file is not None:
+            self._file.write(self._pending)
+            self._pending = bytearray()
+            self.flushes += 1
+
+    def flush(self) -> None:
+        """Write the pending buffer: the group-commit boundary."""
+        with self._lock:
+            self._flush_locked()
+
+    def note_publish(self, params: Any, version: int) -> None:
+        """Journal a weight-store publish (the store's ``on_publish``
+        hook): the encoded blob is both the journal body and the cached
+        newest-version state a snapshot captures."""
+        blob = encode_pytree(params)
+        with self._pub_lock:
+            cur = self._last_publish
+            if cur is None or version >= cur[0]:
+                self._last_publish = (int(version), blob)
+        self.append("publish", {"version": int(version)}, blob)
+        self.flush()                       # publishes are rare commit points
+
+    def attach_store(self, store) -> None:
+        """Install :meth:`note_publish` as ``store.on_publish``."""
+        store.on_publish = self.note_publish
+
+    # -- channel registration -------------------------------------------------
+    def wrap(self, name: str, inner) -> "JournaledChannel":
+        """Wrap ``inner`` (a FIFO-style channel) so every accepted put
+        and every pop is journaled under ``name``."""
+        chan = JournaledChannel(inner, self, name)
+        self._channels[name] = chan
+        return chan
+
+    # -- size / compaction ----------------------------------------------------
+    @property
+    def log_bytes(self) -> int:
+        with self._lock:
+            return self._log_bytes
+
+    def should_compact(self) -> bool:
+        return not self.closed and self.log_bytes >= self.compact_bytes
+
+    def compact(self, extra_records_fn: Optional[
+            Callable[[], Iterable[Tuple[str, Dict, bytes]]]] = None) -> int:
+        """Rotate the log and write a snapshot of current state (channel
+        contents under their wrapper locks; stream/store records from
+        ``extra_records_fn``, captured post-rotation — idempotent, see
+        module docstring). Returns the new generation."""
+        with self._compact_lock:
+            chans = sorted(self._channels.items())
+            for _, c in chans:
+                c.journal_lock.acquire()
+            try:
+                with self._lock:
+                    if self._file is None:
+                        return self.gen
+                    self._flush_locked()
+                    self.gen += 1
+                    gen = self.gen
+                    self._file.close()
+                    self._open_log(gen, fresh=True)
+                records: List[Tuple[str, Dict, bytes]] = []
+                for name, c in chans:
+                    records.append(("chan_meta",
+                                    {"chan": name, "capacity": c.capacity,
+                                     "policy": c.policy}, b""))
+                    items = c.peek_all()
+                    if items:
+                        records.append(("put",
+                                        {"chan": name, "count": len(items)},
+                                        encode_pytree(items)))
+            finally:
+                for _, c in chans:
+                    c.journal_lock.release()
+            if extra_records_fn is not None:
+                records.extend(extra_records_fn())
+            with self._pub_lock:
+                lp = self._last_publish
+            if lp is not None:
+                records.append(("publish", {"version": lp[0]}, lp[1]))
+            tmp = self._snap_path(gen).with_suffix(".tmp")
+            with tmp.open("wb") as f:
+                f.write(JOURNAL_MAGIC)
+                for op, hdr, body in records:
+                    f.write(_record_bytes(op, hdr, body))
+                f.write(_record_bytes("snap_end", {}))
+                f.flush()
+                os.fsync(f.fileno())
+            tmp.rename(self._snap_path(gen))
+            # only after the rename is the old chain redundant
+            for p in list(self.directory.iterdir()):
+                m = _GEN_RE.match(p.name)
+                if m and int(m.group(2)) < gen:
+                    try:
+                        p.unlink()
+                    except OSError:
+                        pass
+            self.compactions += 1
+            return gen
+
+    def stats(self) -> Dict[str, float]:
+        return {"journal_gen": float(self.gen),
+                "journal_log_bytes": float(self.log_bytes),
+                "journal_records": float(self.records_appended),
+                "journal_flushes": float(self.flushes),
+                "journal_compactions": float(self.compactions),
+                "journal_torn_truncated": float(self.torn_truncated)}
+
+    def close(self) -> None:
+        with self._lock:
+            self.closed = True
+            if self._file is not None:
+                self._flush_locked()
+                self._file.close()
+                self._file = None
+
+
+# ---------------------------------------------------------------------------
+# the journaled channel wrapper
+# ---------------------------------------------------------------------------
+
+class JournaledChannel:
+    """Wraps a FIFO-style channel so {mutate, journal} is atomic.
+
+    Blocking surface ops (``pop_batch``/``pop_many`` with a timeout) are
+    re-expressed as polling loops of non-blocking inner ops, so the
+    wrapper lock is never held across a wait — a blocked consumer can
+    never deadlock a producer (or a compaction) out of the lock.
+
+    The ``block`` backpressure policy is rejected at wrap time: its puts
+    park *inside* the inner buffer waiting for pops, which cannot be made
+    atomic with the journal append without serializing producers against
+    consumers. The journaled channels this PR targets (the experience
+    plane) default to ``drop_oldest``.
+    """
+
+    #: poll granularity for the blocking pop surface
+    POLL_S = 0.002
+
+    def __init__(self, inner, journal: TransportJournal, name: str):
+        if getattr(inner, "policy", None) == "block":
+            raise ValueError(
+                "JournaledChannel does not support the 'block' "
+                "backpressure policy (its puts wait inside the buffer; "
+                "journal atomicity would serialize producers against "
+                "consumers) — use drop_oldest/drop_newest")
+        if not hasattr(inner, "peek_all"):
+            raise TypeError(f"{type(inner).__name__} has no peek_all(); "
+                            f"snapshots need a non-destructive capture")
+        self.inner = inner
+        self.journal = journal
+        self.name = name
+        # RLock: compact() holds it while calling peek_all()
+        self.journal_lock = threading.RLock()
+        journal.append("chan_meta", {"chan": name,
+                                     "capacity": self.capacity,
+                                     "policy": self.policy})
+
+    # -- metadata delegation --------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(getattr(self.inner, "capacity", 0))
+
+    @property
+    def policy(self) -> str:
+        return str(getattr(self.inner, "policy", "drop_oldest"))
+
+    @property
+    def total_pushed(self) -> int:
+        return int(getattr(self.inner, "total_pushed", 0))
+
+    @property
+    def total_dropped(self) -> int:
+        return int(getattr(self.inner, "total_dropped", 0))
+
+    # -- producer surface -----------------------------------------------------
+    def put(self, item: Any) -> bool:
+        return self.put_many([item])[0]
+
+    def put_many(self, items: List[Any], *,
+                 encoded: Optional[bytes] = None,
+                 stream_meta: Optional[Dict] = None) -> List[bool]:
+        """Apply-then-append under the wrapper lock. ``encoded`` is the
+        already-encoded blob of ``items`` when the caller has one (the
+        server's put path received it on the wire) — reused verbatim iff
+        every item was accepted, so the streaming hot path never pays a
+        second encode. ``stream_meta`` (``{"stream", "seq", "window",
+        "ack_every"}``) fuses the flush's dedup watermark into the SAME
+        record — one append per streamed frame, and a recovered server
+        can never hold the items without the watermark that dedups
+        their replay (the verdicts are filled in here)."""
+        items = list(items)
+        if not items:
+            return []
+        with self.journal_lock:
+            verdicts = [bool(v) for v in self.inner.put_many(items)]
+            accepted = [it for it, v in zip(items, verdicts) if v]
+            if accepted or stream_meta is not None:
+                hdr = {"chan": self.name, "count": len(accepted)}
+                if stream_meta is not None:
+                    hdr.update(stream_meta)
+                    hdr["verdicts"] = verdicts
+                blob = b"" if not accepted else (
+                    encoded if encoded is not None and all(verdicts)
+                    else encode_pytree(accepted))
+                self.journal.append("put", hdr, blob)
+        return verdicts
+
+    def put_many_encoded(self, items: List[Any], body: bytes,
+                         stream_meta: Optional[Dict] = None) -> List[bool]:
+        """The server dispatch's entry: items + their wire encoding."""
+        return self.put_many(items, encoded=body, stream_meta=stream_meta)
+
+    # -- consumer surface -----------------------------------------------------
+    def _journaled_take(self, take: Callable[[], Optional[List[Any]]],
+                        timeout: Optional[float]) -> Optional[List[Any]]:
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        while True:
+            with self.journal_lock:
+                got = take()
+                if got:
+                    self.journal.append("pop", {"chan": self.name,
+                                                "n": len(got)})
+                    # handing items to a local consumer is a commit
+                    # point: flush so a crash cannot resurrect them
+                    # (pops are coalesced, so this write is rare)
+                    self.journal.flush()
+                    return got
+            if deadline is not None and time.monotonic() >= deadline:
+                return None
+            time.sleep(self.POLL_S)
+
+    def pop_batch(self, n: int, timeout: Optional[float] = None
+                  ) -> Optional[List[Any]]:
+        return self._journaled_take(
+            lambda: self.inner.pop_batch(n, timeout=0), timeout)
+
+    def pop_many(self, max_items: int, timeout: Optional[float] = None
+                 ) -> Optional[List[Any]]:
+        return self._journaled_take(
+            lambda: self.inner.pop_many(max_items, timeout=0), timeout)
+
+    def drain(self) -> List[Any]:
+        with self.journal_lock:
+            got = self.inner.drain()
+            if got:
+                self.journal.append("pop", {"chan": self.name,
+                                            "n": len(got)})
+                self.journal.flush()
+            return got
+
+    # -- snapshot/restore -----------------------------------------------------
+    def peek_all(self) -> List[Any]:
+        with self.journal_lock:
+            return self.inner.peek_all()
+
+    def restore(self, items: List[Any]) -> int:
+        """Refill the inner channel WITHOUT journaling: the items came
+        *from* the journal, so they are already represented in the chain
+        recovery replays."""
+        accepted = 0
+        for item in items:
+            accepted += bool(self.inner.put(item))
+        return accepted
+
+    # -- passthrough ----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.inner)
+
+    def stats(self) -> Dict[str, float]:
+        out = dict(self.inner.stats())
+        out["journaled"] = 1.0
+        return out
+
+
+# ---------------------------------------------------------------------------
+# recovery
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RecoveredState:
+    """What a journal chain replays to: channel contents, stream dedup
+    watermarks, and the newest weight-store version."""
+
+    channels: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    streams: Dict[Tuple[str, str], Dict] = dataclasses.field(
+        default_factory=dict)
+    store: Optional[Tuple[int, bytes]] = None
+    base_gen: int = 0
+    records: int = 0
+    torn_tail: bool = False
+    puts: int = 0
+    pops: int = 0
+    items_in: int = 0
+    items_out: int = 0
+
+    def channel_items(self, name: str) -> List[Any]:
+        return self.channels.get(name, {}).get("items", [])
+
+    def store_params(self) -> Optional[Tuple[Any, int]]:
+        if self.store is None:
+            return None
+        version, blob = self.store
+        return decode_pytree(blob, copy=True), version
+
+
+def _chan_entry(state: RecoveredState, name: str) -> Dict:
+    return state.channels.setdefault(
+        name, {"capacity": 0, "policy": "drop_oldest", "items": []})
+
+
+def _stream_entry(state: RecoveredState, chan: str, stream: str) -> Dict:
+    return state.streams.setdefault(
+        (chan, stream), {"last_seq": -1, "acks": {}, "window": 32,
+                         "ack_every": 1})
+
+
+def _apply_stream_hdr(state: RecoveredState, hdr: Dict) -> None:
+    """Fold one watermark header (a ``stream`` record, or the fused keys
+    of a streamed ``put``) into the stream state — idempotent, max-seq."""
+    s = _stream_entry(state, hdr["chan"], hdr["stream"])
+    s["window"] = int(hdr.get("window", s["window"]))
+    s["ack_every"] = int(hdr.get("ack_every", s["ack_every"]))
+    seq = int(hdr["seq"])
+    if seq > s["last_seq"]:
+        s["last_seq"] = seq
+    s["acks"][seq] = [bool(v) for v in hdr.get("verdicts", ())]
+    keep = max(4 * s["window"], 64)
+    while len(s["acks"]) > keep:
+        del s["acks"][min(s["acks"])]
+
+
+def _apply_record(state: RecoveredState, hdr: Dict, body: bytes) -> None:
+    op = hdr.get("op")
+    if op == "chan_meta":
+        e = _chan_entry(state, hdr["chan"])
+        e["capacity"] = int(hdr.get("capacity", 0))
+        e["policy"] = str(hdr.get("policy", "drop_oldest"))
+    elif op == "put":
+        e = _chan_entry(state, hdr["chan"])
+        if body:
+            items = decode_pytree(body, copy=True)
+            e["items"].extend(items)
+            state.puts += 1
+            state.items_in += len(items)
+            cap = e["capacity"]
+            if (cap and e["policy"] == "drop_oldest"
+                    and len(e["items"]) > cap):
+                del e["items"][:len(e["items"]) - cap]
+        if "stream" in hdr:                # fused watermark (one record
+            _apply_stream_hdr(state, hdr)  # per streamed frame)
+    elif op == "pop":
+        e = _chan_entry(state, hdr["chan"])
+        n = int(hdr["n"])
+        del e["items"][:n]
+        state.pops += 1
+        state.items_out += n
+    elif op == "stream":
+        _apply_stream_hdr(state, hdr)
+    elif op == "stream_snap":
+        s = _stream_entry(state, hdr["chan"], hdr["stream"])
+        s["window"] = int(hdr.get("window", s["window"]))
+        s["ack_every"] = int(hdr.get("ack_every", s["ack_every"]))
+        seq = int(hdr.get("seq", -1))
+        if seq > s["last_seq"]:
+            s["last_seq"] = seq
+        for k, v in hdr.get("acks", {}).items():
+            s["acks"][int(k)] = [bool(x) for x in v]
+        keep = max(4 * s["window"], 64)
+        while len(s["acks"]) > keep:
+            del s["acks"][min(s["acks"])]
+    elif op == "publish":
+        version = int(hdr["version"])
+        if state.store is None or version >= state.store[0]:
+            state.store = (version, body)
+    elif op == "snap_end":
+        pass
+    state.records += 1
+
+
+def recover(directory) -> RecoveredState:
+    """Replay the newest valid snapshot + every log generation from it
+    on: the state a replacement server resumes with. A torn final log
+    record ends the committed prefix (flagged in ``torn_tail``); an
+    interrupted (marker-less) snapshot is skipped in favor of the
+    previous chain, whose logs are only deleted after a snapshot rename.
+    """
+    directory = pathlib.Path(directory)
+    state = RecoveredState()
+    gens = _scan_generations(directory)
+    base = 0
+    for g in reversed(gens["snap"]):
+        records, torn, _ = read_records(directory / f"snap-{g:08d}.bin")
+        if torn or not records or records[-1][0].get("op") != "snap_end":
+            continue                       # interrupted compaction
+        for hdr, body in records:
+            _apply_record(state, hdr, body)
+        base = g
+        break
+    state.base_gen = base
+    for g in gens["log"]:
+        if g < base:
+            continue
+        records, torn, _ = read_records(directory / f"log-{g:08d}.bin")
+        for hdr, body in records:
+            _apply_record(state, hdr, body)
+        state.torn_tail = state.torn_tail or torn
+    return state

@@ -43,6 +43,7 @@ the same process (tests, benchmarks).
 """
 from __future__ import annotations
 
+import os
 import struct
 import time
 from typing import Dict, Optional
@@ -77,6 +78,16 @@ class RingError(RuntimeError):
     """Structural ring failure: bad magic, oversized record, corruption."""
 
 
+# import-gated fault injection (see transport.faults): inert — not even
+# imported — unless REPRO_FAULTS is set. The gate sits below RingError
+# because faults.py imports it from this (then partially-initialized)
+# module.
+if os.environ.get("REPRO_FAULTS"):
+    from repro.runtime.transport.faults import fault_point as _fault
+else:
+    _fault = None
+
+
 def _pad8(n: int) -> int:
     return (n + 7) & ~7
 
@@ -103,8 +114,21 @@ class ShmRing:
             raise RingError("shared memory unavailable on this platform")
         capacity = max(_pad8(capacity), 4 * RECORD_HEADER.size)
         capacity = (capacity + 15) & ~15               # multiple of 16
-        shm = shared_memory.SharedMemory(
-            create=True, size=HEADER_SIZE + capacity, name=name)
+        if name is None:
+            # default to the sweepable acrl<pid>x… scheme so a later
+            # server incarnation can reclaim rings a SIGKILL leaked
+            from repro.runtime.transport.resilience import shm_name
+            while True:
+                try:
+                    shm = shared_memory.SharedMemory(
+                        create=True, size=HEADER_SIZE + capacity,
+                        name=shm_name())
+                    break
+                except FileExistsError:    # 32-bit token collision
+                    continue
+        else:
+            shm = shared_memory.SharedMemory(
+                create=True, size=HEADER_SIZE + capacity, name=name)
         shm.buf[:HEADER_SIZE] = bytes(HEADER_SIZE)     # zero all offsets
         shm.buf[:8] = MAGIC
         _U64.pack_into(shm.buf, _OFF_CAPACITY, capacity)
@@ -183,6 +207,10 @@ class ShmRing:
 
     def commit(self) -> None:
         """Publish the record reserved by the last :meth:`reserve`."""
+        if _fault is not None:
+            # firing here (InjectedTorn) leaves the reservation
+            # uncommitted — exactly the torn write recover() discards
+            _fault("ring.commit")
         self._set(_OFF_ITEMS_COMMITTED,
                   self._get(_OFF_ITEMS_COMMITTED) + 1)
         self._set(_OFF_COMMIT, self._reserved_end)

@@ -63,6 +63,7 @@ just in the benchmark.
 from __future__ import annotations
 
 import collections
+import os
 import socket
 import threading
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -71,7 +72,17 @@ from repro.runtime.service import Service
 from repro.runtime.transport.channel import shared_memory, shm_read, shm_write
 from repro.runtime.transport.codec import (decode_pytree, encode_pytree,
                                            recv_frame, send_frame)
+from repro.runtime.transport.resilience import (TransportJournal, recover,
+                                                sweep_stale_shm)
 from repro.runtime.transport.ring import RingError, ShmRing
+
+# fault injection is gated on the IMPORT, not just the call: with
+# REPRO_FAULTS unset the faults module never loads and every fault site
+# is one `is None` check (inertness is tested, not assumed)
+if os.environ.get("REPRO_FAULTS"):
+    from repro.runtime.transport.faults import fault_point as _fault
+else:
+    _fault = None
 
 __all__ = ["TransportServer"]
 
@@ -99,9 +110,10 @@ class _StreamState:
     """
 
     __slots__ = ("last_seq", "acks", "keep", "lock", "ack_every",
-                 "pending_acks")
+                 "pending_acks", "window")
 
     def __init__(self, window: int, ack_every: int = 1):
+        self.window = window
         self.last_seq = -1
         self.acks: "collections.OrderedDict[int, List[bool]]" = \
             collections.OrderedDict()
@@ -139,10 +151,13 @@ class TransportServer(Service):
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
                  shm_threshold: int = 1 << 16, name: str = "transport",
-                 token: str = ""):
+                 token: str = "", journal: Optional[TransportJournal] = None):
         super().__init__(name, role="transport")
         self._channels: Dict[str, Any] = {}
         self._store = None
+        # resilience journal: stream watermarks are appended on the put
+        # path; compaction runs on the accept loop's idle tick
+        self._journal = journal
         self._sinks: Dict[str, Any] = {}          # worker name -> host
         self._token = token
         self._hello: Optional[Callable[[Dict], Dict]] = None
@@ -189,10 +204,23 @@ class TransportServer(Service):
 
     # -- service surface ------------------------------------------------------
     def _run(self) -> None:
+        # a SIGKILLed previous incarnation cannot run its own finally
+        # blocks — sweep its leaked rings/segments before serving (names
+        # encode the creator pid; only dead-creator segments are touched)
+        swept = sweep_stale_shm()
+        if swept:
+            self.metrics.inc("shm_stale_swept", float(swept))
         while not self._stop.is_set():
             try:
                 conn, _ = self._listener.accept()
             except socket.timeout:
+                if self._journal is not None:
+                    # idle tick: bound how long group-commit records from
+                    # purely local producers can sit in the buffer
+                    self._journal.flush()
+                    if self._journal.should_compact():
+                        self._journal.compact(self._stream_records)
+                        self.metrics.inc("journal_compactions")
                 continue
             except OSError:            # listener closed during shutdown
                 break
@@ -221,6 +249,14 @@ class TransportServer(Service):
             except OSError:
                 pass
         self._sweep_orphan_shm()
+        if self._journal is not None:
+            # final snapshot so a later --resume-journal replays one
+            # compact file instead of the whole log
+            try:
+                self._journal.compact(self._stream_records)
+            except OSError:
+                pass
+            self._journal.close()
 
     def _note_client_shm(self, name: str) -> None:
         with self._client_shm_lock:
@@ -271,6 +307,8 @@ class TransportServer(Service):
                     pending_shm = None
                 if frame is None:
                     break
+                if _fault is not None:
+                    _fault("server.frame")
                 header, body = frame
                 if header.get("shm"):      # request body arrived via SHM
                     self._note_client_shm(header["shm"])
@@ -299,6 +337,11 @@ class TransportServer(Service):
                         resp = {**resp, "shm": pending_shm.name,
                                 "shm_size": len(resp_body)}
                         resp_body = b""
+                if self._journal is not None:
+                    # group-commit boundary: every journaled record this
+                    # reply (or stream-ack batch) depends on must be in
+                    # the page cache before the peer can see the reply
+                    self._journal.flush()
                 self.metrics.inc(
                     "tx_bytes", float(send_frame(conn, resp, resp_body)))
         except (OSError, ValueError, RingError):
@@ -358,10 +401,8 @@ class TransportServer(Service):
             if m == "chan.put_many":
                 items = decode_pytree(body)
                 chan = self._channels[h["chan"]]
-                put_many = getattr(chan, "put_many", None)
-                verdicts = (put_many(items) if put_many is not None
-                            else [chan.put(x) for x in items])
-                verdicts = [bool(v) for v in verdicts]
+                verdicts = [bool(v) for v in
+                            self._apply_put(chan, items, body)]
                 return {"ok": all(verdicts),
                         "verdicts": verdicts}, b""
             if m == "ring.open":
@@ -414,13 +455,34 @@ class TransportServer(Service):
                         acks = st.drain_acks()
                         acks[str(seq)] = st.acks.get(seq, [])
                         return {"ok": True, "dup": True, "acks": acks}, b""
+                    if _fault is not None:
+                        _fault("server.stream_apply")
                     items = decode_pytree(body)
                     chan = self._channels[h["chan"]]
-                    put_many = getattr(chan, "put_many", None)
-                    verdicts = (put_many(items) if put_many is not None
-                                else [chan.put(x) for x in items])
-                    verdicts = [bool(v) for v in verdicts]
+                    # a journaled channel fuses the dedup watermark into
+                    # the flush's own record (ONE append per frame; items
+                    # + watermark atomic by construction); an unwrapped
+                    # channel gets a standalone watermark append INSIDE
+                    # st.lock, after the apply. Either way the remaining
+                    # crash window — applied, not acked — heals on the
+                    # data path: the producer replays the un-acked frame
+                    # and the recovered watermark dedups it exactly-once
+                    meta = (None if self._journal is None else
+                            {"stream": h["stream"], "seq": seq,
+                             "window": st.window,
+                             "ack_every": st.ack_every})
+                    fused = (meta is not None
+                             and hasattr(chan, "put_many_encoded"))
+                    verdicts = [bool(v) for v in (
+                        chan.put_many_encoded(items, body, stream_meta=meta)
+                        if fused else self._apply_put(chan, items, body))]
                     st.record(seq, verdicts)
+                    if meta is not None and not fused:
+                        self._journal.append(
+                            "stream", dict(meta, chan=h["chan"],
+                                           verdicts=verdicts))
+                    if _fault is not None:
+                        _fault("server.stream_applied")
                     acks = (st.drain_acks()
                             if len(st.pending_acks) >= st.ack_every
                             else None)
@@ -492,11 +554,93 @@ class TransportServer(Service):
                 stop = (stop_for(incarnation) if stop_for is not None
                         else host.stop_requested)
                 return {"stop": bool(stop)}, b""
+            if m == "server.stats":
+                # counters snapshot + journal state: the chaos harness
+                # asserts monotonicity across a server replacement
+                snap = self.metrics.snapshot()
+                stats = dict(snap.get("counters", {}))
+                stats.update(snap.get("gauges", {}))
+                if self._journal is not None:
+                    stats.update(self._journal.stats())
+                return {"ok": True, "stats": stats}, b""
             if m == "ping":
                 return {"ok": True}, b""
             return {"err": f"unknown method {m!r}"}, b""
         except Exception as e:  # noqa: BLE001 — fault goes back to the caller
             return {"err": f"{type(e).__name__}: {e}"}, b""
+
+    @staticmethod
+    def _apply_put(chan: Any, items: List[Any], body: bytes) -> List[Any]:
+        """Route a decoded flush into ``chan``, handing a journaled
+        channel the wire encoding too so it never re-encodes."""
+        pme = getattr(chan, "put_many_encoded", None)
+        if pme is not None:
+            return pme(items, body)
+        put_many = getattr(chan, "put_many", None)
+        if put_many is not None:
+            return put_many(items)
+        return [chan.put(x) for x in items]
+
+    # -- resilience: journal capture + recovery -------------------------------
+    def _stream_records(self) -> List[Tuple[str, Dict, bytes]]:
+        """Snapshot every stream's dedup state (compaction capture; safe
+        to run post-rotation — watermarks are idempotent on replay)."""
+        with self._streams_lock:
+            states = list(self._streams.items())
+        records: List[Tuple[str, Dict, bytes]] = []
+        for (chan, stream), st in states:
+            with st.lock:
+                records.append((
+                    "stream_snap",
+                    {"chan": chan, "stream": stream, "seq": st.last_seq,
+                     "acks": {str(k): v for k, v in st.acks.items()},
+                     "window": st.window, "ack_every": st.ack_every}, b""))
+        return records
+
+    def resume_from_journal(self):
+        """Adopt the journal directory's recovered state: refill hosted
+        channels (without re-journaling — the items are already in the
+        chain this journal continues), rebuild stream dedup watermarks so
+        replayed in-flight windows dedup exactly-once, and republish the
+        newest recovered weights. Call after ``add_channel``/``set_store``
+        and before ``start()``. Returns the
+        :class:`~repro.runtime.transport.resilience.RecoveredState`."""
+        if self._journal is None:
+            raise RuntimeError("resume_from_journal needs a journal")
+        state = recover(self._journal.directory)
+        restored_items = 0
+        for name, chan in self._channels.items():
+            items = state.channel_items(name)
+            if not items:
+                continue
+            restore = getattr(chan, "restore", None)
+            if restore is not None:
+                restored_items += restore(items)
+            else:
+                restored_items += sum(bool(chan.put(x)) for x in items)
+        for (cname, sid), s in state.streams.items():
+            st = self._stream_state(cname, sid, s["window"], s["ack_every"])
+            with st.lock:
+                if s["last_seq"] > st.last_seq:
+                    st.last_seq = s["last_seq"]
+                for k in sorted(s["acks"]):
+                    st.acks[k] = s["acks"][k]
+        sp = state.store_params()
+        if sp is not None and self._store is not None:
+            params, version = sp
+            if version > self._store.version():
+                # re-publish through the store so acquirers see it AND
+                # the attached on_publish hook re-journals it
+                self._store.publish(params, version)
+        self.metrics.inc("journal_recovered_items", float(restored_items))
+        self.metrics.inc("journal_recovered_streams",
+                         float(len(state.streams)))
+        if state.torn_tail:
+            self.metrics.inc("journal_torn_tail")
+        # immediate compaction: the recovered state becomes one snapshot,
+        # so the next crash replays it instead of the whole dead chain
+        self._journal.compact(self._stream_records)
+        return state
 
     def _weights_blob(self, payload: Any, version: int) -> bytes:
         with self._cache_lock:

@@ -98,6 +98,10 @@ class VersionedWeightStore:
         self._draining = False
         self.publishes = 0
         self.last_sync_latency_s = 0.0
+        # optional observer called AFTER each publish commits (outside the
+        # cv, so a slow observer never blocks acquirers) with
+        # ``(params, version)`` — the transport journal hangs off this
+        self.on_publish = None
 
     # -- trainer side --------------------------------------------------------
     def begin_publish(self) -> None:
@@ -115,6 +119,9 @@ class VersionedWeightStore:
             self.publishes += 1
             self.last_sync_latency_s = time.monotonic() - t0
             self._cv.notify_all()
+        hook = self.on_publish
+        if hook is not None:
+            hook(params, version)
 
     # -- inference side ------------------------------------------------------
     @property

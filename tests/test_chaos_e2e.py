@@ -1,0 +1,200 @@
+"""Chaos e2e (ISSUE 6 acceptance): SIGKILL the TransportServer process
+mid-PutStream, bring up a replacement on the same port with the journal
+resumed, and prove the recovery invariants end to end:
+
+  * exactly-once experience delivery — no lost AND no duplicated items
+    across the server death (the in-flight window replays, the recovered
+    watermark dedups);
+  * the producer redials the replacement transparently (within its
+    reconnect budget) and keeps streaming;
+  * weight consumers re-acquire the correct latest published version
+    from the recovered store, and publishes continue past it;
+  * ``server.stats`` on the replacement shows the recovery happened
+    (recovered item/stream counts, a compacted journal generation).
+
+The kill is DETERMINISTIC, not wall-clock timed: the server child runs
+under ``REPRO_FAULTS=kill@server.stream_applied:nth=K``, so it SIGKILLs
+itself immediately after applying+journaling the K-th stream frame but
+BEFORE acking it — the exact crash window the journal's apply-then-append
+ordering defends (see resilience.py). The replacement child starts with
+the env gate off, proving the fault layer is also scoped per-process.
+
+Runs real subprocesses; CI executes this file in the dedicated
+``chaos-smoke`` job under a hard SIGKILL timeout, not in tier 1.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.runtime.transport import (PutStream, SocketChannel,
+                                     WeightStoreTransport, WireClient)
+
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+
+# child body: a journaled TransportServer hosting one channel + the
+# weight store; prints READY <port> once serving, runs until killed (or
+# until stdin closes, so a failing parent never leaks it)
+_SERVER_PROG = """
+import sys
+from repro.runtime.experience import FifoChannel
+from repro.runtime.transport.resilience import TransportJournal
+from repro.runtime.transport.server import TransportServer
+from repro.runtime.weight_store import VersionedWeightStore
+
+jdir, port, resume = sys.argv[1], int(sys.argv[2]), sys.argv[3] == "resume"
+journal = TransportJournal(jdir, compact_bytes=1 << 30, resume=resume)
+store = VersionedWeightStore()
+journal.attach_store(store)
+chan = journal.wrap("exp", FifoChannel(1 << 17))
+srv = TransportServer(port=port, journal=journal)
+srv.add_channel("exp", chan)
+srv.set_store(store)
+if resume:
+    srv.resume_from_journal()
+srv.start()
+print("READY", srv.address[1], flush=True)
+sys.stdin.read()
+srv.stop()
+srv.join()
+"""
+
+
+def _spawn_server(jdir, port, resume, faults=None):
+    env = {k: v for k, v in os.environ.items() if k != "REPRO_FAULTS"}
+    env["PYTHONPATH"] = _SRC
+    if faults:
+        env["REPRO_FAULTS"] = faults
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _SERVER_PROG, str(jdir), str(port),
+         "resume" if resume else "fresh"],
+        env=env, stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE, text=True)
+    line = proc.stdout.readline()
+    if not line.startswith("READY"):
+        proc.kill()
+        raise AssertionError(
+            f"server child never came up: {line!r} / {proc.stderr.read()}")
+    return proc, int(line.split()[1])
+
+
+def _item(i):
+    return {"i": np.int32(i), "x": np.full(64, float(i), np.float32)}
+
+
+def _reap(proc):
+    if proc.poll() is None:
+        proc.kill()
+    proc.wait(timeout=10.0)
+
+
+def test_server_sigkill_midstream_exactly_once_recovery(tmp_path):
+    jdir = tmp_path / "journal"
+    total, flush = 200, 4
+    kill_at = 13                       # SIGKILL after frame 13 is applied
+                                       # + journal-buffered but NOT yet
+                                       # group-committed or acked
+    server_a, port = _spawn_server(
+        jdir, 0, resume=False,
+        faults=f"kill@server.stream_applied:nth={kill_at}")
+    addr = ("127.0.0.1", port)
+    replacement = []
+
+    def replace_when_dead():
+        server_a.wait()
+        replacement.append(_spawn_server(jdir, port, resume=True)[0])
+
+    watcher = threading.Thread(target=replace_when_dead, daemon=True)
+    watcher.start()
+    stream = SocketChannel = None      # for finally-cleanup clarity
+    try:
+        weights = WeightStoreTransport(addr, reconnect_attempts=400,
+                                       reconnect_backoff_s=0.05)
+        weights.publish({"w": np.arange(8, dtype=np.float32)}, 1)
+        got = weights.acquire(newer_than=-1, timeout=5.0)
+        assert got is not None and got[1] == 1
+
+        stream = PutStream(addr, "exp", window=4, stream_id="chaos",
+                           reconnect_attempts=400,
+                           reconnect_backoff_s=0.05)
+        for base in range(0, total, flush):
+            stream.put_many([_item(base + j) for j in range(flush)])
+        assert stream.flush(120.0), stream.stats()
+        st = stream.stats()
+        assert st["items_acked"] == total
+        assert stream.reconnects >= 1, \
+            "the producer never had to redial — the server did not die?"
+        watcher.join(timeout=30.0)
+        assert replacement, "no replacement server came up"
+        assert server_a.returncode == -9, \
+            f"server A should die by SIGKILL, got {server_a.returncode}"
+
+        # -- zero experience loss, zero duplication --------------------------
+        from repro.runtime.transport import SocketChannel as _SC
+        pop = _SC(addr, "exp")
+        ids = []
+        deadline = time.monotonic() + 60.0
+        while len(ids) < total and time.monotonic() < deadline:
+            got = pop.pop_many(total, timeout=1.0)
+            if got:
+                ids.extend(int(g["i"]) for g in got)
+        assert sorted(ids) == list(range(total)), (
+            f"exactly-once violated across server death: {len(ids)} items, "
+            f"{len(ids) - len(set(ids))} dup(s)")
+
+        # -- recovery + monotone accounting on the replacement ---------------
+        ctl = WireClient(addr)
+        resp, _ = ctl.request({"m": "server.stats"})
+        stats = resp["stats"]
+        # server A group-commits each frame's journal record with its ack
+        # reply (window=4 -> ack_every=1). The kill fires after frame
+        # `kill_at` was applied and BUFFERED but before its ack flushed
+        # it, so exactly the first kill_at-1 frames are in the committed
+        # journal — frame kill_at itself is the crash window the data
+        # path heals: never acked, so the producer replayed it to the
+        # replacement, which applied it fresh (no dup, no loss, as the
+        # pop sweep above proved). Compaction bumped the generation.
+        committed = kill_at - 1
+        assert stats["journal_recovered_items"] == float(committed * flush)
+        assert stats["journal_recovered_streams"] == 1.0
+        assert stats["journal_gen"] >= 1.0
+        assert stats["stream_items"] == float(total - committed * flush)
+        ctl.close()
+
+        # -- weight consumers re-acquire the recovered latest version --------
+        got = weights.acquire(newer_than=-1, timeout=10.0)
+        assert got is not None and got[1] == 1, \
+            "replacement must serve the recovered publish"
+        np.testing.assert_array_equal(got[0]["w"],
+                                      np.arange(8, dtype=np.float32))
+        weights.publish({"w": np.arange(8, dtype=np.float32) * 3}, 2)
+        got = weights.acquire(newer_than=1, timeout=10.0)
+        assert got is not None and got[1] == 2
+        pop.close()
+        weights.close()
+        if stream is not None:
+            stream.close()
+    finally:
+        _reap(server_a)
+        for proc in replacement:
+            _reap(proc)
+
+
+def test_replacement_without_resume_flag_refuses_loudly(tmp_path):
+    """Operator-error guard, end to end: pointing a FRESH server at a
+    journal directory that already holds recoverable state must fail the
+    process with the actionable error, not silently shadow the state."""
+    jdir = tmp_path / "journal"
+    server_a, port = _spawn_server(jdir, 0, resume=False)
+    _reap(server_a)
+    env = {k: v for k, v in os.environ.items() if k != "REPRO_FAULTS"}
+    env["PYTHONPATH"] = _SRC
+    proc = subprocess.run(
+        [sys.executable, "-c", _SERVER_PROG, str(jdir), str(port), "fresh"],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode != 0
+    assert "resume" in proc.stderr, proc.stderr

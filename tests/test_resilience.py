@@ -1,0 +1,665 @@
+"""Resilient control plane (ISSUE 6): the TransportServer journal.
+
+The property-style core: ANY prefix of the journal (including a torn
+final record, and including a snapshot + log-suffix chain after a
+mid-sequence compaction) recovers a state whose channel contents, stream
+watermarks, and store version match a reference that never crashed.
+Around it: JournaledChannel atomicity semantics, resume/torn-tail
+truncation, the stale-SHM sweep, FaultPlan parsing/triggers plus the
+import-gated inertness guarantee, and the elastic-supervision state
+machine (scale-up, cooldown, drain-then-retire scale-down)."""
+import os
+import pathlib
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import RLConfig, RuntimeConfig
+from repro.runtime.experience import FifoChannel, RingChannel
+from repro.runtime.transport import (PutStream, RemoteWorkerSpec,
+                                     RestartPolicy, Supervisor,
+                                     TransportJournal, TransportServer,
+                                     WireClient, recover, sweep_stale_shm)
+from repro.runtime.transport.codec import encode_pytree
+from repro.runtime.transport.resilience import (JOURNAL_MAGIC,
+                                                JournaledChannel,
+                                                read_records, shm_name)
+from repro.runtime.transport.supervision import (ElasticPolicy,
+                                                 SupervisedWorker,
+                                                 WorkerEndpoint)
+from repro.runtime.weight_store import VersionedWeightStore
+
+
+def _item(i):
+    return {"i": np.int32(i)}
+
+
+def _ids(items):
+    return [int(x["i"]) for x in items]
+
+
+def _record_offsets(path):
+    """Byte offsets of every record boundary in a journal file (the
+    positions a crash could truncate to and still leave a valid file)."""
+    data = path.read_bytes()
+    offsets = [len(JOURNAL_MAGIC)]
+    records, torn, valid = read_records(path)
+    assert not torn
+    off = len(JOURNAL_MAGIC)
+    import struct
+    while off < valid:
+        plen, = struct.unpack_from("<I", data, off)
+        off += 8 + plen
+        offsets.append(off)
+    assert off == valid
+    return offsets
+
+
+# ---------------------------------------------------------------------------
+# the property: any committed prefix recovers the reference state
+# ---------------------------------------------------------------------------
+
+def _drive_reference(journal, chan, rng, n_ops, state, expected):
+    """Apply ``n_ops`` seeded ops through the journaled channel (plus
+    direct stream/publish appends), mirroring each op on the plain-python
+    reference ``state`` and snapshotting it after every appended record."""
+    for _ in range(n_ops):
+        op = rng.choice(["put", "put", "put", "pop", "stream", "publish"])
+        if op == "put":
+            k = rng.randint(1, 4)
+            items = [_item(state["next"] + j) for j in range(k)]
+            state["next"] += k
+            assert chan.put_many(items) == [True] * k
+            state["items"].extend(_ids(items))
+            del state["items"][:max(0, len(state["items"]) - chan.capacity)]
+        elif op == "pop":
+            n = rng.randint(1, 3)
+            got = chan.pop_batch(n, timeout=0)
+            if got is None:
+                continue               # nothing journaled, no snapshot
+            assert _ids(got) == state["items"][:len(got)]
+            del state["items"][:len(got)]
+        elif op == "stream":
+            state["seq"] += 1
+            journal.append("stream", {"chan": "exp", "stream": "s0",
+                                      "seq": state["seq"],
+                                      "verdicts": [True], "window": 8,
+                                      "ack_every": 1})
+        else:
+            state["version"] += 1
+            journal.note_publish({"w": np.float32(state["version"])},
+                                 state["version"])
+        expected.append({"items": list(state["items"]),
+                         "seq": state["seq"],
+                         "version": state["version"]})
+
+
+def _assert_matches(got, want):
+    assert _ids(got.channel_items("exp")) == want["items"]
+    if want["seq"] >= 0:
+        assert got.streams[("exp", "s0")]["last_seq"] == want["seq"]
+    else:
+        assert ("exp", "s0") not in got.streams
+    if want["version"] > 0:
+        assert got.store[0] == want["version"]
+    else:
+        assert got.store is None
+
+
+def test_any_journal_prefix_recovers_reference_state(tmp_path):
+    import random
+    rng = random.Random(7)
+    d = tmp_path / "j"
+    journal = TransportJournal(d, compact_bytes=1 << 30)
+    chan = journal.wrap("exp", FifoChannel(8, policy="drop_oldest"))
+    state = {"items": [], "next": 0, "seq": -1, "version": 0}
+    # expected[k] = reference state after the (k+1)-th NON-META record;
+    # the chan_meta record wrap() appended is prefix offset 1
+    expected = [{"items": [], "seq": -1, "version": 0}]
+    _drive_reference(journal, chan, rng, 60, state, expected)
+    journal.close()
+
+    log = d / "log-00000000.bin"
+    offsets = _record_offsets(log)
+    assert len(offsets) == len(expected) + 1   # +1: the chan_meta record
+    raw = log.read_bytes()
+    pdir = tmp_path / "prefix"
+    pdir.mkdir()
+    plog = pdir / "log-00000000.bin"
+    for k in range(1, len(offsets)):           # every committed prefix
+        plog.write_bytes(raw[:offsets[k]])
+        _assert_matches(recover(pdir), expected[k - 1])
+    # the full journal equals the live channel the reference never lost
+    full = recover(d)
+    assert _ids(full.channel_items("exp")) == _ids(chan.peek_all())
+    assert not full.torn_tail
+
+    # torn final record: every proper truncation INSIDE the last record
+    # recovers exactly the previous committed state, flagged torn
+    for cut in (1, 7, offsets[-1] - offsets[-2] - 1):
+        plog.write_bytes(raw[:offsets[-2] + cut])
+        got = recover(pdir)
+        assert got.torn_tail
+        _assert_matches(got, expected[-2])
+
+
+def test_snapshot_plus_log_suffix_prefixes_recover(tmp_path):
+    """The same property across a mid-sequence compaction: snapshot +
+    any prefix of the post-rotation log recovers the reference."""
+    import random
+    rng = random.Random(11)
+    d = tmp_path / "j"
+    journal = TransportJournal(d, compact_bytes=1 << 30)
+    chan = journal.wrap("exp", FifoChannel(8, policy="drop_oldest"))
+    state = {"items": [], "next": 0, "seq": -1, "version": 0}
+    expected = [{"items": [], "seq": -1, "version": 0}]
+    _drive_reference(journal, chan, rng, 30, state, expected)
+    gen = journal.compact(lambda: [
+        ("stream_snap", {"chan": "exp", "stream": "s0",
+                         "seq": state["seq"], "acks": {}, "window": 8,
+                         "ack_every": 1}, b"")])
+    base = dict(expected[-1])                  # state the snapshot holds
+    expected = [base]
+    _drive_reference(journal, chan, rng, 30, state, expected)
+    journal.close()
+
+    assert not (d / "log-00000000.bin").exists()   # old chain deleted
+    log = d / f"log-{gen:08d}.bin"
+    offsets = _record_offsets(log)
+    raw = log.read_bytes()
+    pdir = tmp_path / "prefix"
+    pdir.mkdir()
+    (pdir / f"snap-{gen:08d}.bin").write_bytes(
+        (d / f"snap-{gen:08d}.bin").read_bytes())
+    plog = pdir / f"log-{gen:08d}.bin"
+    for k in range(len(offsets)):
+        plog.write_bytes(raw[:offsets[k]])
+        got = recover(pdir)
+        assert got.base_gen == gen
+        _assert_matches(got, expected[min(k, len(expected) - 1)])
+
+
+def test_interrupted_snapshot_is_skipped(tmp_path):
+    """A marker-less (or torn) snapshot is an interrupted compaction:
+    recovery must fall back to the previous chain, which compaction only
+    deletes AFTER the snapshot rename."""
+    d = tmp_path / "j"
+    journal = TransportJournal(d)
+    chan = journal.wrap("exp", FifoChannel(16))
+    chan.put_many([_item(i) for i in range(5)])
+    journal.close()
+    # forge an interrupted snapshot at a newer generation: valid records
+    # but no snap_end marker (and a torn variant)
+    from repro.runtime.transport.resilience import _record_bytes
+    bogus = JOURNAL_MAGIC + _record_bytes(
+        "put", {"chan": "exp", "count": 1}, encode_pytree([_item(99)]))
+    (d / "snap-00000007.bin").write_bytes(bogus)
+    got = recover(d)
+    assert got.base_gen == 0
+    assert _ids(got.channel_items("exp")) == list(range(5))
+    (d / "snap-00000008.bin").write_bytes(bogus[:len(bogus) - 3])  # torn
+    got = recover(d)
+    assert _ids(got.channel_items("exp")) == list(range(5))
+
+
+# ---------------------------------------------------------------------------
+# journal lifecycle: resume, torn-tail truncation, compaction hygiene
+# ---------------------------------------------------------------------------
+
+def test_fresh_journal_refuses_nonempty_dir(tmp_path):
+    d = tmp_path / "j"
+    TransportJournal(d).close()
+    with pytest.raises(ValueError, match="resume"):
+        TransportJournal(d)
+    TransportJournal(d, resume=True).close()   # the sanctioned path
+
+
+def test_resume_truncates_torn_tail_then_continues(tmp_path):
+    d = tmp_path / "j"
+    journal = TransportJournal(d)
+    chan = journal.wrap("exp", FifoChannel(64))
+    chan.put_many([_item(i) for i in range(4)])
+    journal.close()
+    log = d / "log-00000000.bin"
+    with log.open("ab") as f:                  # a half-written record
+        f.write(b"\x40\x00\x00\x00\xde\xad")
+    j2 = TransportJournal(d, resume=True)
+    assert j2.torn_truncated == 1
+    chan2 = j2.wrap("exp", FifoChannel(64))
+    chan2.put_many([_item(i) for i in range(4, 7)])
+    j2.close()
+    got = recover(d)
+    assert _ids(got.channel_items("exp")) == list(range(7))
+    assert not got.torn_tail                   # the tear was healed
+
+
+def test_compaction_bounds_the_chain_and_keeps_newest_publish(tmp_path):
+    d = tmp_path / "j"
+    journal = TransportJournal(d, compact_bytes=256)
+    chan = journal.wrap("exp", FifoChannel(8))
+    journal.note_publish({"w": np.arange(4, dtype=np.float32)}, 1)
+    journal.note_publish({"w": np.arange(4, dtype=np.float32) * 2}, 2)
+    for i in range(20):
+        chan.put_many([_item(i)])
+        if journal.should_compact():
+            journal.compact()
+    journal.close()
+    files = sorted(p.name for p in d.iterdir())
+    gens = {int(n.split("-")[1].split(".")[0]) for n in files}
+    assert len(gens) <= 2, f"old generations must be deleted: {files}"
+    got = recover(d)
+    assert _ids(got.channel_items("exp")) == list(range(12, 20))
+    params, version = got.store_params()
+    assert version == 2
+    np.testing.assert_array_equal(params["w"],
+                                  np.arange(4, dtype=np.float32) * 2)
+
+
+# ---------------------------------------------------------------------------
+# JournaledChannel semantics
+# ---------------------------------------------------------------------------
+
+def test_journaled_channel_rejects_block_policy(tmp_path):
+    journal = TransportJournal(tmp_path / "j")
+    with pytest.raises(ValueError, match="block"):
+        journal.wrap("exp", FifoChannel(4, policy="block"))
+    with pytest.raises(TypeError, match="peek_all"):
+        journal.wrap("ring", RingChannel(4))   # no non-destructive capture
+    journal.close()
+
+
+def test_journaled_channel_journals_only_accepted_items(tmp_path):
+    """drop_newest rejections never enter the journal, even when the
+    caller hands over a pre-encoded blob containing them."""
+    d = tmp_path / "j"
+    journal = TransportJournal(d)
+    chan = journal.wrap("exp", FifoChannel(2, policy="drop_newest"))
+    items = [_item(i) for i in range(4)]
+    verdicts = chan.put_many(items, encoded=encode_pytree(items))
+    assert verdicts == [True, True, False, False]
+    journal.close()
+    assert _ids(recover(d).channel_items("exp")) == [0, 1]
+
+
+def test_journaled_channel_reuses_wire_encoding_when_all_accepted(tmp_path):
+    """The streaming hot path never re-encodes: when every item is
+    accepted the caller's blob is journaled VERBATIM (observable by
+    handing over a marker blob and recovering it)."""
+    d = tmp_path / "j"
+    journal = TransportJournal(d)
+    chan = journal.wrap("exp", FifoChannel(64))
+    marker = encode_pytree([_item(999)])
+    assert chan.put_many_encoded([_item(0)], marker) == [True]
+    journal.close()
+    assert _ids(recover(d).channel_items("exp")) == [999]
+
+
+def test_journaled_channel_pops_and_drain_are_journaled(tmp_path):
+    d = tmp_path / "j"
+    journal = TransportJournal(d)
+    chan = journal.wrap("exp", FifoChannel(64))
+    chan.put_many([_item(i) for i in range(6)])
+    assert _ids(chan.pop_batch(2, timeout=0)) == [0, 1]
+    assert _ids(chan.pop_many(3, timeout=0)) == [2, 3, 4]
+    journal.close()
+    assert _ids(recover(d).channel_items("exp")) == [5]
+    assert len(chan) == 1
+    assert chan.stats()["journaled"] == 1.0
+
+
+def test_journaled_channel_blocking_pop_wakes_on_put(tmp_path):
+    journal = TransportJournal(tmp_path / "j")
+    chan = journal.wrap("exp", FifoChannel(64))
+    t0 = time.monotonic()
+    assert chan.pop_batch(1, timeout=0.05) is None
+    assert time.monotonic() - t0 >= 0.04
+    got = []
+    t = threading.Thread(
+        target=lambda: got.append(chan.pop_batch(1, timeout=5.0)))
+    t.start()
+    time.sleep(0.05)
+    chan.put(_item(42))
+    t.join(timeout=5.0)
+    assert got and _ids(got[0]) == [42]
+    journal.close()
+
+
+def test_restore_refills_without_journaling(tmp_path):
+    d = tmp_path / "j"
+    journal = TransportJournal(d)
+    chan = journal.wrap("exp", FifoChannel(64))
+    assert chan.restore([_item(i) for i in range(3)]) == 3
+    assert len(chan) == 3
+    journal.close()
+    # the items came FROM the chain: replay must not double-count them
+    assert recover(d).channel_items("exp") == []
+
+
+# ---------------------------------------------------------------------------
+# server integration: resume_from_journal over the real wire
+# ---------------------------------------------------------------------------
+
+def _journaled_server(d, resume=False):
+    journal = TransportJournal(d, resume=resume)
+    store = VersionedWeightStore()
+    journal.attach_store(store)
+    chan = journal.wrap("exp", FifoChannel(4096))
+    srv = TransportServer(journal=journal)
+    srv.add_channel("exp", chan)
+    srv.set_store(store)
+    return srv, chan, store
+
+
+def test_server_resume_restores_channel_streams_and_store(tmp_path):
+    d = tmp_path / "j"
+    srv, chan, store = _journaled_server(d)
+    srv.start()
+    s = PutStream(srv.address, "exp", window=4, stream_id="t1")
+    for base in range(0, 20, 4):
+        s.put_many([_item(base + j) for j in range(4)])
+    assert s.flush(10.0)
+    s.close()
+    store.publish({"w": np.arange(6, dtype=np.float32)}, 3)
+    srv.stop()
+    srv.join()
+
+    srv2, chan2, store2 = _journaled_server(d, resume=True)
+    state = srv2.resume_from_journal()
+    assert len(chan2) == 20
+    assert _ids(chan2.peek_all()) == list(range(20))
+    assert store2.version() == 3
+    got = store2.acquire(newer_than=-1, timeout=1.0)
+    np.testing.assert_array_equal(got[0]["w"],
+                                  np.arange(6, dtype=np.float32))
+    assert state.streams[("exp", "t1")]["last_seq"] == 4  # seqs 0..4
+    srv2.start()
+    # the replacement re-acks a replayed frame WITHOUT re-applying it
+    c = WireClient(srv2.address)
+    resp, _ = c.request({"m": "stream.open", "chan": "exp",
+                         "stream": "t1", "window": 4})
+    assert resp["last_seq"] == 4
+    resp, _ = c.request({"m": "chan.put_stream", "chan": "exp",
+                         "stream": "t1", "seq": 4},
+                        encode_pytree([_item(16 + j) for j in range(4)]))
+    assert resp.get("dup") is True
+    assert len(chan2) == 20                    # nothing re-applied
+    assert srv2.metrics.counter("stream_dup_frames") >= 1
+    resp, _ = c.request({"m": "server.stats"})
+    assert resp["stats"]["journal_recovered_items"] == 20.0
+    assert resp["stats"]["journal_recovered_streams"] == 1.0
+    c.close()
+    srv2.stop()
+    srv2.join()
+
+
+# ---------------------------------------------------------------------------
+# SHM hygiene: names carry the creator pid, the sweep only touches the dead
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not pathlib.Path("/dev/shm").is_dir(),
+                    reason="needs a /dev/shm tmpfs")
+def test_sweep_stale_shm_unlinks_only_dead_creators(tmp_path):
+    base = pathlib.Path("/dev/shm")
+    live = base / shm_name()                   # our (live) pid
+    assert live.name.startswith(f"acrl{os.getpid():x}x")
+    proc = subprocess.run([sys.executable, "-c", "import os;print(os.getpid())"],
+                          capture_output=True, text=True, check=True)
+    dead_pid = int(proc.stdout)
+    dead = base / f"acrl{dead_pid:x}xdeadbeef"
+    mangled = base / "acrlnotapid"             # unparsable: never touched
+    for p in (live, dead, mangled):
+        p.write_bytes(b"x")
+    try:
+        assert sweep_stale_shm() >= 1
+        assert not dead.exists(), "dead creator's segment must be swept"
+        assert live.exists(), "live creator's segment must survive"
+        assert mangled.exists(), "unparsable names must be left alone"
+    finally:
+        for p in (live, dead, mangled):
+            if p.exists():
+                p.unlink()
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: grammar, triggers, determinism, and import-gated inertness
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_grammar_and_triggers():
+    from repro.runtime.transport import faults
+    plan = faults.FaultPlan.from_spec(
+        "reset@server.frame:nth=3;delay@x:every=2,ms=1")
+    for hit in range(1, 3):
+        plan.hit("server.frame")               # hits 1-2: no fire
+    with pytest.raises(faults.InjectedReset):
+        plan.hit("server.frame")               # hit 3 fires, exactly once
+    plan.hit("server.frame")
+    t0 = time.monotonic()
+    for _ in range(4):
+        plan.hit("x")                          # every=2: fires twice
+    assert time.monotonic() - t0 >= 0.002
+    snap = plan.snapshot()
+    assert snap["server.frame"] == {"hits": 4, "fired": 1}
+    assert snap["x"] == {"hits": 4, "fired": 2}
+    assert isinstance(faults.InjectedReset(""), ConnectionResetError)
+    from repro.runtime.transport.ring import RingError
+    assert isinstance(faults.InjectedTorn(""), RingError)
+    for bad in ("boom@p", "reset", "reset@p:nth"):
+        with pytest.raises(ValueError):
+            faults.FaultPlan.from_spec(bad)
+
+
+def test_fault_plan_prob_is_deterministic_per_seed():
+    from repro.runtime.transport import faults
+
+    def decisions(seed):
+        plan = faults.FaultPlan.from_spec(f"delay@p:prob=0.5,ms=0,seed={seed}")
+        rule = plan._rules["p"][0]
+        return [rule.should_fire(h) for h in range(1, 33)]
+
+    assert decisions(1) == decisions(1)        # same spec, same run
+    assert decisions(1) != decisions(2)        # the stream is per-seed
+    assert any(decisions(1)) and not all(decisions(1))
+
+
+def test_fault_injection_drives_the_client_redial(monkeypatch, tmp_path):
+    """Arm a reset at the server's frame point (via the module seam the
+    env gate normally populates): the connection dies mid-run and the
+    client's reconnect budget absorbs it — no duplicate applies, because
+    the reset fires BEFORE dispatch."""
+    from repro.runtime.transport import faults
+    from repro.runtime.transport import server as server_mod
+    monkeypatch.setenv(faults.ENV_VAR, "reset@server.frame:nth=3")
+    faults.reset_plan()
+    monkeypatch.setattr(server_mod, "_fault", faults.fault_point)
+    try:
+        srv = TransportServer()
+        local = FifoChannel(256)
+        srv.add_channel("exp", local)
+        srv.start()
+        from repro.runtime.transport import SocketChannel
+        chan = SocketChannel(srv.address, "exp", reconnect_attempts=10,
+                             reconnect_backoff_s=0.01)
+        for i in range(6):
+            assert chan.put(_item(i))
+        assert _ids(local.drain()) == list(range(6))
+        assert chan._client.reconnects >= 1
+        chan.close()
+        srv.stop()
+        srv.join()
+    finally:
+        faults.reset_plan()
+
+
+def test_faults_module_inert_unless_env_gated():
+    """The acceptance invariant: with REPRO_FAULTS unset the faults
+    module is NEVER imported by the hot paths; with it set, it is."""
+    prog = ("import sys;"
+            "import repro.runtime.transport.server;"
+            "import repro.runtime.transport.channel;"
+            "import repro.runtime.transport.ring;"
+            "mod='repro.runtime.transport.faults';"
+            "assert (mod in sys.modules) == (%r), sys.modules.keys()")
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    for gated in (False, True):
+        env = {k: v for k, v in os.environ.items() if k != "REPRO_FAULTS"}
+        env["PYTHONPATH"] = src
+        if gated:
+            env["REPRO_FAULTS"] = "delay@never:nth=999999"
+        proc = subprocess.run([sys.executable, "-c", prog % gated],
+                              env=env, capture_output=True, text=True)
+        assert proc.returncode == 0, proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# elastic supervision: scale-up / cooldown / drain-then-retire scale-down
+# ---------------------------------------------------------------------------
+
+class StubServer:
+    def __init__(self):
+        self.sinks = {}
+        self.hello = None
+
+    def register_worker_sink(self, name, host):
+        self.sinks[name] = host
+
+    def set_hello_handler(self, fn):
+        self.hello = fn
+
+
+class FakeEndpoint(WorkerEndpoint):
+    mode = "spawn"
+
+    def __init__(self):
+        self._failure = None
+        self.launches = 0
+
+    def launch(self, spec):
+        self.launches += 1
+        self._failure = None
+
+    def failure(self):
+        return self._failure
+
+    def die(self, reason="exited"):
+        self._failure = reason
+
+
+def _spec(name):
+    return RemoteWorkerSpec(name=name,
+                            cfg=reduced(get_config("deepseek-7b")),
+                            rl=RLConfig(), rt=RuntimeConfig(),
+                            address=("127.0.0.1", 1))
+
+
+class ElasticSupervisor(Supervisor):
+    """Supervisor with the endpoint seam faked (no real processes)."""
+
+    def _elastic_add(self, spec):
+        slot = SupervisedWorker(spec, FakeEndpoint(), self.server)
+        slot.start()
+        self.slots.append(slot)
+        return slot
+
+
+def test_elastic_policy_validation():
+    ElasticPolicy(min_workers=0, max_workers=0)    # empty fleet is legal
+    with pytest.raises(ValueError):
+        ElasticPolicy(min_workers=3, max_workers=1)
+    with pytest.raises(ValueError):
+        ElasticPolicy(scale_up_depth=0.9, scale_down_depth=0.5)
+
+
+def test_elastic_scale_up_cooldown_and_cap():
+    signals = {"depth_frac": 0.0}
+    registered = []
+    sup = ElasticSupervisor(StubServer(), RestartPolicy())
+    sup.enable_elastic(ElasticPolicy(min_workers=0, max_workers=2,
+                                     interval_s=1.0),
+                       lambda seq: _spec(f"elastic-{seq}"),
+                       lambda: signals, register=registered.append)
+    now = 100.0
+    sup._elastic_step(now)
+    assert len(sup.slots) == 1 and sup.slots[0].elastic
+    assert sup.slots[0].phase == "up"
+    assert registered == [sup.slots[0]]
+    sup._elastic_step(now + 0.5)               # inside the cooldown
+    assert len(sup.slots) == 1
+    sup._elastic_step(now + 1.5)
+    assert len(sup.slots) == 2
+    sup._elastic_step(now + 3.0)               # at max_workers: hold
+    assert len(sup.slots) == 2
+    assert sup.metrics.counter("scale_ups") == 2
+
+
+def test_elastic_scale_down_drains_newest_then_retires():
+    signals = {"depth_frac": 0.0}
+    sup = ElasticSupervisor(StubServer(), RestartPolicy())
+    sup.enable_elastic(ElasticPolicy(min_workers=0, max_workers=2,
+                                     interval_s=1.0, drain_timeout_s=30.0),
+                       lambda seq: _spec(f"elastic-{seq}"),
+                       lambda: signals)
+    now = 100.0
+    sup._elastic_step(now)
+    sup._elastic_step(now + 2.0)
+    first, second = sup.slots
+    signals["depth_frac"] = 1.0                # trainer saturated
+    sup._elastic_step(now + 4.0)
+    assert second.phase == "draining" and second._stop_remote  # LIFO
+    assert first.phase == "up"
+    sup._elastic_step(now + 6.0)               # one transition at a time
+    assert first.phase == "up"
+    sup._drain_step(second, now + 7.0)         # still flushing: keep it
+    assert second.phase == "draining"
+    second.endpoint.die()                      # worker exited after close()
+    sup._drain_step(second, now + 8.0)
+    assert second.phase == "done"
+    assert second.error is None, "a drained slot is NOT a failure"
+    assert sup.metrics.counter("drains_completed") == 1
+    sup._elastic_step(now + 10.0)              # now the next one may drain
+    assert first.phase == "draining"
+
+
+def test_elastic_staleness_cap_gates_scale_up():
+    signals = {"depth_frac": 0.0, "staleness": 5.0}
+    sup = ElasticSupervisor(StubServer(), RestartPolicy())
+    sup.enable_elastic(ElasticPolicy(min_workers=0, max_workers=4,
+                                     interval_s=0.0, staleness_cap=2.0),
+                       lambda seq: _spec(f"elastic-{seq}"),
+                       lambda: signals)
+    sup._elastic_step(100.0)
+    assert sup.slots == [], "off-policy lag past the cap must gate scale-up"
+    signals["staleness"] = 1.0
+    sup._elastic_step(101.0)
+    assert len(sup.slots) == 1
+
+
+def test_elastic_flaky_signal_source_never_kills_supervision():
+    sup = ElasticSupervisor(StubServer(), RestartPolicy())
+    sup.enable_elastic(ElasticPolicy(min_workers=0, max_workers=2,
+                                     interval_s=0.0),
+                       lambda seq: _spec(f"elastic-{seq}"),
+                       lambda: 1 / 0)
+    sup._elastic_step(100.0)                   # swallows, scales nothing
+    assert sup.slots == []
+    with pytest.raises(ValueError):
+        sup.enable_elastic(ElasticPolicy(), lambda s: None, lambda: {},
+                           mode="teleport")
+
+
+def test_connected_liveness_window_is_configurable():
+    sup = Supervisor(StubServer(), RestartPolicy())
+    spec = _spec("w0")
+    assert spec.heartbeat_s == 0.25
+    slot = sup.add_connected(spec, liveness_heartbeats=4.0,
+                             liveness_floor_s=0.5)
+    assert slot.endpoint.liveness_timeout_s == pytest.approx(1.0)
+    slot = sup.add_connected(spec, liveness_heartbeats=1.0,
+                             liveness_floor_s=2.0)
+    assert slot.endpoint.liveness_timeout_s == pytest.approx(2.0)  # floored
+    slot = sup.add_connected(spec, liveness_timeout_s=7.5)
+    assert slot.endpoint.liveness_timeout_s == pytest.approx(7.5)  # explicit

@@ -130,7 +130,12 @@ def test_put_stream_close_flushes(server):
 def test_put_stream_reconnect_replay_exactly_once(server, ring):
     """Drop every server-side connection repeatedly while a stream is in
     flight: the unacked window is replayed after each redial, the server
-    dedups by put sequence, and every item lands EXACTLY once."""
+    dedups by put sequence, and every item lands EXACTLY once.
+
+    Drops are injected synchronously from the put loop (every quarter of
+    the run), not from a timer thread — a fast machine could stream every
+    item before a timer's first tick fired, making the reconnect
+    assertion below flaky."""
     if ring and shared_memory is None:
         pytest.skip("multiprocessing.shared_memory unavailable")
     name, local = _host(server, capacity=100_000)
@@ -139,19 +144,11 @@ def test_put_stream_reconnect_replay_exactly_once(server, ring):
                   reconnect_attempts=20, reconnect_backoff_s=0.01)
     total = 400
     flush = 4
-    dropper_stop = threading.Event()
-
-    def dropper():
-        while not dropper_stop.is_set():
-            time.sleep(0.05)
+    flushes = total // flush
+    for k, base in enumerate(range(0, total, flush)):
+        if k and k % (flushes // 4) == 0:      # mid-stream, frames in flight
             _drop_server_side(server)
-
-    t = threading.Thread(target=dropper, daemon=True)
-    t.start()
-    for base in range(0, total, flush):
         s.put_many([_item(base + j) for j in range(flush)])
-    dropper_stop.set()
-    t.join(timeout=5.0)
     assert s.flush(30.0), s.stats()
     st = s.stats()
     s.close()
