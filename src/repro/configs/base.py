@@ -291,6 +291,18 @@ class TransportConfig:
     # ring capacity per direction for kind="ring" (the persistent SHM
     # ring data plane; must hold several encoded flushes)
     ring_bytes: int = 8 << 20
+    # -- disaggregated inference plane ---------------------------------------
+    # "": every rollout child runs its own colocated inference pool.
+    # "host": the parent serves its OWN InferenceService behind the
+    #   infer.* endpoints of the main TransportServer; remote rollout
+    #   children submit action requests to it instead of building a pool.
+    # "spawn": a supervised inference-tier child hosts the shared pool
+    #   behind its own TransportServer on a fixed pre-allocated port;
+    #   rollout children dial the tier (and redial across its restarts).
+    inference_plane: str = ""
+    infer_listen_addr: str = ""       # "host:port" bind override for the
+                                      # spawned tier (default loopback +
+                                      # a pre-allocated ephemeral port)
     # -- resilient control plane (runtime/transport/resilience) --------------
     # journal_dir non-empty: hosted channel contents, stream dedup
     # watermarks, and weight-store publishes are write-ahead journaled

@@ -1,0 +1,114 @@
+"""Single-token decode attention as a Pallas TPU kernel.
+
+The inference plane's hot loop is the autoregressive decode inside
+``sample_action_sequence``: one new query token per sequence attending
+over the KV cache. Unlike prefill, validity is *data-dependent* — ring
+slots may be empty (position -1), out of the sliding window, or ahead of
+the sequence (cache rows written by longer sequences in the batch) — so
+the mask arrives as a precomputed additive bias instead of being derived
+from grid positions:
+
+  * grid = (batch, q-heads, kv-blocks); the LAST axis is sequential on
+    TPU, so the online-softmax state (m, l, acc) lives in VMEM scratch
+    across kv-block steps and is finalized on the last step (same shape
+    as ``flash_attention``, with a 1-row query tile);
+  * GQA maps each q-head grid index to its kv head (h // group) in the
+    K/V index maps — no KV duplication in HBM;
+  * ``bias``: [B, S] f32, 0 where the cache slot is attendable and
+    ``NEG_INF`` where it is not; cache padding to the block multiple is
+    masked the same way.
+
+Validated in interpret mode against the dense jnp decode path; on real
+TPUs the same ``pl.pallas_call`` lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention import _vmem
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float):
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :]                              # [1, D]
+    k = k_ref[0, :, 0, :]                              # [bk, D]
+    v = v_ref[0, :, 0, :]                              # [bk, D]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = s + bias_ref[...]                              # [1, bk]
+
+    m_prev = m_scr[...]                                # [1, 1]
+    m_new = jnp.maximum(m_prev[:, 0], s.max(axis=-1))[:, None]
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                             # [1, bk]
+    l_new = l_scr[...] * corr + p.sum(axis=-1)[:, None]
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _final():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     bias: jnp.ndarray, *, block_k: int = 128,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: [B, 1, H, D]; k/v: [B, S, KV, D]; bias: [B, S] f32 additive
+    (0 attendable / NEG_INF masked) → [B, 1, H, D] in q.dtype."""
+    b, t, h, d = q.shape
+    assert t == 1, f"decode kernel wants one query token, got T={t}"
+    s, kv = k.shape[1], k.shape[2]
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    scale = d ** -0.5
+
+    sp = math.ceil(s / block_k) * block_k
+    if sp != s:
+        k = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, sp - s)),
+                       constant_values=NEG_INF)
+    bias = bias.astype(jnp.float32)
+
+    grid = (b, h, sp // block_k)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda bi, hi, kj: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, kj, g=group: (bi, kj, hi // g, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, kj, g=group: (bi, kj, hi // g, 0)),
+            pl.BlockSpec((1, block_k), lambda bi, hi, kj: (bi, kj)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda bi, hi, kj: (bi, 0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1, h, d), q.dtype),
+        scratch_shapes=[
+            _vmem((1, 1), jnp.float32),        # running max m
+            _vmem((1, 1), jnp.float32),        # running sum l
+            _vmem((1, d), jnp.float32),        # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v, bias)
+    return out

@@ -285,3 +285,67 @@ def attention(q, k, v, *, window: Optional[int] = None, block: int = 128,
         return _flash_with_twin_bwd(q, k, v, window, block, block,
                                     interpret_mode())
     return _twin_attention(q, k, v, window, block, unroll)
+
+
+# ---------------------------------------------------------------------------
+# Decode-path routing: single-token decode + the dense small-T fallback
+# ---------------------------------------------------------------------------
+
+def _twin_dense(q, k, v, window):
+    """Dense causal attention — the exact math of the historical inline
+    small-T path in ``models.attention`` (f32 scores + additive causal
+    mask + softmax cast to q.dtype before the value combine)."""
+    from repro.models.attention import (_gqa_combine, _gqa_scores,
+                                        causal_mask)
+    t = q.shape[1]
+    scale = q.shape[-1] ** -0.5
+    scores = _gqa_scores(q, k) * scale
+    scores = scores + causal_mask(t, window)[None, None]
+    weights = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _gqa_combine(weights, v)
+
+
+def dense_attention(q, k, v, *, window: Optional[int] = None,
+                    block: int = 128, mode: Optional[str] = None):
+    """Dense small-T causal attention (T == S, no KV cache): the fallback
+    the blockwise path skips when the whole sequence fits one block.
+    q: [B,T,H,D]; k/v: [B,T,KV,D] -> [B,T,H,D] in q.dtype.
+
+    Pallas route: the flash kernel (it pads T up to one block tile
+    internally, so a 17-token prompt still runs as a single MXU tile);
+    differentiable through the twin-VJP wrapper like ``attention``.
+    """
+    if use_pallas(mode) and _attn_pallas_ok(q.shape[-1]):
+        return _flash_with_twin_bwd(q, k, v, window, block, block,
+                                    interpret_mode())
+    return _twin_dense(q, k, v, window)
+
+
+def _twin_decode(q, k, v, valid):
+    """Single-token decode over a (possibly ring-layout) KV cache — the
+    exact math of the historical inline path in ``attention_decode``."""
+    from repro.models.attention import NEG_INF, _gqa_combine, _gqa_scores
+    scale = q.shape[-1] ** -0.5
+    scores = _gqa_scores(q, k) * scale                    # [B,H,1,S]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    weights = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _gqa_combine(weights, v)
+
+
+def decode_attention(q, k, v, valid, *, mode: Optional[str] = None):
+    """Single-token attention decode. q: [B,1,H,D]; k/v: [B,S,KV,D];
+    valid: [B,S] bool (cache slots this token may attend to — empty ring
+    slots, out-of-window and future positions already excluded)
+    -> [B,1,H,D] in q.dtype.
+
+    Validity is data-dependent (ring caches overwrite slots out of
+    order), so the Pallas route carries it as an additive bias instead of
+    deriving a mask from grid positions. Inference-only — no VJP wrapper.
+    """
+    if use_pallas(mode) and _attn_pallas_ok(q.shape[-1]):
+        from repro.kernels.decode_attention import (
+            decode_attention as _pallas_decode)
+        from repro.models.attention import NEG_INF
+        bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+        return _pallas_decode(q, k, v, bias, interpret=interpret_mode())
+    return _twin_decode(q, k, v, valid)

@@ -105,6 +105,13 @@ def main() -> None:
                     help="autoscale the remote worker fleet up to MAX "
                          "slots from queue-depth/weight-staleness signals "
                          "(0 = fixed fleet)")
+    ap.add_argument("--inference-plane", default="", metavar="MODE",
+                    choices=("", "host", "spawn"),
+                    help="disaggregated inference for remote workers: "
+                         "'host' serves the parent's pool behind the "
+                         "transport, 'spawn' runs a supervised shared "
+                         "inference tier process; default: each worker "
+                         "keeps a colocated pool")
     args = ap.parse_args()
     if args.resume_journal and not args.journal_dir:
         ap.error("--resume-journal needs --journal-dir")
@@ -194,6 +201,8 @@ def _run_remote_rollout(args) -> None:
             token=args.token,
             journal_dir=args.journal_dir,
             resume_journal=args.resume_journal,
+            inference_plane=args.inference_plane,
+            reconnect_attempts=(20 if args.inference_plane else 0),
             supervision=SupervisionConfig(
                 restart=args.restart,
                 max_restarts=args.max_restarts,
@@ -205,7 +214,9 @@ def _run_remote_rollout(args) -> None:
     print(f"async system: 1 local + {args.remote_rollout} spawned + "
           f"{args.serve_workers} connect-mode rollout worker(s) over "
           f"{args.remote_transport} @ {host}:{port} "
-          f"(restart={args.restart})")
+          f"(restart={args.restart}"
+          + (f", inference={args.inference_plane}" if args.inference_plane
+             else "") + ")")
     if args.serve_workers:
         token_arg = f" --token {args.token}" if args.token else ""
         print(f"dial in from another terminal/host:\n"

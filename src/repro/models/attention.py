@@ -101,16 +101,12 @@ def attention_forward(params: Params, x: jnp.ndarray, *, rope_theta: float,
     if positions is None:
         positions = jnp.arange(t)[None, :]
     q, k, v = _project_qkv(params, x, positions, rope_theta)
-    scale = q.shape[-1] ** -0.5
     if block is not None and t > block:
         out = dispatch.attention(q, k, v, window=window, block=block,
                                  unroll=unroll)
         out = out.astype(x.dtype)
     else:
-        scores = _gqa_scores(q, k) * scale
-        scores = scores + causal_mask(t, window)[None, None]
-        weights = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-        out = _gqa_combine(weights, v)
+        out = dispatch.dense_attention(q, k, v, window=window)
     return jnp.einsum("bthk,hkd->btd", out, params["wo"])
 
 
@@ -180,15 +176,11 @@ def attention_prefill(params: Params, x: jnp.ndarray, *, rope_theta: float,
     b, t, _ = x.shape
     positions = jnp.arange(t)[None, :]
     q, k, v = _project_qkv(params, x, positions, rope_theta)
-    scale = q.shape[-1] ** -0.5
     if block is not None and t > block:
         out = dispatch.attention(q, k, v, window=window, block=block,
                                  unroll=unroll).astype(x.dtype)
     else:
-        scores = _gqa_scores(q, k) * scale
-        scores = scores + causal_mask(t, window)[None, None]
-        weights = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-        out = _gqa_combine(weights, v)
+        out = dispatch.dense_attention(q, k, v, window=window)
     out = jnp.einsum("bthk,hkd->btd", out, params["wo"])
 
     if cache_len >= t:
@@ -247,15 +239,11 @@ def attention_decode(params: Params, x: jnp.ndarray, cache: KVCache, *,
         v_c = cache.v.at[b_idx, slot].set(v_new[:, 0].astype(cache.v.dtype))
         pos_c = cache.positions.at[b_idx, slot].set(pos)
 
-    scale = q.shape[-1] ** -0.5
-    scores = _gqa_scores(q, k_c) * scale                      # [B,H,1,S]
-    valid = pos_c >= 0
+    valid = pos_c >= 0                                        # [B,S]
     if window is not None:
         valid &= (pos[:, None] - pos_c) < window
     valid &= pos_c <= pos[:, None]
-    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
-    weights = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = _gqa_combine(weights, v_c)
+    out = dispatch.decode_attention(q, k_c, v_c, valid)
     out = jnp.einsum("bthk,hkd->btd", out, params["wo"])
     new_cache = KVCache(k=k_c, v=v_c, positions=pos_c, length=pos + 1)
     return out, new_cache

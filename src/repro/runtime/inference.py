@@ -105,6 +105,10 @@ class InferenceService(Service):
     def weight_swaps(self) -> int:
         return int(self.metrics.counter("weight_swaps"))
 
+    @property
+    def degenerate_batches(self) -> int:
+        return int(self.metrics.counter("degenerate_batches"))
+
     # -- client API -----------------------------------------------------------
     def submit(self, obs_tokens: np.ndarray, frame: Optional[np.ndarray],
                step: int) -> Future:
@@ -124,22 +128,34 @@ class InferenceService(Service):
         return sub
 
     def _collect_window(self) -> List[_Request]:
-        """Dynamic-window batching, eq. 1."""
+        """Dynamic-window batching, eq. 1.
+
+        The T_max timer anchors to COLLECTION start, not the first
+        request's arrival: a request that sat queued while a previous
+        batch was in flight would otherwise expire the window the moment
+        it is picked up, dispatching degenerate 1-item batches exactly
+        when the queue is busiest (the window never gets its T_max to
+        fill). Queue wait before collection is tracked separately as the
+        ``queue_wait_s`` series.
+        """
         reqs: List[_Request] = []
-        t_first = None
+        t_start = None
         while not self._stop.is_set():
             b, t_max = self.window_batch, self.window_wait_s
-            timeout = 0.002 if t_first is None else max(
-                0.0, t_max - (time.monotonic() - t_first))
+            timeout = 0.002 if t_start is None else max(
+                0.0, t_max - (time.monotonic() - t_start))
             try:
                 r = self._q.get(timeout=max(timeout, 1e-4))
+                now = time.monotonic()
+                if t_start is None:
+                    t_start = now
                 reqs.append(r)
-                if t_first is None:
-                    t_first = r.t_arrival
+                self.metrics.record("queue_wait_s",
+                                    max(now - r.t_arrival, 0.0))
             except queue.Empty:
                 pass
             if reqs and (len(reqs) >= b or
-                         time.monotonic() - t_first >= t_max):
+                         time.monotonic() - t_start >= t_max):
                 return reqs
         return reqs
 
@@ -160,6 +176,25 @@ class InferenceService(Service):
             reqs = self._collect_window()
             if not reqs:
                 continue
+            # the drain flag may have been raised while this worker was
+            # parked inside _collect_window — a window carved AFTER the
+            # signal is a NEW batch and must wait for the swap (update
+            # atomicity: no batch starts on stale weights mid-publish)
+            while self.store.draining and not self._stop.is_set():
+                got = self.store.acquire(newer_than=version, timeout=0.1)
+                if got is not None:
+                    params, version = got
+                    self.metrics.inc("weight_swaps")
+                    self.metrics.set_gauge("weight_version", float(version))
+                    break
+            if len(reqs) == 1:
+                # a 1-item window after a non-empty wait is the shape the
+                # wait-anchoring bug produced; kept as a counter so the
+                # regression stays observable in metrics()["services"]
+                self.metrics.inc("degenerate_batches")
+            # autoscaling signal: how deep the queue still is after this
+            # window was carved off (ElasticPolicy consumes it bridged)
+            self.metrics.set_gauge("queue_depth", float(self._q.qsize()))
             # oversized windows (window_batch > largest bucket) are split
             # into bucket-sized chunks instead of under-padding silently
             start = 0
@@ -172,6 +207,9 @@ class InferenceService(Service):
             n = len(reqs)
             nb = pad_to_bucket(n, self.rt.batch_buckets)
             self.metrics.inc("padded_slots", nb - n)
+            # autoscaling signal: fraction of the padded batch carrying
+            # real requests (low fill = idle accelerator slots)
+            self.metrics.set_gauge("window_fill", n / nb)
             obs = np.stack([r.obs_tokens for r in reqs] +
                            [reqs[-1].obs_tokens] * (nb - n))
             steps = np.array([r.step for r in reqs] +

@@ -68,6 +68,8 @@ class AcceRLSystem:
         self.supervisor = None
         self.journal = None
         self.remote_hosts: List = []
+        self.inference_plane_host = None
+        self.infer_address = None
         n_remote = tcfg.remote_rollout_workers + tcfg.connect_rollout_workers
         if n_remote > 0:
             # registered FIRST: the wire endpoint starts before any child
@@ -107,6 +109,14 @@ class AcceRLSystem:
                 self.transport_server.resume_from_journal()
         self.inference = self.registry.register(
             InferenceService(cfg, self.store, rt, seed=seed))
+        if (self.transport_server is not None
+                and tcfg.inference_plane == "host"):
+            # host mode: the parent's own pool serves remote workers'
+            # action requests through the infer.* endpoints — continuous
+            # batching across every local AND remote rollout worker
+            from repro.runtime.transport import InferenceBroker
+            self.transport_server.set_inference(
+                InferenceBroker(self.inference))
         self.trainer = self.registry.register(
             TrainerWorker(cfg, rl, rt, self.experience, self.store,
                           batch_episodes=batch_episodes, seed=seed))
@@ -137,6 +147,24 @@ class AcceRLSystem:
             self.supervisor = self.registry.register(
                 Supervisor(self.transport_server, policy))
 
+            if tcfg.inference_plane == "spawn":
+                # pre-allocate the tier's FIXED port so every restart
+                # incarnation rebinds the same address (SO_REUSEADDR on
+                # the server listener) and workers simply redial
+                import socket as _socket
+                infer_host, infer_port = "127.0.0.1", 0
+                if tcfg.infer_listen_addr:
+                    infer_host, infer_port = parse_address(
+                        tcfg.infer_listen_addr)
+                if infer_port == 0:
+                    probe = _socket.socket()
+                    probe.setsockopt(_socket.SOL_SOCKET,
+                                     _socket.SO_REUSEADDR, 1)
+                    probe.bind((infer_host, 0))
+                    infer_port = probe.getsockname()[1]
+                    probe.close()
+                self.infer_address = (infer_host, infer_port)
+
             def make_spec(name: str, idx: int) -> RemoteWorkerSpec:
                 return RemoteWorkerSpec(
                     name=name, cfg=cfg, rl=rl, rt=rt,
@@ -158,7 +186,19 @@ class AcceRLSystem:
                     latency_sigma=remote_latency_sigma,
                     heartbeat_s=tcfg.heartbeat_s, token=tcfg.token,
                     reconnect_attempts=tcfg.reconnect_attempts,
-                    reconnect_backoff_s=tcfg.reconnect_backoff_s)
+                    reconnect_backoff_s=tcfg.reconnect_backoff_s,
+                    inference=("remote" if tcfg.inference_plane else "local"),
+                    infer_address=self.infer_address)
+
+            if self.infer_address is not None:
+                # the tier slot registers BEFORE rollout slots so it is
+                # already coming up while they dial; kept out of
+                # remote_hosts (it contributes no env steps to metrics())
+                plane_spec = dataclasses.replace(
+                    make_spec("inference-plane", -1), kind="inference",
+                    infer_listen=self.infer_address)
+                self.inference_plane_host = self.registry.register(
+                    self.supervisor.add_spawned(plane_spec))
 
             for i in range(tcfg.remote_rollout_workers):
                 spec = make_spec(f"remote-rollout-{i}", i)

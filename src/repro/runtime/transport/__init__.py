@@ -27,6 +27,11 @@ crossing a process boundary; this package is the crossing:
     compacting snapshots for the server's hosted state, so a replacement
     server (``--resume-journal``) survives a SIGKILL with exactly-once
     stream replay; plus the stale-SHM sweep;
+  * :mod:`inference_plane` — :class:`InferenceBroker` /
+    :class:`RemoteInferenceClient` / :class:`InferencePlaneService`: the
+    disaggregated inference tier — many rollout workers sharing one
+    continuously-batched pool behind seq-numbered ``infer.*`` streams
+    with reconnect replay and exactly-once result delivery;
   * :mod:`faults`  — :class:`FaultPlan`, env-gated deterministic fault
     injection (never imported unless ``REPRO_FAULTS`` is set).
 """
@@ -45,6 +50,11 @@ from repro.runtime.transport.channel import (  # noqa: F401
     WireClient,
 )
 from repro.runtime.transport.ring import RingError, ShmRing  # noqa: F401
+from repro.runtime.transport.inference_plane import (  # noqa: F401
+    InferenceBroker,
+    InferencePlaneService,
+    RemoteInferenceClient,
+)
 from repro.runtime.transport.server import TransportServer  # noqa: F401
 from repro.runtime.transport.weights import WeightStoreTransport  # noqa: F401
 from repro.runtime.transport.remote import (  # noqa: F401

@@ -56,7 +56,7 @@ class RemoteWorkerSpec:
     rl: RLConfig
     rt: RuntimeConfig
     address: Tuple[str, int]
-    kind: str = "rollout"
+    kind: str = "rollout"             # {"rollout", "inference"}
     channel: str = "experience"
     frame_channel: Optional[str] = None
     suite: str = "spatial"
@@ -86,6 +86,16 @@ class RemoteWorkerSpec:
     # server-side connection drop (0 = fail fast, PR 3 behavior)
     reconnect_attempts: int = 0
     reconnect_backoff_s: float = 0.1
+    # -- disaggregated inference plane ---------------------------------------
+    # rollout children: inference="remote" swaps the colocated
+    # InferenceService for a RemoteInferenceClient dialing infer_address
+    # (the parent server in host mode, the tier child in spawn mode).
+    # kind="inference" children: infer_listen is the FIXED bind address of
+    # the tier's own TransportServer — baked into the spec so a supervised
+    # restart rebinds the same port and workers redial transparently.
+    inference: str = "local"          # {"local", "remote"}
+    infer_address: Optional[Tuple[str, int]] = None
+    infer_listen: Optional[Tuple[str, int]] = None
 
 
 # ---------------------------------------------------------------------------
@@ -115,6 +125,9 @@ def spec_from_wire(wire: Dict) -> RemoteWorkerSpec:
     rt["batch_buckets"] = tuple(rt["batch_buckets"])
     d["rt"] = RuntimeConfig(**rt)
     d["address"] = (str(d["address"][0]), int(d["address"][1]))
+    for key in ("infer_address", "infer_listen"):
+        if d.get(key) is not None:
+            d[key] = (str(d[key][0]), int(d[key][1]))
     return RemoteWorkerSpec(**d)
 
 
@@ -160,13 +173,48 @@ def _build_report(services: List[Service]) -> Dict:
     }
 
 
+def _report_once(spec: RemoteWorkerSpec, control: WireClient,
+                 services: List[Service]) -> Dict:
+    report = _build_report(services)
+    resp, _ = control.request({"m": "worker.report",
+                               "worker": spec.name,
+                               "incarnation": spec.incarnation,
+                               "report": report})
+    return {"report": report, "resp": resp}
+
+
+def _heartbeat_loop(spec: RemoteWorkerSpec, control: WireClient,
+                    services: List[Service]) -> int:
+    """Shared child report loop (rollout and inference-tier children):
+    heartbeat until the parent says stop, the wire dies, or a local
+    service fails. Returns the exit code."""
+    while True:
+        try:
+            got = _report_once(spec, control, services)
+        except (TransportError, ChannelClosed):
+            return 0                        # parent gone — shut down
+        if got["resp"].get("stop"):
+            return 0
+        if not got["report"]["health"]["healthy"]:
+            return 3                        # parent saw the report; die loud
+        # ±25% jitter: N workers' heartbeats (and their redials after
+        # a server replacement) decorrelate instead of arriving as
+        # one synchronized burst per period
+        time.sleep(spec.heartbeat_s * (0.75 + 0.5 * random.random()))
+
+
 def worker_main(spec: RemoteWorkerSpec) -> int:
     """Remote-worker entry: build the service set, run it, report.
 
-    Returns the exit code (0 clean stop, 3 internal service failure).
-    Heavy imports live here, not at module scope — the parent never pays
-    for them and the child initializes its own jax runtime.
+    ``spec.kind`` selects the body: ``"rollout"`` (env workers, with a
+    colocated OR remote inference pool per ``spec.inference``) or
+    ``"inference"`` (the shared inference tier). Returns the exit code
+    (0 clean stop, 3 internal service failure). Heavy imports live here,
+    not at module scope — the parent never pays for them and the child
+    initializes its own jax runtime.
     """
+    if spec.kind == "inference":
+        return _inference_plane_main(spec)
     from repro.envs.toy_manipulation import TASKS_PER_SUITE, lognormal_latency
     from repro.core.resampler import DynamicWeightedResampler
     from repro.runtime.inference import InferenceService
@@ -188,19 +236,41 @@ def worker_main(spec: RemoteWorkerSpec) -> int:
     experience = Channel(spec.address, spec.channel, **chan_kw)
     frames = (Channel(spec.address, spec.frame_channel, **chan_kw)
               if spec.frame_channel else None)
-    # the weight wire keeps the per-message SHM path even in ring mode:
-    # acquires are rare (one per published version) and the blob cache
-    # already amortizes encoding, so there is no churn worth a ring
-    store = WeightStoreTransport(spec.address,
-                                 use_shm=spec.use_shm or spec.use_ring,
-                                 shm_threshold=spec.shm_threshold,
-                                 connect_timeout=spec.connect_timeout_s,
-                                 reconnect_attempts=spec.reconnect_attempts,
-                                 reconnect_backoff_s=spec.reconnect_backoff_s)
     control = WireClient(spec.address,
                          connect_timeout=spec.connect_timeout_s,
                          reconnect_attempts=spec.reconnect_attempts,
                          reconnect_backoff_s=spec.reconnect_backoff_s)
+
+    store = None
+    if spec.inference == "remote":
+        # disaggregated plane: action requests go to the shared tier; no
+        # local pool, no local weight wire (the tier owns the weights)
+        from repro.runtime.transport.inference_plane import \
+            RemoteInferenceClient
+        inference = RemoteInferenceClient(
+            tuple(spec.infer_address or spec.address),
+            client_id=spec.name,
+            connect_timeout=spec.connect_timeout_s,
+            shm_threshold=spec.shm_threshold,
+            reconnect_attempts=spec.reconnect_attempts,
+            reconnect_backoff_s=spec.reconnect_backoff_s,
+            use_ring=spec.use_ring)
+        services: List[Service] = []
+    else:
+        # the weight wire keeps the per-message SHM path even in ring
+        # mode: acquires are rare (one per published version) and the
+        # blob cache already amortizes encoding, so there is no churn
+        # worth a ring
+        store = WeightStoreTransport(
+            spec.address, use_shm=spec.use_shm or spec.use_ring,
+            shm_threshold=spec.shm_threshold,
+            connect_timeout=spec.connect_timeout_s,
+            reconnect_attempts=spec.reconnect_attempts,
+            reconnect_backoff_s=spec.reconnect_backoff_s)
+        inference = InferenceService(spec.cfg, store, spec.rt,
+                                     temperature=spec.temperature,
+                                     seed=spec.seed)
+        services = [inference]
 
     latency = (lognormal_latency(spec.latency_mean_ms,
                                  sigma=spec.latency_sigma, seed=spec.seed)
@@ -208,9 +278,6 @@ def worker_main(spec: RemoteWorkerSpec) -> int:
     # task selection is resampled locally per child — each process keeps
     # its own success history (no cross-process resampler sync)
     resampler = DynamicWeightedResampler(TASKS_PER_SUITE, seed=spec.seed)
-    inference = InferenceService(spec.cfg, store, spec.rt,
-                                 temperature=spec.temperature,
-                                 seed=spec.seed)
     workers = [
         RolloutWorker(i, spec.cfg, inference, experience, suite=spec.suite,
                       resampler=resampler,
@@ -219,46 +286,62 @@ def worker_main(spec: RemoteWorkerSpec) -> int:
                       seed=spec.seed * 1000 + i, frame_channel=frames)
         for i in range(spec.num_envs)
     ]
-    services: List[Service] = [inference] + list(workers)
+    services = services + list(workers)
     for s in services:
         s.start()
 
-    def report_once() -> Dict:
-        report = _build_report(services)
-        resp, _ = control.request({"m": "worker.report",
-                                   "worker": spec.name,
-                                   "incarnation": spec.incarnation,
-                                   "report": report})
-        return {"report": report, "resp": resp}
-
-    exit_code = 0
     try:
-        while True:
-            try:
-                got = report_once()
-            except (TransportError, ChannelClosed):
-                break                       # parent gone — shut down
-            if got["resp"].get("stop"):
-                break
-            if not got["report"]["health"]["healthy"]:
-                exit_code = 3               # parent saw the report; die loud
-                break
-            # ±25% jitter: N workers' heartbeats (and their redials after
-            # a server replacement) decorrelate instead of arriving as
-            # one synchronized burst per period
-            time.sleep(spec.heartbeat_s * (0.75 + 0.5 * random.random()))
+        exit_code = _heartbeat_loop(spec, control, services)
     finally:
         for s in reversed(services):
             s.stop()
         for s in services:
             s.join(timeout=5.0)
         try:                                # best-effort final numbers
-            report_once()
+            _report_once(spec, control, services)
         except (TransportError, ChannelClosed):
             pass
-        for closable in (experience, frames, store, control):
+        closables = [experience, frames, store, control]
+        if spec.inference == "remote":
+            closables.append(inference)
+        for closable in closables:
             if closable is not None:
                 closable.close()
+    return exit_code
+
+
+def _inference_plane_main(spec: RemoteWorkerSpec) -> int:
+    """Inference-tier child: the shared pool + broker behind its own
+    fixed-address ``TransportServer``, weights pulled from the parent."""
+    from repro.runtime.transport.inference_plane import InferencePlaneService
+
+    control = WireClient(spec.address,
+                         connect_timeout=spec.connect_timeout_s,
+                         reconnect_attempts=spec.reconnect_attempts,
+                         reconnect_backoff_s=spec.reconnect_backoff_s)
+    plane = InferencePlaneService(
+        spec.cfg, spec.rt, spec.address,
+        listen=tuple(spec.infer_listen or ("127.0.0.1", 0)),
+        temperature=spec.temperature, seed=spec.seed,
+        use_shm=spec.use_shm or spec.use_ring,
+        shm_threshold=spec.shm_threshold,
+        connect_timeout=spec.connect_timeout_s,
+        reconnect_attempts=spec.reconnect_attempts,
+        reconnect_backoff_s=spec.reconnect_backoff_s, token=spec.token)
+    plane.start()
+    # the pool reports alongside the plane so its eq.-1 window counters
+    # (batches, padded_slots, degenerate_batches) bridge to the parent
+    services: List[Service] = [plane, plane.pool]
+    try:
+        exit_code = _heartbeat_loop(spec, control, services)
+    finally:
+        plane.stop()
+        plane.join(timeout=5.0)
+        try:
+            _report_once(spec, control, services)
+        except (TransportError, ChannelClosed):
+            pass
+        control.close()
     return exit_code
 
 

@@ -30,6 +30,12 @@ Exposed endpoints (JSON header ``m`` field):
   ``store.state``         (version, draining) — the drain protocol's poll
   ``store.drain``         remote ``begin_publish`` (drain signal)
   ``store.publish``       remote publish (a trainer across the wire)
+  ``infer.open``          inference-plane handshake: broker epoch + the
+                          client's submit-dedup watermark (replay base)
+  ``infer.submit``        one seq-numbered action request for the shared
+                          inference pool (at-most-once per epoch)
+  ``infer.result``        long-poll result delivery with cumulative acks
+                          (un-acked results are redelivered)
   ``worker.hello``        connect-mode handshake: shared-token auth, then
                           the supervisor assigns a slot and ships its spec
   ``worker.report``       child → parent metrics/health bridge; the reply
@@ -161,6 +167,7 @@ class TransportServer(Service):
         self._sinks: Dict[str, Any] = {}          # worker name -> host
         self._token = token
         self._hello: Optional[Callable[[Dict], Dict]] = None
+        self._infer: Optional[Any] = None
         self._shm_threshold = shm_threshold
         # put-stream dedup state, keyed by (chan, stream id); survives the
         # stream's connection so replays after a reconnect are applied at
@@ -201,6 +208,12 @@ class TransportServer(Service):
         """Install the ``worker.hello`` responder (the Supervisor): gets
         the authenticated request header, answers the slot assignment."""
         self._hello = handler
+
+    def set_inference(self, broker: Any) -> None:
+        """Install the ``infer.*`` responder (an
+        :class:`~repro.runtime.transport.inference_plane.InferenceBroker`):
+        the shared continuous-batching pool served behind this server."""
+        self._infer = broker
 
     # -- service surface ------------------------------------------------------
     def _run(self) -> None:
@@ -532,6 +545,23 @@ class TransportServer(Service):
                 self._store.publish(decode_pytree(body, copy=True),
                                     h["version"])
                 return {"ok": True}, b""
+            if m in ("infer.open", "infer.submit", "infer.result"):
+                if self._infer is None:
+                    return {"err": "this server hosts no inference "
+                                   "plane"}, b""
+                if m == "infer.open":
+                    return dict(self._infer.handle_open(h)), b""
+                if m == "infer.submit":
+                    self.metrics.inc("infer_submits")
+                    return dict(self._infer.handle_submit(h, body)), b""
+                resp, rbody = self._infer.handle_result(h)
+                if rbody:
+                    # rides the generic reply data plane: want_ring pushes
+                    # the encoded result list through the connection's
+                    # ring, want_shm through a per-message segment
+                    self.metrics.inc("infer_results",
+                                     float(resp.get("count", 0)))
+                return dict(resp), rbody
             if m == "worker.hello":
                 if self._token and h.get("token") != self._token:
                     self.metrics.inc("auth_failures")

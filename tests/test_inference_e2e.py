@@ -1,0 +1,112 @@
+"""Disaggregated-inference-plane acceptance: spawned rollout workers
+served by one SHARED continuous-batching tier behind the transport, with
+``kill -9`` of the tier mid-episode recovering through supervised restart
+(same fixed port), worker redial, and exactly-once result replay.
+
+These spawn jax-initializing subprocesses — slow by nature; CI runs them
+in the dedicated inference-smoke job under a hard SIGKILL timeout."""
+import os
+import signal
+import threading
+import time
+
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import (RLConfig, RuntimeConfig, SupervisionConfig,
+                                TransportConfig)
+
+
+def _system(*, spawn_workers=1, inference_plane="spawn", restart="never",
+            max_restarts=2, seed=0):
+    from repro.runtime import AcceRLSystem
+    cfg = reduced(get_config("deepseek-7b"), layers=2, d_model=64)
+    rl = RLConfig(grad_accum=1, lr_policy=1e-4, lr_value=1e-3)
+    rt = RuntimeConfig(
+        num_rollout_workers=0, inference_batch=4,
+        transport=TransportConfig(
+            remote_rollout_workers=spawn_workers,
+            heartbeat_s=0.1, token="infer-e2e",
+            inference_plane=inference_plane,
+            reconnect_attempts=25, reconnect_backoff_s=0.1,
+            supervision=SupervisionConfig(
+                restart=restart, max_restarts=max_restarts,
+                backoff_initial_s=0.05, backoff_max_s=0.5)))
+    return AcceRLSystem(cfg, rl, rt, suite="spatial", segment_horizon=4,
+                        max_episode_steps=8, batch_episodes=4, seed=seed)
+
+
+@pytest.mark.slow
+def test_host_mode_serves_remote_workers_from_parent_pool():
+    """Host mode: the parent's own InferenceService answers ``infer.*``
+    requests from a spawned worker — with ZERO local rollout workers,
+    every request the parent pool serves arrived over the wire."""
+    sys_ = _system(spawn_workers=1, inference_plane="host", seed=0)
+    m = sys_.run_async(train_steps=2, wall_timeout_s=240.0)
+    assert m["train_steps"] >= 2
+    # the parent pool did the remote worker's inference
+    assert sys_.inference.requests_served > 0
+    srv = sys_.transport_server.metrics.snapshot()["counters"]
+    assert srv.get("infer_submits", 0) > 0
+    assert srv.get("infer_results", 0) > 0
+    entry = m["services"]["remote-rollout-0"]
+    assert entry["counters"]["env_steps"] > 0
+    # version tags flowed back over the wire into the worker's gauge
+    assert entry["gauges"]["policy_version"] >= 0
+
+
+@pytest.mark.slow
+def test_spawn_tier_sigkill_mid_episode_recovers_exactly_once():
+    """Acceptance: SIGKILL the shared inference tier mid-episode. The
+    Supervisor respawns it on the SAME fixed port, workers redial and
+    replay their in-flight requests to the new epoch, training reaches
+    its budget, and every service ends healthy with coherent policy
+    versions."""
+    sys_ = _system(spawn_workers=2, inference_plane="spawn",
+                   restart="on_failure", max_restarts=3, seed=1)
+    plane = sys_.inference_plane_host
+    assert plane is not None
+    addr_before = sys_.infer_address
+    worker_slots = sys_.remote_hosts
+    killed = [0]
+
+    def killer():
+        deadline = time.monotonic() + 180.0
+        while time.monotonic() < deadline:
+            # mid-episode: workers are producing (so requests are in
+            # flight against the tier) when the tier dies
+            if (any(s.env_steps > 0 for s in worker_slots)
+                    and plane.process is not None):
+                killed[0] = plane.process.pid
+                os.kill(plane.process.pid, signal.SIGKILL)
+                return
+            time.sleep(0.05)
+
+    t = threading.Thread(target=killer, daemon=True)
+    t.start()
+    m = sys_.run_async(train_steps=2, wall_timeout_s=300.0)
+    t.join(timeout=5.0)
+
+    assert killed[0], "killer never fired"
+    assert m["train_steps"] >= 2
+    assert plane.restarts >= 1, "tier kill was never detected"
+    # the replacement rebinds the SAME pre-allocated address — that is
+    # what lets workers simply redial instead of re-discovering the tier
+    assert sys_.infer_address == addr_before
+    health = sys_.health()
+    assert health["inference-plane"]["state"] == "stopped", health
+    assert health["inference-plane"]["error"] is None
+    for i in range(2):
+        assert health[f"remote-rollout-{i}"]["state"] == "stopped", health
+        entry = m["services"][f"remote-rollout-{i}"]
+        assert entry["counters"]["env_steps"] > 0
+        # coherent version tags across the kill: the gauge is the version
+        # the worker last rolled out with — a real published version, not
+        # a torn/stale sentinel
+        assert 0 <= entry["gauges"]["policy_version"] <= m["train_steps"]
+    # the tier's report bridges pool + broker pressure for ElasticPolicy
+    tier = m["services"]["inference-plane"]
+    assert tier["counters"]["requests"] > 0
+    assert "queue_depth" in tier["gauges"]
+    assert "window_fill" in tier["gauges"]
+    assert m["mean_policy_lag"] >= 0.0

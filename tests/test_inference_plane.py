@@ -1,0 +1,357 @@
+"""Inference-plane tests: eq.-1 window math properties, the
+``_collect_window`` anchoring regression, and the ``infer.*`` wire
+contract (dedup, cumulative acks, reconnect replay, drain-mid-stream,
+version-tag parity with the local path)."""
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import RuntimeConfig
+from repro.runtime import InferenceService, VersionedWeightStore
+from repro.runtime.inference import _Request, pad_to_bucket, split_window
+from repro.runtime.transport.inference_plane import (InferenceBroker,
+                                                     RemoteInferenceClient)
+from repro.runtime.transport.server import TransportServer
+
+
+def _tiny():
+    import dataclasses
+    cfg = reduced(get_config("deepseek-7b"), layers=2, d_model=64)
+    return dataclasses.replace(cfg, num_prefix_tokens=1)
+
+
+def _obs(rng, cfg):
+    return (rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+            rng.random(192).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# window math properties (seeded sweep — no hypothesis in the image)
+# ---------------------------------------------------------------------------
+
+def test_split_window_pad_properties():
+    """For any n and bucket ladder: the split partitions n, no chunk
+    exceeds the largest bucket, and the pad accounting that feeds the
+    ``padded_slots`` counter is exact and non-negative."""
+    rng = np.random.default_rng(7)
+    ladders = [(1, 2, 4, 8, 16, 32), (4, 8), (1, 3, 7, 20), (5,)]
+    for _ in range(500):
+        buckets = ladders[rng.integers(len(ladders))]
+        n = int(rng.integers(1, 200))
+        sizes = split_window(n, buckets)
+        assert sum(sizes) == n                       # partitions n
+        assert all(1 <= s <= buckets[-1] for s in sizes)
+        # all-but-last chunks are FULL largest buckets (no fragmentation)
+        assert all(s == buckets[-1] for s in sizes[:-1])
+        pads = [pad_to_bucket(s, buckets) - s for s in sizes]
+        assert all(p >= 0 for p in pads)
+        # padded batch sizes are real buckets
+        for s, p in zip(sizes, pads):
+            assert (s + p) in buckets
+        # the eq.-1 accounting InferenceService increments per batch
+        assert sum(pads) == sum(
+            pad_to_bucket(s, buckets) for s in sizes) - n
+
+
+def test_pad_to_bucket_monotone_and_tight():
+    buckets = (1, 2, 4, 8, 16, 32)
+    for n in range(1, 33):
+        nb = pad_to_bucket(n, buckets)
+        assert nb >= n and nb in buckets
+        # tight: no smaller bucket also fits
+        assert all(b < n for b in buckets if b < nb)
+
+
+# ---------------------------------------------------------------------------
+# _collect_window anchoring regression (satellite: degenerate 1-item
+# batches when requests aged in the queue during a busy batch)
+# ---------------------------------------------------------------------------
+
+def test_collect_window_anchors_to_collection_start():
+    """Requests that sat queued while a previous batch was in flight must
+    NOT expire the window instantly: the T_max timer anchors to when
+    collection starts, so all queued requests are swept into one window."""
+    cfg = _tiny()
+    rt = RuntimeConfig(num_inference_workers=1, inference_batch=8,
+                       inference_max_wait_s=0.15)
+    svc = InferenceService(cfg, VersionedWeightStore(), rt)  # never started
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        obs, frame = _obs(rng, cfg)
+        req = _Request(obs, frame, 0)
+        req.t_arrival -= 10.0        # aged: queued during a busy batch
+        svc._q.put(req)
+    t0 = time.monotonic()
+    reqs = svc._collect_window()
+    elapsed = time.monotonic() - t0
+    # the buggy anchoring returned a DEGENERATE 1-item window immediately
+    # (t_now - t_arrival >= T_max on the first get)
+    assert len(reqs) == 3
+    assert elapsed >= 0.9 * rt.inference_max_wait_s
+    assert svc.metrics.snapshot()["series"]["queue_wait_s"]["count"] == 3
+
+
+def test_degenerate_batch_counter_and_gauges():
+    """A lone request served by T_max expiry counts as a degenerate batch
+    and the autoscaling gauges (queue depth, window fill) are exported."""
+    import jax
+    from repro.models.policy import init_policy_params
+    cfg = _tiny()
+    rt = RuntimeConfig(num_inference_workers=1, inference_batch=4,
+                       inference_max_wait_s=0.05)
+    store = VersionedWeightStore()
+    store.publish(init_policy_params(cfg, jax.random.PRNGKey(0)), 0)
+    svc = InferenceService(cfg, store, rt).start()
+    try:
+        rng = np.random.default_rng(0)
+        obs, frame = _obs(rng, cfg)
+        res = svc.submit(obs, frame, 0).result(timeout=120.0)
+        assert res["policy_version"] == 0
+        assert svc.degenerate_batches >= 1
+        gauges = svc.metrics.snapshot()["gauges"]
+        assert "queue_depth" in gauges and "window_fill" in gauges
+        assert 0.0 < gauges["window_fill"] <= 1.0
+    finally:
+        svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# broker unit contract: seq dedup, cumulative acks, redelivery
+# ---------------------------------------------------------------------------
+
+class _EchoPool:
+    """Resolves every request immediately with its step echoed back."""
+
+    def __init__(self):
+        self.submits = 0
+
+    def submit(self, obs, frame, step):
+        self.submits += 1
+        fut = Future()
+        fut.set_result({"actions": np.asarray(obs),
+                        "logp": np.zeros(2, np.float32),
+                        "value": float(step), "policy_version": 1})
+        return fut
+
+
+def _submit_body(seq):
+    from repro.runtime.transport.codec import encode_pytree
+    return encode_pytree({"obs": np.arange(4, dtype=np.int32),
+                          "frame": None, "step": seq})
+
+
+def test_broker_dedup_acks_and_redelivery():
+    from repro.runtime.transport.codec import decode_pytree
+    pool = _EchoPool()
+    broker = InferenceBroker(pool)
+    h = broker.handle_open({"client": "w0"})
+    assert h["ok"] and h["known_seq"] == -1
+
+    assert broker.handle_submit({"client": "w0", "seq": 0},
+                                _submit_body(0))["ok"]
+    # replayed frame: re-ACKed, never re-executed
+    dup = broker.handle_submit({"client": "w0", "seq": 0}, _submit_body(0))
+    assert dup.get("dup") and pool.submits == 1
+    assert broker.handle_submit({"client": "w0", "seq": 1},
+                                _submit_body(1))["ok"]
+    assert broker.handle_open({"client": "w0"})["known_seq"] == 1
+
+    resp, body = broker.handle_result({"client": "w0", "ack": 0,
+                                       "timeout": 1.0})
+    assert resp["ok"] and resp["base"] == 0 and resp["count"] == 2
+    items = decode_pytree(body, copy=True)
+    assert [int(i["seq"]) for i in items] == [0, 1]
+
+    # un-acked → redelivered verbatim (a lost reply loses nothing)
+    resp2, body2 = broker.handle_result({"client": "w0", "ack": 0,
+                                         "timeout": 1.0})
+    assert resp2["base"] == 0 and resp2["count"] == 2
+
+    # cumulative ack prunes; a STALE-EPOCH ack (beyond anything this
+    # broker delivered) is ignored rather than corrupting the outbox
+    resp3, _ = broker.handle_result({"client": "w0", "ack": 1000,
+                                     "timeout": 0.0})
+    assert resp3["ok"] and resp3["count"] == 2
+    resp4, _ = broker.handle_result({"client": "w0", "ack": 1,
+                                     "timeout": 0.0})
+    assert resp4["ok"] and resp4["base"] == 1 and resp4["count"] == 1
+    resp5, _ = broker.handle_result({"client": "w0", "ack": 2,
+                                     "timeout": 0.0})
+    assert not resp5["ok"]                  # fully acked: outbox is empty
+
+
+# ---------------------------------------------------------------------------
+# wire contract: client <-> server roundtrip, ring delivery, replay
+# ---------------------------------------------------------------------------
+
+class _SlowPool:
+    """Holds every future until released (models an in-flight batch)."""
+
+    def __init__(self):
+        self.held = []
+        self.lock = threading.Lock()
+        self.release_now = False
+
+    def submit(self, obs, frame, step):
+        fut = Future()
+        with self.lock:
+            if self.release_now:
+                fut.set_result(self._res(obs, step))
+            else:
+                self.held.append((fut, np.asarray(obs), step))
+        return fut
+
+    @staticmethod
+    def _res(obs, step):
+        return {"actions": np.asarray(obs), "logp": np.zeros(2, np.float32),
+                "value": float(step), "policy_version": 2}
+
+    def release(self):
+        with self.lock:
+            self.release_now = True
+            held, self.held = self.held, []
+        for fut, obs, step in held:
+            fut.set_result(self._res(obs, step))
+
+
+def test_remote_client_roundtrip_and_ring():
+    from repro.runtime.transport.channel import shared_memory
+    pool = _EchoPool()
+    srv = TransportServer()
+    srv.set_inference(InferenceBroker(pool))
+    srv.start()
+    try:
+        cli = RemoteInferenceClient(
+            srv.address, client_id="w0",
+            use_ring=shared_memory is not None)
+        futs = [cli.submit(np.arange(4, dtype=np.int32) * i, None, i)
+                for i in range(10)]
+        for i, f in enumerate(futs):
+            res = f.result(timeout=15.0)
+            assert res["value"] == float(i)
+            assert res["policy_version"] == 1
+            np.testing.assert_array_equal(res["actions"], np.arange(4) * i)
+        assert cli.stats()["results"] == 10
+        cli.close()
+    finally:
+        srv.stop()
+        srv.join(timeout=5.0)
+
+
+def test_unconfigured_server_rejects_infer():
+    from repro.runtime.transport.channel import TransportError, WireClient
+    srv = TransportServer()
+    srv.start()
+    try:
+        cli = WireClient(srv.address)
+        with pytest.raises(TransportError):
+            cli.request({"m": "infer.open", "client": "w0"})
+        cli.close()
+    finally:
+        srv.stop()
+        srv.join(timeout=5.0)
+
+
+def test_reconnect_replay_exactly_once_across_tier_restart():
+    """Kill the tier with requests in flight; a replacement broker (new
+    epoch, empty watermark) comes up on the SAME port. The client redials,
+    replays every un-answered request, and every future resolves exactly
+    once with a coherent result."""
+    pool1 = _SlowPool()
+    srv1 = TransportServer()
+    srv1.set_inference(InferenceBroker(pool1))
+    srv1.start()
+    host, port = srv1.address
+    cli = RemoteInferenceClient((host, port), client_id="w0",
+                                reconnect_attempts=40,
+                                reconnect_backoff_s=0.05)
+    futs = [cli.submit(np.full(3, i, np.int32), None, i) for i in range(6)]
+    # in flight: the pool holds all 6; "kill" the tier (results lost)
+    assert not any(f.done() for f in futs)
+    srv1.stop()
+    srv1.join(timeout=5.0)
+
+    pool2 = _SlowPool()
+    pool2.release_now = True                 # replacement serves instantly
+    srv2 = TransportServer(host=host, port=port)
+    srv2.set_inference(InferenceBroker(pool2))
+    srv2.start()
+    try:
+        for i, f in enumerate(futs):
+            res = f.result(timeout=30.0)     # replayed to the new epoch
+            assert res["value"] == float(i)
+            np.testing.assert_array_equal(res["actions"],
+                                          np.full(3, i, np.int32))
+        # exactly-once: one resolve per request, no duplicates surfaced
+        assert cli.stats()["results"] == 6
+        assert cli.epoch_changes >= 1
+        # the client keeps working against the replacement
+        late = cli.submit(np.full(3, 9, np.int32), None, 9)
+        assert late.result(timeout=15.0)["value"] == 9.0
+        cli.close()
+    finally:
+        srv2.stop()
+        srv2.join(timeout=5.0)
+
+
+def test_version_tag_parity_and_drain_swap_mid_stream():
+    """Remote results carry the SAME policy_version the local submit path
+    reports, and a drain+publish mid-stream moves new requests to the new
+    version without torn tags."""
+    import jax
+    from repro.models.policy import init_policy_params
+    cfg = _tiny()
+    rt = RuntimeConfig(num_inference_workers=1, inference_batch=4,
+                       inference_max_wait_s=0.02)
+    store = VersionedWeightStore()
+    params = init_policy_params(cfg, jax.random.PRNGKey(0))
+    store.publish(params, 0)
+    svc = InferenceService(cfg, store, rt).start()
+    srv = TransportServer()
+    srv.set_inference(InferenceBroker(svc))
+    srv.start()
+    try:
+        cli = RemoteInferenceClient(srv.address, client_id="w0")
+        rng = np.random.default_rng(0)
+        obs, frame = _obs(rng, cfg)
+        remote = cli.submit(obs, frame, 0).result(timeout=120.0)
+        local = svc.submit(obs, frame, 0).result(timeout=120.0)
+        assert remote["policy_version"] == local["policy_version"] == 0
+        assert remote["actions"].shape == local["actions"].shape
+        assert isinstance(remote["value"], float)
+
+        # drain-flag swap mid-stream: requests submitted while draining
+        # are served only after the swap, tagged with the NEW version
+        store.begin_publish()
+        queued = [cli.submit(*_obs(rng, cfg), 1) for _ in range(3)]
+        time.sleep(0.1)
+        assert not any(f.done() for f in queued)   # pool honors the drain
+        store.publish(params, 1)
+        versions = {f.result(timeout=120.0)["policy_version"]
+                    for f in queued}
+        assert versions == {1}
+        cli.close()
+    finally:
+        srv.stop()
+        srv.join(timeout=5.0)
+        svc.stop()
+
+
+def test_spec_wire_roundtrip_inference_fields():
+    from repro.configs.base import RLConfig
+    from repro.runtime.transport import (RemoteWorkerSpec, spec_from_wire,
+                                         spec_to_wire)
+    spec = RemoteWorkerSpec(
+        name="w0", cfg=_tiny(), rl=RLConfig(), rt=RuntimeConfig(),
+        address=("127.0.0.1", 1234), inference="remote",
+        infer_address=("127.0.0.1", 5678),
+        infer_listen=("0.0.0.0", 9012))
+    got = spec_from_wire(spec_to_wire(spec))
+    assert got.inference == "remote"
+    assert got.infer_address == ("127.0.0.1", 5678)
+    assert got.infer_listen == ("0.0.0.0", 9012)
+    assert isinstance(got.infer_address, tuple)
