@@ -252,6 +252,12 @@ class SupervisionConfig:
     staleness_cap: float = 0.0        # published - oldest-acted version;
                                       # 0 disables the staleness signal
     drain_timeout_s: float = 10.0
+    # inference-tier pressure (the queue_depth/window_fill gauges the
+    # disaggregated plane bridges): a tier with queue depth >= tier_queue_hot
+    # or window fill >= tier_fill_hot counts as saturated, which is an
+    # additional scale-up trigger (and blocks scale-down) — 0 disables
+    tier_queue_hot: float = 0.0
+    tier_fill_hot: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -317,6 +323,26 @@ class TransportConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Observability plane (runtime/telemetry.py).
+
+    ``sink=True`` registers a TelemetrySink service that samples every
+    service's metrics/health into bounded history (and ``sink_path`` as
+    JSONL), served remotely through the ``metrics.snapshot`` endpoint.
+    Span/trace RECORDING is import-gated separately by the REPRO_TRACE
+    env var (set automatically by ``launch/train.py --trace-out``) — it
+    must be decided before the hot modules import, which a config field
+    evaluated afterwards cannot do."""
+
+    sink: bool = False
+    sink_interval_s: float = 1.0
+    sink_history: int = 256
+    sink_path: str = ""               # JSONL history file ("" = memory only)
+    trace_out: str = ""               # Chrome-trace JSON dump path written
+                                      # by the launcher after the run
+
+
+@dataclasses.dataclass(frozen=True)
 class RuntimeConfig:
     """Asynchronous runtime (paper §3, eq. 1)."""
 
@@ -347,6 +373,9 @@ class RuntimeConfig:
     # whose channels/weight endpoints cross the boundary over this config.
     transport: TransportConfig = dataclasses.field(
         default_factory=TransportConfig)
+    # -- observability plane (runtime/telemetry) -----------------------------
+    telemetry: TelemetryConfig = dataclasses.field(
+        default_factory=TelemetryConfig)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -35,7 +35,17 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
+import sys
 import time
+
+# --trace-out arms the observability plane. Tracing is IMPORT-gated (every
+# instrumented module binds its _tel at import time, keeping the off path
+# free), so the env flag must be up before ANY repro import below —
+# argparse has not run yet, scan argv directly.
+if any(a == "--trace-out" or a.startswith("--trace-out=")
+       for a in sys.argv[1:]):
+    os.environ.setdefault("REPRO_TRACE", "1")
 
 import jax
 import jax.numpy as jnp
@@ -112,6 +122,11 @@ def main() -> None:
                          "transport, 'spawn' runs a supervised shared "
                          "inference tier process; default: each worker "
                          "keeps a colocated pool")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write a Chrome-trace-event JSON (open in "
+                         "Perfetto / chrome://tracing) covering every "
+                         "process of the run; also arms the REPRO_TRACE "
+                         "span recorder and the telemetry sink")
     args = ap.parse_args()
     if args.resume_journal and not args.journal_dir:
         ap.error("--resume-journal needs --journal-dir")
@@ -183,7 +198,7 @@ def _run_remote_rollout(args) -> None:
     spawned child processes and/or connect-mode workers dialing in."""
     from repro.configs import reduced
     from repro.configs.base import (RuntimeConfig, SupervisionConfig,
-                                    TransportConfig)
+                                    TelemetryConfig, TransportConfig)
     from repro.runtime import AcceRLSystem
 
     cfg = reduced(get_config(args.arch), layers=2, d_model=64)
@@ -207,7 +222,9 @@ def _run_remote_rollout(args) -> None:
                 restart=args.restart,
                 max_restarts=args.max_restarts,
                 max_workers=args.elastic_workers,
-                min_workers=(1 if args.elastic_workers else 0))))
+                min_workers=(1 if args.elastic_workers else 0))),
+        telemetry=TelemetryConfig(sink=bool(args.trace_out),
+                                  trace_out=args.trace_out))
     system = AcceRLSystem(cfg, rl, rt, suite="spatial", segment_horizon=4,
                           max_episode_steps=12, batch_episodes=4)
     host, port = system.transport_server.address
@@ -235,6 +252,12 @@ def _run_remote_rollout(args) -> None:
             if key in counters:
                 line += f"  {key}={int(counters[key])}"
         print(line + (f"  error={h['error']}" if h["error"] else ""))
+    if args.trace_out:
+        # one file covers every process: the parent's own buffers plus
+        # the child events the server folded in from worker.report
+        from repro.runtime import telemetry
+        n = telemetry.dump(args.trace_out, process_name="train-parent")
+        print(f"trace: {n} events -> {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -20,14 +20,34 @@ Everything exposing ``pop_batch(n, timeout)`` is a valid trainer source
 from __future__ import annotations
 
 import abc
+import os
 import time
 from typing import Any, Dict, List, Optional
 
 from repro.data.replay import (BACKPRESSURE_POLICIES, FIFOReplayBuffer,
                                RingReplayBuffer)
 
+# Import-gated tracing (see transport.faults for the idiom).
+if os.environ.get("REPRO_TRACE"):
+    from repro.runtime import telemetry as _tel
+else:  # pragma: no cover - default path
+    _tel = None
+
 __all__ = ["BACKPRESSURE_POLICIES", "ExperienceChannel", "FifoChannel",
            "RingChannel", "MixedExperienceSource"]
+
+
+def _trace_pop(out: Optional[List[Any]], where: str) -> None:
+    """Mark a successful drain on the trace of its FIRST item: segments
+    carry ``_trace`` stamped by the rollout worker, so the replay hop
+    shows up on the same episode timeline as rollout.put/server.apply."""
+    if _tel is None or not out:
+        return
+    first = out[0]
+    trace = first.get("_trace") if isinstance(first, dict) else None
+    if trace is not None:
+        _tel.instant("replay.pop", cat="experience", trace=int(trace),
+                     args={"count": len(out), "src": where}, flow="step")
 
 
 class ExperienceChannel(abc.ABC):
@@ -99,12 +119,18 @@ class FifoChannel(ExperienceChannel):
 
     def pop_batch(self, n: int, timeout: Optional[float] = None
                   ) -> Optional[List[Any]]:
-        return self._buf.pop_batch(n, timeout=timeout)
+        out = self._buf.pop_batch(n, timeout=timeout)
+        if _tel is not None:
+            _trace_pop(out, "fifo")
+        return out
 
     def pop_many(self, max_items: int, timeout: Optional[float] = None
                  ) -> Optional[List[Any]]:
         # single lock acquisition in the buffer, not two pop_batch calls
-        return self._buf.pop_upto(max_items, timeout=timeout)
+        out = self._buf.pop_upto(max_items, timeout=timeout)
+        if _tel is not None:
+            _trace_pop(out, "fifo")
+        return out
 
     def drain(self) -> List[Any]:
         return self._buf.drain()
@@ -217,6 +243,8 @@ class MixedExperienceSource:
             if need <= 0:
                 out, self._pending = (self._pending[:n],
                                       self._pending[n:])
+                if _tel is not None:
+                    _trace_pop(out, "mixed")
                 return out
             taken_real += self._mix_round(need, want_real, taken_real)
             if len(self._pending) >= n:
@@ -239,6 +267,8 @@ class MixedExperienceSource:
             if self._pending:
                 out, self._pending = (self._pending[:max_items],
                                       self._pending[max_items:])
+                if _tel is not None:
+                    _trace_pop(out, "mixed")
                 return out
             self._mix_round(max_items, want_real, 0)
             if self._pending:

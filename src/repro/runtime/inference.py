@@ -21,6 +21,7 @@ one-batch-per-lockstep-tick to reproduce the synchronous step barrier.
 """
 from __future__ import annotations
 
+import os
 import queue
 import threading
 import time
@@ -35,6 +36,12 @@ from repro.models.policy import make_inference_fn
 from repro.models.transformer import FRONTEND_DIM
 from repro.runtime.service import Service
 from repro.runtime.weight_store import VersionedWeightStore
+
+# Import-gated tracing (see transport.faults for the idiom).
+if os.environ.get("REPRO_TRACE"):
+    from repro.runtime import telemetry as _tel
+else:  # pragma: no cover - default path
+    _tel = None
 
 
 class _Request:
@@ -87,6 +94,9 @@ class InferenceService(Service):
         # live eq.-1 window parameters (schedulers may re-shape these)
         self.window_batch = rt.inference_batch
         self.window_wait_s = rt.inference_max_wait_s
+        # versions whose first post-swap action has been trace-marked
+        # (closes the publish -> acquire -> first-action flow)
+        self._first_action_traced: set = set()
 
     # -- registry-backed counters ----------------------------------------------
     @property
@@ -150,14 +160,30 @@ class InferenceService(Service):
                 if t_start is None:
                     t_start = now
                 reqs.append(r)
-                self.metrics.record("queue_wait_s",
-                                    max(now - r.t_arrival, 0.0))
+                wait = max(now - r.t_arrival, 0.0)
+                self.metrics.record("queue_wait_s", wait)
+                self.metrics.observe("queue_wait_s", wait)
             except queue.Empty:
                 pass
             if reqs and (len(reqs) >= b or
                          time.monotonic() - t_start >= t_max):
+                # eq.-1 vital: how long the window took to fill (or time
+                # out) from the first request picked up to dispatch
+                self.metrics.observe("window_fill_s",
+                                     time.monotonic() - t_start)
                 return reqs
         return reqs
+
+    def _note_swap(self, version: int) -> None:
+        self.metrics.inc("weight_swaps")
+        # bridged gauge: remote workers report which policy version
+        # their colocated inference pool is serving
+        self.metrics.set_gauge("weight_version", float(version))
+        if _tel is not None:
+            # middle leg of the policy-lag flow (version is the flow id)
+            _tel.instant("weights.acquire", cat="weights",
+                         trace=int(version),
+                         args={"version": int(version)}, flow="step")
 
     def _run(self) -> None:
         params, version = None, -1
@@ -167,10 +193,7 @@ class InferenceService(Service):
                 got = self.store.acquire(newer_than=version, timeout=0.1)
                 if got is not None:
                     params, version = got
-                    self.metrics.inc("weight_swaps")
-                    # bridged gauge: remote workers report which policy
-                    # version their colocated inference pool is serving
-                    self.metrics.set_gauge("weight_version", float(version))
+                    self._note_swap(version)
                 if params is None:
                     continue
             reqs = self._collect_window()
@@ -184,8 +207,7 @@ class InferenceService(Service):
                 got = self.store.acquire(newer_than=version, timeout=0.1)
                 if got is not None:
                     params, version = got
-                    self.metrics.inc("weight_swaps")
-                    self.metrics.set_gauge("weight_version", float(version))
+                    self._note_swap(version)
                     break
             if len(reqs) == 1:
                 # a 1-item window after a non-empty wait is the shape the
@@ -230,6 +252,15 @@ class InferenceService(Service):
                 })
             self.metrics.inc("batches")
             self.metrics.inc("requests", n)
+            if (_tel is not None
+                    and version not in self._first_action_traced):
+                # closes the publish -> acquire -> first-action flow:
+                # the first batch served with this weight version
+                self._first_action_traced.add(version)
+                _tel.instant("infer.first_action", cat="weights",
+                             trace=int(version),
+                             args={"version": int(version), "batch": n},
+                             flow="end")
 
 
 def _frame_to_prefix(frames: np.ndarray) -> np.ndarray:

@@ -21,6 +21,7 @@ the examples, and the launchers, with the full per-service snapshot under
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -214,6 +215,22 @@ class AcceRLSystem:
                         liveness_floor_s=sup.liveness_floor_s)))
             if sup.max_workers > 0:
                 self._enable_elastic(make_spec, n_remote)
+        # observability plane: a TelemetrySink samples the registry into
+        # timestamped history (and serves metrics.snapshot when a
+        # TransportServer is up). Armed by config or by the REPRO_TRACE
+        # env so traced runs get the sink without extra flags; the
+        # telemetry module import is deliberately lazy — untraced,
+        # unsinked runs never load it.
+        tel = rt.telemetry
+        self.telemetry_sink = None
+        if tel.sink or os.environ.get("REPRO_TRACE"):
+            from repro.runtime.telemetry import TelemetrySink
+            self.telemetry_sink = self.registry.register(TelemetrySink(
+                self.registry, interval_s=tel.sink_interval_s,
+                history=tel.sink_history, path=tel.sink_path))
+            if self.transport_server is not None:
+                self.transport_server.snapshot_provider = \
+                    self.telemetry_sink.sample
 
     # --------------------------------------------------------------- elastic
     def _enable_elastic(self, make_spec, n_static: int) -> None:
@@ -232,6 +249,8 @@ class AcceRLSystem:
             scale_up_depth=sup.scale_up_depth,
             scale_down_depth=sup.scale_down_depth,
             staleness_cap=sup.staleness_cap,
+            tier_queue_hot=sup.tier_queue_hot,
+            tier_fill_hot=sup.tier_fill_hot,
             drain_timeout_s=sup.drain_timeout_s)
 
         def elastic_spec(seq: int):
@@ -251,8 +270,16 @@ class AcceRLSystem:
                     versions.append(float(v))
             staleness = (published - min(versions)
                          if versions and published >= 0 else 0.0)
+            # inference-tier pressure: prefer the disaggregated tier's
+            # bridged gauges (spawn mode) over the parent's local pool
+            src = (self.inference_plane_host.metrics
+                   if self.inference_plane_host is not None
+                   else self.inference.metrics)
+            g = src.snapshot()["gauges"]
             return {"depth_frac": float(depth_frac),
-                    "staleness": float(max(staleness, 0.0))}
+                    "staleness": float(max(staleness, 0.0)),
+                    "infer_queue_depth": float(g.get("queue_depth", 0.0)),
+                    "infer_window_fill": float(g.get("window_fill", 0.0))}
 
         def register_slot(slot) -> None:
             # NOT on the ServiceRegistry: this runs on the supervision

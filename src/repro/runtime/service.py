@@ -25,7 +25,9 @@ reverse. World-model attachment (paper §4 "plug-and-play") is literally
 """
 from __future__ import annotations
 
+import collections
 import contextlib
+import math
 import threading
 import time
 import traceback
@@ -42,12 +44,83 @@ class ServiceState:
     FAILED = "failed"
 
 
+#: recent-value window kept per series (``record``); the exact all-time
+#: count/total ride alongside, so ``series_mean`` covers every observation
+#: while memory stays O(window) over arbitrarily long runs
+SERIES_WINDOW = 512
+
+#: log2 histogram layout: bucket 0 holds v < 2^HIST_MIN_EXP (and v <= 0),
+#: bucket i holds [2^(HIST_MIN_EXP+i-1), 2^(HIST_MIN_EXP+i)), the top
+#: bucket is open-ended. 46 buckets span ~1 µs to ~16e6 — seconds-scale
+#: latencies and version/count-scale lags share one fixed layout, which is
+#: what makes histograms from different incarnations mergeable bucketwise.
+HIST_MIN_EXP = -20
+HIST_BUCKETS = 46
+
+
+def _hist_bucket(value: float) -> int:
+    if value <= 0.0 or value < 2.0 ** HIST_MIN_EXP:
+        return 0
+    idx = int(math.floor(math.log2(value))) - HIST_MIN_EXP + 1
+    return max(0, min(idx, HIST_BUCKETS - 1))
+
+
+def _hist_copy(h: Dict) -> Dict:
+    out = dict(h)
+    out["buckets"] = {str(k): int(v) for k, v in h.get("buckets",
+                                                       {}).items()}
+    return out
+
+
+def _hist_merge(a: Optional[Dict], b: Optional[Dict]) -> Dict:
+    """Bucketwise sum of two histogram summaries (either may be None).
+    Pure addition — the merge is associative and commutative, so folds
+    across incarnations and across services cannot double-count."""
+    if not a:
+        return _hist_copy(b or {"count": 0, "sum": 0.0, "min": 0.0,
+                                "max": 0.0, "buckets": {}})
+    if not b:
+        return _hist_copy(a)
+    out = _hist_copy(a)
+    out["count"] = int(a.get("count", 0)) + int(b.get("count", 0))
+    out["sum"] = float(a.get("sum", 0.0)) + float(b.get("sum", 0.0))
+    out["min"] = min(a.get("min", b.get("min", 0.0)), b.get("min", 0.0))
+    out["max"] = max(a.get("max", b.get("max", 0.0)), b.get("max", 0.0))
+    for k, v in b.get("buckets", {}).items():
+        k = str(k)
+        out["buckets"][k] = out["buckets"].get(k, 0) + int(v)
+    return out
+
+
+class _SeriesStore:
+    """Bounded series storage: exact cumulative count/total plus a recent
+    window — ``series_mean`` stays the mean over ALL observations while a
+    week-long run no longer grows a per-observation list."""
+
+    __slots__ = ("count", "total", "window")
+
+    def __init__(self, window: int = SERIES_WINDOW):
+        self.count = 0
+        self.total = 0.0
+        self.window: "collections.deque[float]" = collections.deque(
+            maxlen=window)
+
+    def add(self, value: float) -> None:
+        self.count += 1
+        self.total += value
+        self.window.append(value)
+
+
 class MetricsRegistry:
-    """Thread-safe counters, gauges and scalar series for one service.
+    """Thread-safe counters, gauges, scalar series and histograms for one
+    service.
 
     Counters are monotone floats (``inc``); gauges are last-write-wins;
-    series accumulate observations (episode returns, policy lag) and
-    snapshot as count/mean/last so the report stays bounded.
+    series accumulate observations (episode returns, policy lag) into a
+    bounded window + exact running mean and snapshot as count/mean/last;
+    histograms (``observe``) bucket observations into a fixed log2 layout
+    so distributions (queue waits, batch ages, policy lag) survive the
+    wire and merge across worker incarnations without double-counting.
     """
 
     def __init__(self, name: str = ""):
@@ -55,8 +128,9 @@ class MetricsRegistry:
         self._lock = threading.Lock()
         self._counters: Dict[str, float] = {}
         self._gauges: Dict[str, float] = {}
-        self._series: Dict[str, List[float]] = {}
-        # cross-process bridge: counters/gauges/series adopted from a
+        self._series: Dict[str, _SeriesStore] = {}
+        self._hists: Dict[str, Dict] = {}
+        # cross-process bridge: counters/gauges/series/hists adopted from a
         # remote replica (a supervised worker slot mirrors its child
         # through these). Counters are split into the CURRENT incarnation's
         # absolute values plus a base folded in at each restart
@@ -68,6 +142,8 @@ class MetricsRegistry:
         self._remote_gauges: Dict[str, float] = {}
         self._remote_series: Dict[str, Dict] = {}
         self._remote_series_base: Dict[str, Dict] = {}
+        self._remote_hists: Dict[str, Dict] = {}
+        self._remote_hist_base: Dict[str, Dict] = {}
 
     # -- counters -----------------------------------------------------------
     def inc(self, key: str, by: float = 1.0) -> float:
@@ -100,19 +176,56 @@ class MetricsRegistry:
     # -- series -------------------------------------------------------------
     def record(self, key: str, value: float) -> None:
         with self._lock:
-            self._series.setdefault(key, []).append(float(value))
+            s = self._series.get(key)
+            if s is None:
+                s = self._series[key] = _SeriesStore()
+            s.add(float(value))
 
     def series(self, key: str) -> List[float]:
+        """The recent window of observations (newest last) — bounded at
+        ``SERIES_WINDOW``; use ``series_mean``/``snapshot`` for all-time
+        aggregates."""
         with self._lock:
-            return list(self._series.get(key, ()))
+            s = self._series.get(key)
+            return list(s.window) if s is not None else []
 
     def series_mean(self, key: str, default: float = 0.0) -> float:
         with self._lock:
             s = self._series.get(key)
-            if s:
-                return sum(s) / len(s)
+            if s is not None and s.count:
+                return s.total / s.count
             remote = self._merged_remote_series().get(key)
             return remote["mean"] if remote else default
+
+    # -- histograms ---------------------------------------------------------
+    def observe(self, key: str, value: float) -> None:
+        """Add one observation to the fixed log2-bucket histogram ``key``
+        (see ``HIST_MIN_EXP``/``HIST_BUCKETS``). Bucket keys are strings
+        so summaries survive JSON framing and the journal unchanged."""
+        value = float(value)
+        with self._lock:
+            h = self._hists.get(key)
+            if h is None:
+                h = self._hists[key] = {"count": 0, "sum": 0.0,
+                                        "min": value, "max": value,
+                                        "buckets": {}}
+            h["count"] += 1
+            h["sum"] += value
+            h["min"] = min(h["min"], value)
+            h["max"] = max(h["max"], value)
+            b = str(_hist_bucket(value))
+            h["buckets"][b] = h["buckets"].get(b, 0) + 1
+
+    def hist(self, key: str, default: Optional[Dict] = None
+             ) -> Optional[Dict]:
+        """Merged histogram summary (local + every remote incarnation):
+        ``{"count", "sum", "min", "max", "buckets": {str(idx): n}}``."""
+        with self._lock:
+            out = self._merged_remote_hists().get(key)
+            local = self._hists.get(key)
+            if local:
+                out = _hist_merge(out, local)
+            return out if out else default
 
     # -- cross-process bridging ---------------------------------------------
     def apply_remote(self, snapshot: Dict) -> None:
@@ -132,6 +245,8 @@ class MetricsRegistry:
                 self._remote_gauges[k] = float(v)
             self._remote_series = {k: dict(v) for k, v in
                                    snapshot.get("series", {}).items()}
+            self._remote_hists = {k: _hist_copy(v) for k, v in
+                                  snapshot.get("hists", {}).items()}
 
     def begin_remote_incarnation(self) -> None:
         """A supervised worker is being restarted: fold the dead
@@ -147,6 +262,8 @@ class MetricsRegistry:
             self._remote_gauges = {}
             self._remote_series_base = self._merged_remote_series()
             self._remote_series = {}
+            self._remote_hist_base = self._merged_remote_hists()
+            self._remote_hists = {}
 
     def _merged_remote_series(self) -> Dict[str, Dict]:
         """Count-weighted fold of the base (dead incarnations) and current
@@ -167,6 +284,15 @@ class MetricsRegistry:
                 }
         return merged
 
+    def _merged_remote_hists(self) -> Dict[str, Dict]:
+        """Bucketwise fold of the base (dead incarnations) and current
+        remote histograms. Caller holds the lock."""
+        merged = {k: _hist_copy(v) for k, v in
+                  self._remote_hist_base.items()}
+        for k, cur in self._remote_hists.items():
+            merged[k] = _hist_merge(merged.get(k), cur)
+        return merged
+
     # -- timers -------------------------------------------------------------
     @contextlib.contextmanager
     def timer(self, key: str):
@@ -181,11 +307,14 @@ class MetricsRegistry:
         with self._lock:
             series = self._merged_remote_series()
             series.update({
-                k: {"count": len(v),
-                    "mean": (sum(v) / len(v)) if v else 0.0,
-                    "last": v[-1] if v else 0.0}
-                for k, v in self._series.items()
+                k: {"count": s.count,
+                    "mean": (s.total / s.count) if s.count else 0.0,
+                    "last": s.window[-1] if s.window else 0.0}
+                for k, s in self._series.items()
             })
+            hists = self._merged_remote_hists()
+            for k, h in self._hists.items():
+                hists[k] = _hist_merge(hists.get(k), h)
             counters = dict(self._counters)
             for k in set(self._remote_counters) | set(
                     self._remote_counter_base):
@@ -196,6 +325,7 @@ class MetricsRegistry:
                 "counters": counters,
                 "gauges": {**self._gauges, **self._remote_gauges},
                 "series": series,
+                "hists": hists,
             }
 
 
@@ -252,6 +382,11 @@ class Service:
         self._state = ServiceState.NEW
         self._state_lock = threading.Lock()
         self.error: Optional[BaseException] = None
+        #: structured record of the crash that FAILED this service (None
+        #: while healthy): service/incarnation/timestamps/traceback —
+        #: surfaced through ``health()`` and the telemetry sink instead of
+        #: living only on a stderr nobody captured
+        self.crash: Optional[Dict] = None
         self.started_at: Optional[float] = None
 
     # -- subclass surface ---------------------------------------------------
@@ -294,20 +429,36 @@ class Service:
         self._set_state(ServiceState.RUNNING)
         return self
 
+    def _crash_record(self, error: BaseException,
+                      tb: Optional[str] = None) -> Dict:
+        return {
+            "service": self.name,
+            "incarnation": int(getattr(self, "incarnation", 0)),
+            "t_mono": time.monotonic(),
+            "time": time.time(),
+            "thread": threading.current_thread().name,
+            "error": repr(error),
+            "traceback": tb if tb is not None else "".join(
+                traceback.format_exception(type(error), error,
+                                           error.__traceback__)),
+        }
+
     def _guard(self, target: Callable[[], None]) -> None:
         try:
             target()
         except BaseException as e:   # noqa: BLE001 — surface crashes as health
             self.error = e
+            self.crash = self._crash_record(e, traceback.format_exc())
             with self._state_lock:
                 self._state = ServiceState.FAILED
-            traceback.print_exc()
+            traceback.print_exc()    # stderr stays useful for foreground runs
 
     def mark_failed(self, error: BaseException) -> None:
         """Mark this service FAILED from outside its own threads — how a
         supervisor surfaces a failure that happened in another process
         (or on the wire) with the exact semantics of a local crash."""
         self.error = error
+        self.crash = self._crash_record(error)
         with self._state_lock:
             self._state = ServiceState.FAILED
 
@@ -339,7 +490,8 @@ class Service:
     def health(self) -> Dict:
         return {"state": self.status, "healthy": self.healthy,
                 "uptime_s": self.uptime_s,
-                "error": repr(self.error) if self.error else None}
+                "error": repr(self.error) if self.error else None,
+                "crash": self.crash}
 
     @property
     def uptime_s(self) -> float:

@@ -21,6 +21,8 @@ blending ``B`` and ``B_img`` when a world model is attached.
 """
 from __future__ import annotations
 
+import functools
+import os
 import time
 from typing import Dict, List
 
@@ -34,9 +36,34 @@ from repro.models.transformer import FRONTEND_DIM
 from repro.runtime.service import Service
 from repro.runtime.weight_store import VersionedWeightStore
 
+# Import-gated tracing (see transport.faults for the idiom).
+if os.environ.get("REPRO_TRACE"):
+    from repro.runtime import telemetry as _tel
+else:  # pragma: no cover - default path
+    _tel = None
 
-def collate_segments(segments: List[Dict[str, np.ndarray]]) -> TrajectoryBatch:
-    """Stack rollout segments into a TrajectoryBatch (prefetcher thread)."""
+
+def collate_segments(segments: List[Dict[str, np.ndarray]],
+                     metrics=None) -> TrajectoryBatch:
+    """Stack rollout segments into a TrajectoryBatch (prefetcher thread).
+
+    When tracing is on, rollout workers stamp ``_trace``/``_t_put`` into
+    each segment; the trainer-side span here closes the per-episode flow
+    (rollout.put -> server.apply -> trainer.collate) and the end-to-end
+    batch age lands in the ``batch_age_s`` histogram.
+    """
+    if _tel is not None:
+        now = time.time()
+        for s in segments:
+            trace = s.get("_trace")
+            if trace is None:
+                continue
+            _tel.instant("trainer.collate", cat="trainer",
+                         trace=int(trace),
+                         args={"batch": len(segments)}, flow="end")
+            if metrics is not None and s.get("_t_put") is not None:
+                metrics.observe("batch_age_s",
+                                max(now - float(s["_t_put"]), 0.0))
     stack = lambda k: np.stack([s[k] for s in segments])
     frames = stack("frames")                        # [B, T+1, F_env]
     b, tp1, f = frames.shape
@@ -70,9 +97,10 @@ class TrainerWorker(Service):
         self.state: TrainState = init_train_state(
             cfg, jax.random.PRNGKey(seed))
         self._step_fn = make_train_step(cfg, rl, donate=False)
-        self.prefetcher = Prefetcher(source, batch_episodes,
-                                     collate_segments,
-                                     depth=rt.prefetch_depth)
+        self.prefetcher = Prefetcher(
+            source, batch_episodes,
+            functools.partial(collate_segments, metrics=self.metrics),
+            depth=rt.prefetch_depth)
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_interval = checkpoint_interval
         self.metrics_log: List[Dict] = []
@@ -94,17 +122,27 @@ class TrainerWorker(Service):
     def busy_s(self) -> float:
         return self.metrics.counter("busy_s")
 
+    def _publish(self, version: int, step: int = 0) -> None:
+        """Publish weights and open the policy-lag trace flow. The version
+        is the flow id on both ends, so publish -> acquire -> first action
+        line up in the trace viewer without any shared state."""
+        self.store.publish(self.state.params, version)
+        if _tel is not None:
+            _tel.instant("weights.publish", cat="weights", trace=version,
+                         args={"version": version, "step": step},
+                         flow="start")
+
     # -- lifecycle -------------------------------------------------------------
     def on_start(self) -> None:
         # version 0 published so inference can begin before the first step
-        self.store.publish(self.state.params, 0)
+        self._publish(0)
         self.prefetcher.start()
 
     def begin_inline(self) -> None:
         """Scheduler-driven mode: publish v0 and mark the clock, without
         the free-running thread or the prefetcher."""
         self.started_at = time.monotonic()
-        self.store.publish(self.state.params, 0)
+        self._publish(0)
 
     def stop(self) -> None:
         was_running = bool(self._threads)
@@ -126,13 +164,14 @@ class TrainerWorker(Service):
             version = int(self.state.version)
             lag = version - float(np.mean(batch.policy_version))
             self.metrics.record("policy_lag", lag)
+            self.metrics.observe("policy_lag", lag)
             self.state, metrics = self._step_fn(self.state, batch)
             steps = int(self.metrics.inc("steps"))
             self.metrics.inc("samples", float(np.asarray(batch.mask).sum()))
             if steps % self.rt.weight_sync_interval == 0:
                 if self.rt.drain:
                     self.store.begin_publish()     # drain signal, App. D.6
-                self.store.publish(self.state.params, version + 1)
+                self._publish(version + 1, step=steps)
             if (self.checkpoint_dir and self.checkpoint_interval
                     and steps % self.checkpoint_interval == 0):
                 from repro.data import checkpoint

@@ -67,6 +67,14 @@ if os.environ.get("REPRO_FAULTS"):
 else:
     _fault = None
 
+# import-gated tracing (see runtime.telemetry, same idiom): when on, the
+# active trace context rides put-frame headers (``tr``/``sp``) so the
+# server can join its apply span to the producer's flush span
+if os.environ.get("REPRO_TRACE"):
+    from repro.runtime import telemetry as _tel
+else:
+    _tel = None
+
 POLL_S = 0.5          # per-RPC slice of a long pop/acquire wait
 
 
@@ -403,9 +411,10 @@ class PutStream:
         self._reconnect_backoff_max_s = reconnect_backoff_max_s
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
-        # seq -> (encoded blob, item count); kept until acked so a
-        # reconnect can replay the window
-        self._pending: "collections.OrderedDict[int, Tuple[bytes, int]]" = \
+        # seq -> (encoded blob, item count, trace ctx or None); kept
+        # until acked so a reconnect can replay the window — the ctx
+        # rides along so replayed frames keep their trace ids
+        self._pending: "collections.OrderedDict[int, Tuple]" = \
             collections.OrderedDict()
         self._next_seq = 0
         self.closed = False
@@ -478,7 +487,8 @@ class PutStream:
             self._sendbuf_frames = 0
             self._sock.sendall(buf)
 
-    def _send_frame(self, seq: int, payload, count: int) -> None:
+    def _send_frame(self, seq: int, payload, count: int,
+                    ctx: Optional[Dict] = None) -> None:
         """Caller holds the lock. Ring mode writes the encoded blob
         straight into the ring reservation (``payload`` is an
         :class:`~repro.runtime.transport.codec.EncodePlan`, no
@@ -490,6 +500,8 @@ class PutStream:
             _fault("client.stream_send")
         header = {"m": "chan.put_stream", "chan": self.chan,
                   "stream": self.stream_id, "seq": seq, "count": count}
+        if ctx:
+            header.update(ctx)             # tr/sp trace ids ride the frame
         if self._ring is not None:
             view = self._ring.reserve(payload.nbytes, timeout=0)
             if view is None:
@@ -593,12 +605,13 @@ class PutStream:
                     waited = 0.0
             if self.closed or self.failed is not None:
                 return [False] * len(items)
+            ctx = _tel.wire_ctx() if _tel is not None else None
             seq = self._next_seq
             self._next_seq += 1
-            self._pending[seq] = (payload, len(items))
+            self._pending[seq] = (payload, len(items), ctx)
             self.items_enqueued += len(items)
             try:
-                self._send_frame(seq, payload, len(items))
+                self._send_frame(seq, payload, len(items), ctx)
                 self._maybe_flush_sendbuf()
                 if self._sendbuf:          # wake the deadline flusher so
                     self._cv.notify_all()  # a burst tail ships in ~2ms
@@ -718,8 +731,8 @@ class PutStream:
                 self._sendbuf_frames = 0
                 try:
                     self._open()
-                    for seq, (payload, count) in self._pending.items():
-                        self._send_frame(seq, payload, count)
+                    for seq, (payload, count, ctx) in self._pending.items():
+                        self._send_frame(seq, payload, count, ctx)
                         self.replayed_frames += 1
                     self._flush_sendbuf()
                 except (OSError, ValueError, TransportError, RingError):
@@ -857,10 +870,12 @@ class SocketChannel(ExperienceChannel):
                 return self._put_stream().put(item)
             except (TransportError, OSError):
                 return False
+        header = {"m": "chan.put", "chan": self.name}
+        if _tel is not None:
+            header.update(_tel.wire_ctx())
         try:
-            resp, _ = self._client.request(
-                {"m": "chan.put", "chan": self.name},
-                encode_pytree(item), oob=self.oob)
+            resp, _ = self._client.request(header, encode_pytree(item),
+                                           oob=self.oob)
         except ChannelClosed:
             return False
         return bool(resp.get("ok"))
@@ -880,11 +895,13 @@ class SocketChannel(ExperienceChannel):
                 raise                 # config error: surface it loudly
             except (TransportError, OSError):
                 return [False] * len(items)
+        header = {"m": "chan.put_many", "chan": self.name,
+                  "count": len(items)}
+        if _tel is not None:
+            header.update(_tel.wire_ctx())
         try:
-            resp, _ = self._client.request(
-                {"m": "chan.put_many", "chan": self.name,
-                 "count": len(items)},
-                encode_pytree(items), oob=self.oob)
+            resp, _ = self._client.request(header, encode_pytree(items),
+                                           oob=self.oob)
         except ChannelClosed:
             return [False] * len(items)
         verdicts = [bool(v) for v in resp.get("verdicts", ())]

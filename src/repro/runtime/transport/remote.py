@@ -26,6 +26,7 @@ report *reply* tells a superseded incarnation to stop.
 from __future__ import annotations
 
 import dataclasses
+import os
 import random
 import sys
 import time
@@ -33,8 +34,16 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import (HybridConfig, ModelConfig, MoEConfig,
                                 RLConfig, RuntimeConfig, SSMConfig,
-                                SupervisionConfig, TransportConfig)
-from repro.runtime.service import Service
+                                SupervisionConfig, TelemetryConfig,
+                                TransportConfig)
+from repro.runtime.service import Service, _hist_merge
+
+# Tracing is import-gated exactly like transport.faults: when REPRO_TRACE is
+# unset the telemetry module is never imported and child spans ride nowhere.
+if os.environ.get("REPRO_TRACE"):
+    from repro.runtime import telemetry as _tel
+else:  # pragma: no cover - default path, asserted import-inert in tests
+    _tel = None
 from repro.runtime.transport.channel import (ChannelClosed, ShmChannel,
                                              SocketChannel, TransportError,
                                              WireClient)
@@ -122,6 +131,8 @@ def spec_from_wire(wire: Dict) -> RemoteWorkerSpec:
     transport = dict(rt["transport"])
     transport["supervision"] = SupervisionConfig(**transport["supervision"])
     rt["transport"] = TransportConfig(**transport)
+    if rt.get("telemetry") is not None:
+        rt["telemetry"] = TelemetryConfig(**rt["telemetry"])
     rt["batch_buckets"] = tuple(rt["batch_buckets"])
     d["rt"] = RuntimeConfig(**rt)
     d["address"] = (str(d["address"][0]), int(d["address"][1]))
@@ -137,10 +148,11 @@ def spec_from_wire(wire: Dict) -> RemoteWorkerSpec:
 
 def _merge_snapshots(snaps: List[Dict]) -> Dict:
     """Fold per-service snapshots into one: counters sum, gauges last-wins,
-    series summaries combine count-weighted."""
+    series summaries combine count-weighted, histograms add bucketwise."""
     counters: Dict[str, float] = {}
     gauges: Dict[str, float] = {}
     series: Dict[str, Dict] = {}
+    hists: Dict[str, Dict] = {}
     for snap in snaps:
         for k, v in snap.get("counters", {}).items():
             counters[k] = counters.get(k, 0.0) + v
@@ -154,14 +166,17 @@ def _merge_snapshots(snaps: List[Dict]) -> Dict:
                                + s["mean"] * s["count"]) / total
                 cur["count"] = total
                 cur["last"] = s["last"]
-    return {"counters": counters, "gauges": gauges, "series": series}
+        for k, h in snap.get("hists", {}).items():
+            hists[k] = _hist_merge(hists.get(k), h)
+    return {"counters": counters, "gauges": gauges, "series": series,
+            "hists": hists}
 
 
 def _build_report(services: List[Service]) -> Dict:
     healthy = all(s.error is None for s in services)
     first_error = next((repr(s.error) for s in services
                         if s.error is not None), None)
-    return {
+    report = {
         "health": {"healthy": healthy,
                    "state": "failed" if not healthy else "running",
                    "error": first_error},
@@ -171,6 +186,13 @@ def _build_report(services: List[Service]) -> Dict:
         "merged": _merge_snapshots([s.metrics.snapshot()
                                     for s in services]),
     }
+    if _tel is not None:
+        # Child-side spans ride the heartbeat; the TransportServer folds
+        # them into its foreign buffer so one trace.dump covers every pid.
+        events = _tel.drain()
+        if events:
+            report["trace"] = events
+    return report
 
 
 def _report_once(spec: RemoteWorkerSpec, control: WireClient,

@@ -69,6 +69,7 @@ just in the benchmark.
 from __future__ import annotations
 
 import collections
+import contextlib
 import os
 import socket
 import threading
@@ -89,6 +90,14 @@ if os.environ.get("REPRO_FAULTS"):
     from repro.runtime.transport.faults import fault_point as _fault
 else:
     _fault = None
+
+# import-gated tracing (runtime.telemetry): the server joins producer
+# trace ids from frame headers into its own apply spans, folds child
+# trace buffers shipped via worker.report, and serves trace.dump
+if os.environ.get("REPRO_TRACE"):
+    from repro.runtime import telemetry as _tel
+else:
+    _tel = None
 
 __all__ = ["TransportServer"]
 
@@ -168,6 +177,10 @@ class TransportServer(Service):
         self._token = token
         self._hello: Optional[Callable[[Dict], Dict]] = None
         self._infer: Optional[Any] = None
+        # metrics.snapshot endpoint source: the orchestrator points this
+        # at its TelemetrySink (whole-registry sample); unset, the
+        # endpoint serves this server's own registry
+        self.snapshot_provider: Optional[Callable[[], Dict]] = None
         self._shm_threshold = shm_threshold
         # put-stream dedup state, keyed by (chan, stream id); survives the
         # stream's connection so replays after a reconnect are applied at
@@ -410,12 +423,21 @@ class TransportServer(Service):
             m = h.get("m")
             if m == "chan.put":
                 ok = self._channels[h["chan"]].put(decode_pytree(body))
+                if _tel is not None and h.get("tr") is not None:
+                    _tel.instant("server.apply", cat="transport",
+                                 trace=int(h["tr"]),
+                                 args={"chan": h["chan"]}, flow="step")
                 return {"ok": bool(ok)}, b""
             if m == "chan.put_many":
                 items = decode_pytree(body)
                 chan = self._channels[h["chan"]]
                 verdicts = [bool(v) for v in
                             self._apply_put(chan, items, body)]
+                if _tel is not None and h.get("tr") is not None:
+                    _tel.instant("server.apply", cat="transport",
+                                 trace=int(h["tr"]),
+                                 args={"chan": h["chan"],
+                                       "count": len(items)}, flow="step")
                 return {"ok": all(verdicts),
                         "verdicts": verdicts}, b""
             if m == "ring.open":
@@ -470,30 +492,46 @@ class TransportServer(Service):
                         return {"ok": True, "dup": True, "acks": acks}, b""
                     if _fault is not None:
                         _fault("server.stream_apply")
-                    items = decode_pytree(body)
-                    chan = self._channels[h["chan"]]
-                    # a journaled channel fuses the dedup watermark into
-                    # the flush's own record (ONE append per frame; items
-                    # + watermark atomic by construction); an unwrapped
-                    # channel gets a standalone watermark append INSIDE
-                    # st.lock, after the apply. Either way the remaining
-                    # crash window — applied, not acked — heals on the
-                    # data path: the producer replays the un-acked frame
-                    # and the recovered watermark dedups it exactly-once
-                    meta = (None if self._journal is None else
-                            {"stream": h["stream"], "seq": seq,
-                             "window": st.window,
-                             "ack_every": st.ack_every})
-                    fused = (meta is not None
-                             and hasattr(chan, "put_many_encoded"))
-                    verdicts = [bool(v) for v in (
-                        chan.put_many_encoded(items, body, stream_meta=meta)
-                        if fused else self._apply_put(chan, items, body))]
-                    st.record(seq, verdicts)
-                    if meta is not None and not fused:
-                        self._journal.append(
-                            "stream", dict(meta, chan=h["chan"],
-                                           verdicts=verdicts))
+                    # join the producer's trace: the frame header carries
+                    # its flush span's ids, so this apply slice lands on
+                    # the same trace id in the exported timeline
+                    apply_span = (
+                        _tel.span("server.apply", cat="transport",
+                                  trace=int(h["tr"]), parent=h.get("sp"),
+                                  args={"chan": h["chan"], "seq": seq,
+                                        "count": int(h.get("count", 0))},
+                                  flow="step")
+                        if _tel is not None and h.get("tr") is not None
+                        else contextlib.nullcontext())
+                    with apply_span:
+                        items = decode_pytree(body)
+                        chan = self._channels[h["chan"]]
+                        # a journaled channel fuses the dedup watermark
+                        # into the flush's own record (ONE append per
+                        # frame; items + watermark atomic by
+                        # construction); an unwrapped channel gets a
+                        # standalone watermark append INSIDE st.lock,
+                        # after the apply. Either way the remaining crash
+                        # window — applied, not acked — heals on the data
+                        # path: the producer replays the un-acked frame
+                        # and the recovered watermark dedups it
+                        # exactly-once
+                        meta = (None if self._journal is None else
+                                {"stream": h["stream"], "seq": seq,
+                                 "window": st.window,
+                                 "ack_every": st.ack_every})
+                        fused = (meta is not None
+                                 and hasattr(chan, "put_many_encoded"))
+                        verdicts = [bool(v) for v in (
+                            chan.put_many_encoded(items, body,
+                                                  stream_meta=meta)
+                            if fused
+                            else self._apply_put(chan, items, body))]
+                        st.record(seq, verdicts)
+                        if meta is not None and not fused:
+                            self._journal.append(
+                                "stream", dict(meta, chan=h["chan"],
+                                               verdicts=verdicts))
                     if _fault is not None:
                         _fault("server.stream_applied")
                     acks = (st.drain_acks()
@@ -575,8 +613,17 @@ class TransportServer(Service):
                 if host is None:
                     return {"err": f"unknown worker {h['worker']!r}"}, b""
                 incarnation = int(h.get("incarnation", 0))
-                host.apply_report(h.get("report", {}),
-                                  incarnation=incarnation)
+                report = h.get("report", {})
+                # child-process trace buffers ride the report; fold them
+                # into this process's collector so one trace.dump (or
+                # --trace-out) sees the whole process tree
+                trace_events = (report.pop("trace", None)
+                                if isinstance(report, dict) else None)
+                if _tel is not None and trace_events:
+                    _tel.extend_foreign(trace_events)
+                    self.metrics.inc("trace_events_folded",
+                                     float(len(trace_events)))
+                host.apply_report(report, incarnation=incarnation)
                 # per-incarnation stop verdict: a superseded or
                 # budget-exhausted incarnation is told to exit even while
                 # the slot itself lives on
@@ -593,6 +640,23 @@ class TransportServer(Service):
                 if self._journal is not None:
                     stats.update(self._journal.stats())
                 return {"ok": True, "stats": stats}, b""
+            if m == "metrics.snapshot":
+                # remote scrape of the whole registry: the orchestrator
+                # points snapshot_provider at its TelemetrySink sample
+                if self.snapshot_provider is not None:
+                    return {"ok": True,
+                            "sample": dict(self.snapshot_provider())}, b""
+                return {"ok": True, "sample": {
+                    "services": {self.name: self.metrics.snapshot()},
+                    "health": {self.name: self.health()}}}, b""
+            if m == "trace.dump":
+                # every buffered span this process holds — including
+                # child-process events folded from worker.report payloads
+                if _tel is None:
+                    return {"ok": True, "enabled": False, "events": []}, b""
+                return {"ok": True, "enabled": True,
+                        "events": _tel.drain(
+                            clear=bool(h.get("clear", True)))}, b""
             if m == "ping":
                 return {"ok": True}, b""
             return {"err": f"unknown method {m!r}"}, b""

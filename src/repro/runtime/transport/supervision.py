@@ -97,6 +97,13 @@ class ElasticPolicy:
         the fleet is too large for the publish cadence (more workers =
         more off-policy lag), so it also gates scale-up and forces
         scale-down.
+      * ``infer_queue_depth`` / ``infer_window_fill`` — inference-tier
+        pressure (the pool's own autoscaling gauges). A tier at/above
+        ``tier_queue_hot`` requests or ``tier_fill_hot`` window fill is
+        *saturated*: demand is outrunning serving capacity, so the
+        autoscaler treats it as an additional scale-up trigger and never
+        scales down while it persists (either threshold at 0 disables
+        that signal).
 
     Scale-down never kills a worker mid-flight: the slot enters a
     ``draining`` phase — the stop flag rides the next report reply, the
@@ -112,6 +119,8 @@ class ElasticPolicy:
     scale_up_depth: float = 0.25   # depth_frac at/below → scale up
     scale_down_depth: float = 0.9  # depth_frac at/above → scale down
     staleness_cap: float = 0.0     # 0 = staleness signal unused
+    tier_queue_hot: float = 0.0    # infer queue depth at/above → saturated
+    tier_fill_hot: float = 0.0     # infer window fill at/above → saturated
     drain_timeout_s: float = 10.0
 
     def __post_init__(self):
@@ -123,6 +132,13 @@ class ElasticPolicy:
             raise ValueError(
                 f"need 0 <= scale_up_depth < scale_down_depth <= 1, got "
                 f"{self.scale_up_depth}/{self.scale_down_depth}")
+        if self.tier_queue_hot < 0:
+            raise ValueError(
+                f"tier_queue_hot must be >= 0, got {self.tier_queue_hot}")
+        if not 0.0 <= self.tier_fill_hot <= 1.0:
+            raise ValueError(
+                f"tier_fill_hot must be in [0, 1], got "
+                f"{self.tier_fill_hot}")
 
 
 # ---------------------------------------------------------------------------
@@ -575,16 +591,29 @@ class Supervisor(Service):
         depth = float(signals.get("depth_frac", 0.5))
         staleness = float(signals.get("staleness", 0.0))
         stale = pol.staleness_cap > 0 and staleness > pol.staleness_cap
+        infer_depth = float(signals.get("infer_queue_depth", 0.0))
+        infer_fill = float(signals.get("infer_window_fill", 0.0))
+        # inference-tier pressure: a hot tier means demand is outrunning
+        # serving capacity — an extra scale-up trigger that also pins the
+        # fleet (no scale-down) while the pressure lasts
+        saturated = ((pol.tier_queue_hot > 0
+                      and infer_depth >= pol.tier_queue_hot)
+                     or (pol.tier_fill_hot > 0
+                         and infer_fill >= pol.tier_fill_hot))
         self.metrics.set_gauge("elastic_workers", float(n))
         self.metrics.set_gauge("elastic_depth_frac", depth)
         self.metrics.set_gauge("elastic_staleness", staleness)
+        self.metrics.set_gauge("elastic_infer_queue_depth", infer_depth)
+        self.metrics.set_gauge("elastic_infer_window_fill", infer_fill)
+        self.metrics.set_gauge("elastic_tier_saturated", float(saturated))
         if draining:
             return                     # one transition at a time
-        if n < pol.max_workers and depth <= pol.scale_up_depth and not stale:
+        if (n < pol.max_workers and not stale
+                and (depth <= pol.scale_up_depth or saturated)):
             self._scale_up()
             self._last_scale_t = now
-        elif n > pol.min_workers and (depth >= pol.scale_down_depth
-                                      or stale):
+        elif (n > pol.min_workers and not saturated
+              and (depth >= pol.scale_down_depth or stale)):
             self._scale_down(now)
             self._last_scale_t = now
 

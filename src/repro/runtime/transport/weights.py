@@ -21,6 +21,8 @@ no code change on its side, which is the whole point of the seam.
 """
 from __future__ import annotations
 
+import contextlib
+import os
 import time
 from typing import Any, Optional, Tuple
 
@@ -28,7 +30,15 @@ from repro.runtime.transport.channel import (ChannelClosed, WireClient,
                                              long_poll)
 from repro.runtime.transport.codec import decode_pytree, encode_pytree
 
+# Import-gated tracing (see transport.faults for the idiom).
+if os.environ.get("REPRO_TRACE"):
+    from repro.runtime import telemetry as _tel
+else:  # pragma: no cover - default path
+    _tel = None
+
 __all__ = ["WeightStoreTransport"]
+
+_NULL_CTX = contextlib.nullcontext()
 
 
 class WeightStoreTransport:
@@ -90,7 +100,16 @@ class WeightStoreTransport:
         if got is None:
             return None
         resp, body = got
-        return decode_pytree(body), int(resp["version"])
+        version = int(resp["version"])
+        if _tel is not None:
+            # wire leg of the policy-lag flow (version is the flow id):
+            # a remote pool's fetch shows up on the publish timeline
+            _tel.instant("weights.wire_acquire", cat="weights",
+                         trace=version,
+                         args={"version": version,
+                               "bytes": len(body) if body else 0},
+                         flow="step")
+        return decode_pytree(body), version
 
     # -- trainer side ---------------------------------------------------------
     def begin_publish(self) -> None:
@@ -98,8 +117,14 @@ class WeightStoreTransport:
         self._state = (-float("inf"), *self._state[1:])   # bust the cache
 
     def publish(self, params: Any, version: int) -> None:
-        self._client.request({"m": "store.publish", "version": version},
-                             encode_pytree(params), oob=self._use_shm)
+        blob = encode_pytree(params)
+        with (_tel.span("weights.wire_publish", cat="weights",
+                        trace=int(version),
+                        args={"version": int(version),
+                              "bytes": len(blob)}, flow="start")
+              if _tel is not None else _NULL_CTX):
+            self._client.request({"m": "store.publish", "version": version},
+                                 blob, oob=self._use_shm)
         self._state = (-float("inf"), *self._state[1:])
 
     # -- lifecycle ------------------------------------------------------------

@@ -1,0 +1,82 @@
+"""Observability end-to-end acceptance: running the --remote-rollout demo
+with --trace-out produces a Chrome-trace-event JSON whose span chains
+cross the process boundary — the SAME trace id appears on the child's
+rollout-side put, the parent server's apply, and the parent trainer's
+pop/collate — and whose policy-lag flow ties a weight publish to the
+first action computed with that version.
+
+Spawns a jax-initializing process tree — slow by nature; CI runs it in
+the dedicated telemetry-smoke job under a hard SIGKILL timeout.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+
+
+def _collect(events, name):
+    """trace id -> {pids} over every phase of ``name``."""
+    out = {}
+    for e in events:
+        if e.get("name") == name and e.get("ph") in ("X", "i"):
+            t = e.get("args", {}).get("trace")
+            if t is not None:
+                out.setdefault(t, set()).add(e["pid"])
+    return out
+
+
+@pytest.mark.slow
+def test_remote_rollout_trace_joins_across_processes(tmp_path):
+    trace_path = tmp_path / "trace.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("REPRO_TRACE", None)       # --trace-out must arm it itself
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--remote-rollout", "1", "--steps", "8",
+         "--trace-out", str(trace_path)],
+        env=env, capture_output=True, text=True, timeout=280)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "trace:" in proc.stdout
+
+    doc = json.loads(trace_path.read_text())
+    # Chrome trace-event container format (loads in Perfetto)
+    assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+    events = doc["traceEvents"]
+    for e in events:
+        assert {"name", "ph", "pid"} <= set(e)
+        if e["ph"] != "M":
+            assert isinstance(e["ts"], int)
+        if e["ph"] == "X":
+            assert e["dur"] >= 1
+
+    pids = {e["pid"] for e in events}
+    assert len(pids) >= 2, "expected parent + child events in one dump"
+
+    puts = _collect(events, "rollout.put")
+    applies = _collect(events, "server.apply")
+    collates = _collect(events, "trainer.collate")
+    pops = _collect(events, "replay.pop")
+
+    # child put -> parent apply: same trace id, different pids
+    cross = [t for t in puts
+             if t in applies and puts[t] != applies[t]]
+    assert cross, "no put->apply chain crossed a process boundary"
+
+    # the full acceptance chain: put (child) -> apply (parent) ->
+    # trainer-side pop/collate (parent) on ONE trace id
+    full = [t for t in cross if t in collates or t in pops]
+    assert full, "no cross-process trace reached the trainer side"
+
+    # policy-lag flow: publish -> acquire -> first action per version id
+    pub = _collect(events, "weights.publish")
+    acq = _collect(events, "weights.acquire")
+    first = _collect(events, "infer.first_action")
+    assert set(pub) & set(acq) & set(first), \
+        "no weight version traced publish -> acquire -> first action"
