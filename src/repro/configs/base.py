@@ -294,9 +294,24 @@ class TransportConfig:
     # after a reconnect) instead of one blocking RPC per flush. 0 keeps
     # the PR 4 request/response path.
     put_window: int = 0
+    # adaptive streaming: tune the effective put window / ack cadence
+    # online from observed cumulative-ack RTT (multiplicative increase on
+    # low occupancy, halving backoff on verdict pressure or RTT spikes).
+    # put_window and ack cadence become BOUNDS — the effective window
+    # starts at put_window, so steady RTT never drops below static.
+    adaptive_put_window: bool = False
     # ring capacity per direction for kind="ring" (the persistent SHM
     # ring data plane; must hold several encoded flushes)
     ring_bytes: int = 8 << 20
+    # zero-copy ring pops: the trainer-side channel decodes experience
+    # straight out of the committed ring region under a lease instead of
+    # copying each record out (the Prefetcher releases leases post-collate)
+    zero_copy_pop: bool = False
+    # weight broadcast lane: > 0 gives the server a persistent SHM ring
+    # of this capacity holding one encoded weight blob per version;
+    # same-host acquires read it positionally instead of receiving the
+    # blob per-message (kills per-acquire SHM segment churn)
+    weight_lane_bytes: int = 0
     # -- disaggregated inference plane ---------------------------------------
     # "": every rollout child runs its own colocated inference pool.
     # "host": the parent serves its OWN InferenceService behind the
@@ -359,6 +374,13 @@ class RuntimeConfig:
     weight_sync_interval: int = 1    # trainer steps between publishes
     drain: bool = True               # inference-drain protocol (App. D.6)
     prefetch_depth: int = 2
+    # -- device ingest path (data/prefetch.py) -------------------------------
+    prefetch_drain_timeout_s: float = 0.1   # partial-drain slice
+    prefetch_idle_timeout_s: float = 0.5    # idle-backoff cap
+    prefetch_staging: bool = True    # assemble batches into pooled
+                                     # page-aligned host staging slabs
+    prefetch_to_device: bool = False  # jax.device_put from the prefetch
+                                      # thread (H2D overlaps next collate)
     batch_buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)  # TPU-friendly pads
     # -- experience channels (runtime/experience.py) -------------------------
     # Backpressure when the segment channel is full: "drop_oldest" is the

@@ -11,30 +11,197 @@ The source is anything exposing ``pop_batch(n, timeout)`` — a
 :class:`~repro.runtime.experience.FifoChannel`, or a
 :class:`~repro.runtime.experience.MixedExperienceSource` blending real and
 imagined segments.
+
+Device ingest path (the zero-copy pipeline's last hop):
+
+  * zero-copy sources (a ring channel with ``zero_copy_pop``) deliver
+    segments whose arrays VIEW transport memory and carry a ring lease
+    under ``"_lease"``; collate copies the data into the batch, so the
+    prefetcher releases every lease right after collate — at that point
+    the producer may reclaim the ring bytes;
+  * with ``stage_batches`` the collated batch is assembled into a slab
+    from a small pool of reusable page-aligned host staging buffers
+    (:class:`StagingPool`) instead of freshly allocated arrays — steady
+    state runs at zero batch-sized allocations per step;
+  * with ``to_device`` the staged batch is shipped by ``jax.device_put``
+    (donated where the jax version supports it) from the prefetch
+    thread, double-buffered by the cache: the H2D of batch N overlaps
+    the collate of batch N+1. A slab is recycled only after the trainer
+    pops the NEXT batch (``get`` → ``get``), because on the CPU backend
+    ``device_put`` of an aligned numpy array may alias the slab rather
+    than copy it — recycling any earlier could corrupt a batch still in
+    flight.
+
+The drain loop's partial-batch timeout is configurable
+(``drain_timeout_s``) and backs off exponentially up to
+``idle_timeout_max_s`` while the source stays empty, so an idle trainer
+does not burn a wakeup every slice.
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Optional
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+_PAGE = 4096
+_ALIGN = 64
+
+
+def _align(n: int, to: int = _ALIGN) -> int:
+    return (n + to - 1) & ~(to - 1)
+
+
+class _Slab:
+    """One page-aligned host staging buffer (``raw`` pins the allocation,
+    ``buf`` is the aligned uint8 window batches are carved from)."""
+
+    __slots__ = ("raw", "buf")
+
+    def __init__(self, nbytes: int):
+        self.raw = np.empty(nbytes + _PAGE, dtype=np.uint8)
+        off = (-self.raw.ctypes.data) % _PAGE
+        self.buf = self.raw[off:off + nbytes]
+
+
+class StagingPool:
+    """Small pool of reusable page-aligned host staging buffers.
+
+    ``acquire`` prefers a free slab big enough for the request (batches
+    are shape-stable, so after warmup every acquire is a reuse);
+    ``release`` returns a slab once its batch can no longer be read —
+    see the recycle-on-next-get rule in the module docstring.
+    """
+
+    def __init__(self, max_free: int = 4):
+        self._free: List[_Slab] = []
+        self._lock = threading.Lock()
+        self._max_free = max(int(max_free), 1)
+        self.staging_reuse = 0
+        self.slabs_allocated = 0
+
+    def acquire(self, nbytes: int) -> _Slab:
+        nbytes = _align(max(nbytes, 1), _PAGE)
+        with self._lock:
+            for i, slab in enumerate(self._free):
+                if slab.buf.nbytes >= nbytes:
+                    self.staging_reuse += 1
+                    return self._free.pop(i)
+        self.slabs_allocated += 1
+        return _Slab(nbytes)
+
+    def release(self, slab: Optional[_Slab]) -> None:
+        if slab is None:
+            return
+        with self._lock:
+            if len(self._free) < self._max_free:
+                self._free.append(slab)
+
+
+def _flatten_batch(batch) -> Optional[Tuple[List[np.ndarray], Callable]]:
+    """Split a collated batch (NamedTuple or dict of arrays) into its
+    ndarray leaves + a rebuilder; None when the shape is unknown (staging
+    is then skipped and the batch passes through untouched)."""
+    if hasattr(batch, "_fields"):
+        vals = [getattr(batch, f) for f in batch._fields]
+        idx = [i for i, v in enumerate(vals) if isinstance(v, np.ndarray)]
+
+        def rebuild(staged, vals=vals, idx=idx, cls=type(batch)):
+            out = list(vals)
+            for i, leaf in zip(idx, staged):
+                out[i] = leaf
+            return cls(*out)
+
+        return [vals[i] for i in idx], rebuild
+    if isinstance(batch, dict):
+        keys = [k for k, v in batch.items() if isinstance(v, np.ndarray)]
+
+        def rebuild(staged, batch=batch, keys=keys):
+            out = dict(batch)
+            out.update(zip(keys, staged))
+            return out
+
+        return [batch[k] for k in keys], rebuild
+    return None
 
 
 class Prefetcher:
     def __init__(self, source, batch_size: int,
-                 collate: Callable, depth: int = 2):
+                 collate: Callable, depth: int = 2, *,
+                 drain_timeout_s: float = 0.1,
+                 idle_timeout_max_s: float = 0.5,
+                 stage_batches: bool = False,
+                 to_device: bool = False,
+                 staging_slabs: int = 4):
         self.source = source
         self.batch_size = batch_size
         self.collate = collate
+        self.drain_timeout_s = max(float(drain_timeout_s), 0.001)
+        self.idle_timeout_max_s = max(float(idle_timeout_max_s),
+                                      self.drain_timeout_s)
+        self.stage_batches = bool(stage_batches or to_device)
+        self.to_device = bool(to_device)
+        self._pool = StagingPool(max_free=staging_slabs)
         self._cache: queue.Queue = queue.Queue(maxsize=depth)
+        self._in_use: Optional[_Slab] = None     # slab of the last get()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="prefetcher")
         self.batches_built = 0
+        self.bytes_copied = 0        # staged bytes (collate → slab memcpy)
+        self.views_served = 0        # ring leases consumed then released
+        self.idle_backoffs = 0       # drains that came back empty
 
     def start(self) -> "Prefetcher":
         self._thread.start()
         return self
 
+    # -- lease + staging plumbing ---------------------------------------------
+    def _release_leases(self, segments) -> None:
+        """Zero-copy sources stamp a refcounted ring lease into each
+        segment; after collate has copied the arrays into the batch the
+        views are dead weight — release them so the producer can reclaim
+        the ring bytes."""
+        for seg in segments:
+            if isinstance(seg, dict):
+                lease = seg.pop("_lease", None)
+                if lease is not None:
+                    lease.release()
+                    self.views_served += 1
+
+    def _stage(self, batch) -> Tuple[object, Optional[_Slab]]:
+        """Assemble ``batch`` into one pooled page-aligned slab (and ship
+        it to the device when configured). Returns the staged batch and
+        the slab backing it (recycled on the get-after-next)."""
+        flat = _flatten_batch(batch)
+        if flat is None:
+            return batch, None
+        leaves, rebuild = flat
+        total = sum(_align(leaf.nbytes) for leaf in leaves)
+        slab = self._pool.acquire(total)
+        staged, off = [], 0
+        for leaf in leaves:
+            view = (slab.buf[off:off + leaf.nbytes]
+                    .view(leaf.dtype).reshape(leaf.shape))
+            np.copyto(view, leaf)
+            self.bytes_copied += leaf.nbytes
+            staged.append(view)
+            off += _align(leaf.nbytes)
+        out = rebuild(staged)
+        if self.to_device:
+            out = self._device_put(out)
+        return out, slab
+
+    @staticmethod
+    def _device_put(batch):
+        import jax
+        try:
+            return jax.device_put(batch, donate=True)
+        except TypeError:   # older jax: no donate kwarg on device_put
+            return jax.device_put(batch)
+
+    # -- producer loop ----------------------------------------------------------
     def _run(self) -> None:
         # a pop_many source is drained in COALESCED partial batches (one
         # lock/RPC per drain, items accumulate here until a super-batch
@@ -42,34 +209,67 @@ class Prefetcher:
         # round out while ready items sit in the channel
         pop_many = getattr(self.source, "pop_many", None)
         pending = []
+        timeout = self.drain_timeout_s
         while not self._stop.is_set():
             if pop_many is not None:
-                got = pop_many(self.batch_size - len(pending), timeout=0.1)
+                got = pop_many(self.batch_size - len(pending),
+                               timeout=timeout)
                 if got:
                     pending.extend(got)
+                    timeout = self.drain_timeout_s
+                else:
+                    # empty drain: back off so an idle trainer sleeps in
+                    # the source instead of waking every slice
+                    self.idle_backoffs += 1
+                    timeout = min(timeout * 2, self.idle_timeout_max_s)
                 if len(pending) < self.batch_size:
                     continue
                 segments, pending = pending, []
             else:
                 segments = self.source.pop_batch(self.batch_size,
-                                                 timeout=0.1)
+                                                 timeout=timeout)
                 if segments is None:
+                    self.idle_backoffs += 1
+                    timeout = min(timeout * 2, self.idle_timeout_max_s)
                     continue
+                timeout = self.drain_timeout_s
             batch = self.collate(segments)
+            # collate copied everything it needs; transport views die here
+            self._release_leases(segments)
+            slab = None
+            if self.stage_batches:
+                batch, slab = self._stage(batch)
             self.batches_built += 1
             while not self._stop.is_set():
                 try:
-                    self._cache.put(batch, timeout=0.1)
+                    self._cache.put((batch, slab), timeout=0.1)
                     break
                 except queue.Full:
                     continue
 
+    # -- consumer surface -------------------------------------------------------
     def get(self, timeout: Optional[float] = None):
-        """Pop a ready super-batch (None on timeout)."""
+        """Pop a ready super-batch (None on timeout). Popping batch N+1
+        recycles batch N's staging slab — by then the (sequential)
+        trainer has fully consumed N, so even a CPU-backend aliased
+        ``device_put`` cannot observe the reuse."""
         try:
-            return self._cache.get(timeout=timeout)
+            batch, slab = self._cache.get(timeout=timeout)
         except queue.Empty:
             return None
+        self._pool.release(self._in_use)
+        self._in_use = slab
+        return batch
+
+    def metrics(self) -> Dict[str, float]:
+        return {
+            "batches_built": float(self.batches_built),
+            "bytes_copied": float(self.bytes_copied),
+            "views_served": float(self.views_served),
+            "staging_reuse": float(self._pool.staging_reuse),
+            "staging_slabs": float(self._pool.slabs_allocated),
+            "idle_backoffs": float(self.idle_backoffs),
+        }
 
     def stop(self) -> None:
         self._stop.set()

@@ -172,7 +172,7 @@ def policy_head_loss(hidden, w, targets, logp_old, advantages, mask, *,
 
 
 # ---------------------------------------------------------------------------
-# Attention: Pallas flash forward + jnp-twin recompute backward
+# Attention: Pallas flash forward + Pallas flash backward (LSE residual)
 # ---------------------------------------------------------------------------
 
 def _attn_pallas_ok(head_dim: int) -> bool:
@@ -198,27 +198,29 @@ def _flash_with_twin_bwd(q, k, v, window, block_q, block_k, interpret):
 
 
 def _flash_fwd(q, k, v, window, block_q, block_k, interpret):
-    out = flash_attention(q, k, v, causal=True, window=window,
-                          block_q=block_q, block_k=block_k,
-                          interpret=interpret)
-    return out, (q, k, v)
+    # differentiated forward saves the online-softmax LSE so the backward
+    # kernels replay p = exp(s - LSE) instead of recomputing the softmax
+    out, lse = flash_attention(q, k, v, causal=True, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret, return_lse=True)
+    return out, (q, k, v, out, lse)
 
 
 def _flash_bwd(window, block_q, block_k, interpret, res, g):
-    # Backward = VJP of the numerically-matching jnp twin (blockwise online
-    # softmax, O(T·block) score memory) recomputed from the saved q/k/v.
-    q, k, v = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: _twin_attention(q_, k_, v_, window, block_k), q,
-        k, v)
-    return vjp(g)
+    # Backward = the real Pallas dq and dk/dv kernels over the saved LSE
+    # (recompute-free; see kernels/flash_attention.py).
+    from repro.kernels.flash_attention import flash_attention_bwd
+    q, k, v, out, lse = res
+    return flash_attention_bwd(q, k, v, out, lse, g, causal=True,
+                               window=window, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
 
 
 _flash_with_twin_bwd.defvjp(_flash_fwd, _flash_bwd)
 
 
 # ---------------------------------------------------------------------------
-# SSD scan (Mamba2): Pallas chunked kernel forward + jnp-twin recompute bwd
+# SSD scan (Mamba2): Pallas chunked forward + Pallas reverse-sweep backward
 # ---------------------------------------------------------------------------
 
 def _twin_ssd(x, dt, A, Bm, Cm, chunk):
@@ -233,19 +235,23 @@ def _ssd_with_twin_bwd(x, dt, A, Bm, Cm, chunk, interpret):
 
 
 def _ssd_fwd(x, dt, A, Bm, Cm, chunk, interpret):
-    out = _ssd_with_twin_bwd(x, dt, A, Bm, Cm, chunk, interpret)
-    return out, (x, dt, A, Bm, Cm)
+    # differentiated forward saves every chunk's ENTERING state so the
+    # backward sweep replays each chunk without rerunning the recurrence
+    from repro.kernels.ssd_scan import ssd_scan as _pallas_ssd
+    y, s_final, s_enter = _pallas_ssd(x, dt, A, Bm, Cm, chunk=chunk,
+                                      interpret=interpret,
+                                      return_states=True)
+    return (y, s_final), (x, dt, A, Bm, Cm, s_enter)
 
 
 def _ssd_bwd(chunk, interpret, res, g):
-    # Backward = VJP of the numerically-matching chunked jnp twin,
-    # recomputed from the saved operands (custom Pallas backward deferred —
-    # mirrors the flash-attention twin-bwd pattern).
-    x, dt, A, Bm, Cm = res
-    _, vjp = jax.vjp(
-        lambda x_, dt_, a_, b_, c_: _twin_ssd(x_, dt_, a_, b_, c_, chunk),
-        x, dt, A, Bm, Cm)
-    return vjp(g)
+    # Backward = the real Pallas reverse-chunk kernel carrying the state
+    # cotangent in scratch (see kernels/ssd_scan.py).
+    from repro.kernels.ssd_scan import ssd_scan_bwd
+    x, dt, A, Bm, Cm, s_enter = res
+    dy, ds_final = g
+    return ssd_scan_bwd(x, dt, A, Bm, Cm, s_enter, dy, ds_final,
+                        chunk=chunk, interpret=interpret)
 
 
 _ssd_with_twin_bwd.defvjp(_ssd_fwd, _ssd_bwd)
@@ -259,8 +265,9 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128,
 
     Routes to the Pallas kernel when enabled and shape-eligible (the
     kernel wants T an exact multiple of ``chunk``; ragged lengths and
-    decode-time carried state stay on the jnp path). Backward is the jnp
-    twin's VJP recomputed from the operands either way.
+    decode-time carried state stay on the jnp path). Backward on the
+    Pallas route is the reverse-chunk Pallas kernel replaying saved
+    entering states (``ssd_scan_bwd``); the jnp path uses its own VJP.
     """
     t = x.shape[1]
     if use_pallas(mode) and t >= chunk and t % chunk == 0:
@@ -277,9 +284,10 @@ def attention(q, k, v, *, window: Optional[int] = None, block: int = 128,
     """Causal (optionally sliding-window) blockwise attention on projected
     q/k/v. q: [B,T,H,D]; k/v: [B,S,KV,D] -> [B,T,H,D] in q.dtype.
 
-    Routes to the Pallas flash kernel when enabled and shape-eligible
-    (backward: analytic VJP of the jnp twin, recomputed blockwise — no
-    O(T²) score tensor either way); otherwise the jnp twin runs both ways.
+    Routes to the Pallas flash kernel when enabled and shape-eligible;
+    its backward is the pair of Pallas dq and dk/dv kernels over the
+    saved online-softmax LSE (recompute-free — no O(T²) score tensor
+    either way). Otherwise the jnp twin runs both ways.
     """
     if use_pallas(mode) and _attn_pallas_ok(q.shape[-1]):
         return _flash_with_twin_bwd(q, k, v, window, block, block,

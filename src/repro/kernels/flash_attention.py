@@ -14,6 +14,13 @@ flash-attention algorithm:
     (h // group) in the K/V index maps — no KV duplication in HBM;
   * causal + sliding-window masking from absolute positions.
 
+The BACKWARD is a pair of real Pallas kernels too (no twin recompute):
+the forward optionally saves the per-row log-sum-exp (``return_lse``), and
+``flash_attention_bwd`` replays the online softmax from (q, k, v, LSE) —
+``p = exp(s - LSE)`` directly, no second max/sum pass — accumulating dq
+over kv blocks in one kernel and dk/dv over q blocks in the other. GQA
+dk/dv come out per q-head and are summed over the group outside.
+
 Validated in interpret mode against ``ref.reference_attention`` (CPU); on
 real TPUs the same ``pl.pallas_call`` lowers to Mosaic.
 """
@@ -30,9 +37,14 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *refs,
                  scale: float, block_q: int, block_k: int, seq_k: int,
-                 causal: bool, window: Optional[int]):
+                 causal: bool, window: Optional[int], save_lse: bool):
+    if save_lse:
+        lse_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        m_scr, l_scr, acc_scr = refs
+        lse_ref = None
     qi = pl.program_id(2)
     kj = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -74,16 +86,22 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     def _final():
         denom = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        if save_lse:
+            # per-row log-sum-exp: the softmax residual the backward
+            # kernels replay p = exp(s - LSE) from (no second pass)
+            lse_ref[0, :, 0] = m_scr[...][:, 0] + jnp.log(denom[:, 0])
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: Optional[int] = None,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = False) -> jnp.ndarray:
+                    interpret: bool = False, return_lse: bool = False):
     """q: [B, T, H, D]; k/v: [B, S, KV, D] with H % KV == 0 → [B, T, H, D].
 
     T and S are padded to block multiples internally; the causal mask uses
     unpadded absolute positions, and key padding is masked out.
+    ``return_lse`` additionally returns the per-row log-sum-exp
+    [B, T, H] f32 — the residual ``flash_attention_bwd`` needs.
     """
     b, t, h, d = q.shape
     s, kv = k.shape[1], k.shape[2]
@@ -102,8 +120,15 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     grid = (b, h, tp // block_q, sp // block_k)
     kernel = functools.partial(
         _attn_kernel, scale=scale, block_q=block_q, block_k=block_k,
-        seq_k=s, causal=causal, window=window)
-    out = pl.pallas_call(
+        seq_k=s, causal=causal, window=window, save_lse=return_lse)
+    out_specs = [pl.BlockSpec((1, block_q, 1, d),
+                              lambda bi, hi, qi, kj: (bi, qi, hi, 0))]
+    out_shape = [jax.ShapeDtypeStruct((b, tp, h, d), q.dtype)]
+    if return_lse:
+        out_specs.append(pl.BlockSpec((1, block_q, 1),
+                                      lambda bi, hi, qi, kj: (bi, qi, hi)))
+        out_shape.append(jax.ShapeDtypeStruct((b, tp, h), jnp.float32))
+    got = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -114,9 +139,8 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pl.BlockSpec((1, block_k, 1, d),
                          lambda bi, hi, qi, kj, g=group: (bi, kj, hi // g, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, 1, d),
-                               lambda bi, hi, qi, kj: (bi, qi, hi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, tp, h, d), q.dtype),
+        out_specs=out_specs if return_lse else out_specs[0],
+        out_shape=out_shape if return_lse else out_shape[0],
         scratch_shapes=[
             _vmem((block_q, 1), jnp.float32),      # running max m
             _vmem((block_q, 1), jnp.float32),      # running sum l
@@ -124,7 +148,191 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         ],
         interpret=interpret,
     )(q, k, v)
-    return out[:, :t]
+    if return_lse:
+        out, lse = got
+        return out[:, :t], lse[:, :t]
+    return got[:, :t]
+
+
+# ---------------------------------------------------------------------------
+# Backward: two Pallas kernels replaying the online softmax from the LSE
+# ---------------------------------------------------------------------------
+
+def _bwd_mask(qi, kj, block_q, block_k, seq_k, causal, window, transposed):
+    """Same absolute-position mask as the forward; ``transposed`` gives it
+    in [block_k, block_q] layout for the dk/dv kernel."""
+    shape = (block_k, block_q) if transposed else (block_q, block_k)
+    qax, kax = (1, 0) if transposed else (0, 1)
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, shape, qax)
+    kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, shape, kax)
+    mask = kpos < seq_k
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    return mask
+
+
+def _attn_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dd_ref,
+                        dq_ref, dq_scr, *, scale, block_q, block_k, seq_k,
+                        causal, window):
+    """dq accumulated over kv blocks (last grid axis sequential):
+    p = exp(s - LSE); ds = p ∘ (dO·Vᵀ − D); dq += ds·K·scale."""
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    do = do_ref[0, :, 0, :].astype(jnp.float32)
+    lse = lse_ref[0, :, 0]                                 # [bq]
+    dd = dd_ref[0, :, 0]                                   # [bq] rowsum(dO∘O)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    mask = _bwd_mask(qi, kj, block_q, block_k, seq_k, causal, window, False)
+    p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)    # [bq, bk]
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    ds = p * (dp - dd[:, None])
+    dq_scr[...] += jnp.dot(ds, k,
+                           preferred_element_type=jnp.float32) * scale
+
+    @pl.when(kj == nk - 1)
+    def _final():
+        dq_ref[0, :, 0, :] = dq_scr[...]
+
+
+def _attn_bwd_dkv_kernel(k_ref, v_ref, q_ref, do_ref, lse_ref, dd_ref,
+                         dk_ref, dv_ref, dk_scr, dv_scr, *, scale, block_q,
+                         block_k, seq_k, causal, window):
+    """dk/dv for one k-block accumulated over q blocks (last grid axis):
+    dv += pᵀ·dO; dk += (p ∘ (V·dOᵀ − D))ᵀ-form·Q·scale. Emitted per
+    q-head; the wrapper sums heads over each GQA group."""
+    ki = pl.program_id(2)
+    qj = pl.program_id(3)
+    nq = pl.num_programs(3)
+
+    @pl.when(qj == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    q = q_ref[0, :, 0, :].astype(jnp.float32)
+    do = do_ref[0, :, 0, :].astype(jnp.float32)
+    lse = lse_ref[0, :, 0]                                 # [bq]
+    dd = dd_ref[0, :, 0]                                   # [bq]
+
+    st = jnp.dot(k, q.T, preferred_element_type=jnp.float32) * scale
+    mask = _bwd_mask(qj, ki, block_q, block_k, seq_k, causal, window, True)
+    pt = jnp.where(mask, jnp.exp(st - lse[None, :]), 0.0)  # [bk, bq]
+    dv_scr[...] += jnp.dot(pt, do, preferred_element_type=jnp.float32)
+    dpt = jnp.dot(v, do.T, preferred_element_type=jnp.float32)
+    dst = pt * (dpt - dd[None, :])
+    dk_scr[...] += jnp.dot(dst, q,
+                           preferred_element_type=jnp.float32) * scale
+
+    @pl.when(qj == nq - 1)
+    def _final():
+        dk_ref[0, :, 0, :] = dk_scr[...]
+        dv_ref[0, :, 0, :] = dv_scr[...]
+
+
+# padded q rows carry dO = 0 and D = 0, so their p·(…) products vanish;
+# padding the LSE with this pushes p itself to exp(s − big) ≈ 0 as well,
+# keeping every padded contribution exactly zero
+_LSE_PAD = 1e30
+
+
+def flash_attention_bwd(q, k, v, out, lse, do, *, causal: bool = True,
+                        window: Optional[int] = None, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = False):
+    """Gradients (dq, dk, dv) from the saved forward residuals.
+
+    q: [B,T,H,D]; k/v: [B,S,KV,D]; out/do: like q; lse: [B,T,H] f32 from
+    ``flash_attention(..., return_lse=True)``. Recompute-free: the online
+    softmax is replayed as ``p = exp(s − LSE)`` — one pass per kernel.
+    """
+    b, t, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    scale = d ** -0.5
+    # D = rowsum(dO ∘ O): tiny elementwise reduce, cheaper outside
+    dd = (do.astype(jnp.float32) * out.astype(jnp.float32)).sum(-1)
+
+    tp = math.ceil(t / block_q) * block_q
+    sp = math.ceil(s / block_k) * block_k
+    if tp != t:
+        pad4 = ((0, 0), (0, tp - t), (0, 0), (0, 0))
+        q = jnp.pad(q, pad4)
+        do = jnp.pad(do, pad4)
+        lse = jnp.pad(lse, ((0, 0), (0, tp - t), (0, 0)),
+                      constant_values=_LSE_PAD)
+        dd = jnp.pad(dd, ((0, 0), (0, tp - t), (0, 0)))
+    if sp != s:
+        pad4 = ((0, 0), (0, sp - s), (0, 0), (0, 0))
+        k = jnp.pad(k, pad4)
+        v = jnp.pad(v, pad4)
+
+    # index-map helpers: in the dq kernel the q-block index is grid axis 2
+    # and the kv-block axis 3; the dkv kernel swaps them
+    kq_spec = lambda qax: pl.BlockSpec(
+        (1, block_q, 1, d),
+        (lambda bi, hi, i, j: (bi, i, hi, 0)) if qax == 2 else
+        (lambda bi, hi, i, j: (bi, j, hi, 0)))
+    kk_spec = lambda kax: pl.BlockSpec(
+        (1, block_k, 1, d),
+        (lambda bi, hi, i, j, g=group: (bi, j, hi // g, 0)) if kax == 3 else
+        (lambda bi, hi, i, j, g=group: (bi, i, hi // g, 0)))
+    row_spec = lambda qax: pl.BlockSpec(
+        (1, block_q, 1),
+        (lambda bi, hi, i, j: (bi, i, hi)) if qax == 2 else
+        (lambda bi, hi, i, j: (bi, j, hi)))
+
+    kernel_kw = dict(scale=scale, block_q=block_q, block_k=block_k,
+                     seq_k=s, causal=causal, window=window)
+    dq = pl.pallas_call(
+        functools.partial(_attn_bwd_dq_kernel, **kernel_kw),
+        grid=(b, h, tp // block_q, sp // block_k),
+        in_specs=[kq_spec(2), kk_spec(3), kk_spec(3), kq_spec(2),
+                  row_spec(2), row_spec(2)],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda bi, hi, i, j: (bi, i, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, tp, h, d), jnp.float32),
+        scratch_shapes=[_vmem((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, dd)
+
+    dkh, dvh = pl.pallas_call(
+        functools.partial(_attn_bwd_dkv_kernel, **kernel_kw),
+        grid=(b, h, sp // block_k, tp // block_q),
+        in_specs=[kk_spec(2), kk_spec(2), kq_spec(3), kq_spec(3),
+                  row_spec(3), row_spec(3)],
+        out_specs=[
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, i, j: (bi, i, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, i, j: (bi, i, hi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, sp, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, sp, h, d), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((block_k, d), jnp.float32),
+                        _vmem((block_k, d), jnp.float32)],
+        interpret=interpret,
+    )(k, v, q, do, lse, dd)
+
+    # GQA: per-q-head dk/dv fold back onto their kv head
+    dk = dkh[:, :s].reshape(b, s, kv, group, d).sum(3)
+    dv = dvh[:, :s].reshape(b, s, kv, group, d).sum(3)
+    return (dq[:, :t].astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype))
 
 
 def _vmem(shape, dtype):

@@ -12,6 +12,13 @@ matmuls and a tiny inter-chunk state recurrence. TPU mapping:
 
 Matches ``ref.reference_ssd`` (the stepwise linear-form oracle) — the SSD
 "duality" is exactly what the allclose test asserts.
+
+The BACKWARD is a real Pallas kernel as well: the forward optionally saves
+each chunk's *entering* state (``return_states``), and ``ssd_scan_bwd``
+walks the chunks in REVERSE (index map ``nc - 1 - ci``) carrying the
+state cotangent dS in VMEM scratch, with heads innermost so the
+head-summed dB/dC output blocks are revisited consecutively. dA comes out
+as per-(batch, chunk, head) partials summed by the wrapper.
 """
 from __future__ import annotations
 
@@ -27,7 +34,12 @@ from repro.kernels.flash_attention import _vmem
 
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_final_ref,
-                state_scr, *, chunk: int):
+                *refs, chunk: int, save_states: bool):
+    if save_states:
+        s_all_ref, state_scr = refs
+    else:
+        (state_scr,) = refs
+        s_all_ref = None
     ci = pl.program_id(2)
     nc = pl.num_programs(2)
 
@@ -56,6 +68,10 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_final_ref,
 
     # inter-chunk: y[i] += exp(cum_i) · C_i · S_enterᵀ
     state = state_scr[...]                                       # [P, N]
+    if save_states:
+        # the chunk's ENTERING state — the residual the backward kernel
+        # replays this chunk's forward from
+        s_all_ref[0, 0, 0] = state
     y += jnp.exp(cum)[:, None] * jnp.dot(
         cm, state.T, preferred_element_type=jnp.float32)
 
@@ -74,10 +90,12 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_final_ref,
 
 def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
              Bm: jnp.ndarray, Cm: jnp.ndarray, *, chunk: int = 128,
-             interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+             interpret: bool = False, return_states: bool = False):
     """x: [B,T,H,P]; dt: [B,T,H]; A: [H]; Bm/Cm: [B,T,N] (single group).
 
     Returns (y [B,T,H,P] f32, final_state [B,H,P,N] f32); T % chunk == 0.
+    ``return_states`` additionally returns every chunk's entering state
+    [B, NC, H, P, N] f32 — the residual ``ssd_scan_bwd`` needs.
     """
     b, t, h, p = x.shape
     n = Bm.shape[-1]
@@ -85,8 +103,22 @@ def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
     nc = t // chunk
 
     grid = (b, h, nc)
-    kernel = functools.partial(_ssd_kernel, chunk=chunk)
-    y, s_final = pl.pallas_call(
+    kernel = functools.partial(_ssd_kernel, chunk=chunk,
+                               save_states=return_states)
+    out_specs = [
+        pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+        pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, t, h, p), jnp.float32),
+        jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+    ]
+    if return_states:
+        out_specs.append(pl.BlockSpec(
+            (1, 1, 1, p, n), lambda bi, hi, ci: (bi, ci, hi, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((b, nc, h, p, n),
+                                              jnp.float32))
+    got = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -96,15 +128,170 @@ def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
             pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
             pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
-            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, t, h, p), jnp.float32),
-            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[_vmem((p, n), jnp.float32)],
         interpret=interpret,
     )(x, dt, A.astype(jnp.float32), Bm, Cm)
-    return y, s_final
+    return tuple(got) if return_states else (got[0], got[1])
+
+
+# ---------------------------------------------------------------------------
+# Backward: reverse-chunk kernel carrying the state cotangent in scratch
+# ---------------------------------------------------------------------------
+
+def _ssd_bwd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, senter_ref, dy_ref,
+                    dsfin_ref, dx_ref, ddt_ref, da_ref, db_ref, dc_ref,
+                    ds_scr, *, chunk: int):
+    """One (batch, chunk, head) step of the reverse sweep.
+
+    Grid = (b, nc, h) with heads INNERMOST: dB/dC accumulate across heads,
+    so their (batch, chunk) output block must be revisited on consecutive
+    sequential steps. Chunks run reversed via the ``nc - 1 - ci`` index
+    maps; the per-head state cotangent dS lives in ``ds_scr[h]`` across
+    chunk steps. All forward intra-chunk quantities are recomputed in f32
+    from the saved inputs + the chunk's entering state.
+    """
+    ci = pl.program_id(1)
+    hi = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _seed():
+        # reverse sweep starts at the LAST chunk: seed with the final
+        # state's cotangent
+        ds_scr[hi] = dsfin_ref[0, 0]
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)            # [q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)             # [q]
+    a = a_ref[0]
+    bm = b_ref[0].astype(jnp.float32)                    # [q, N]
+    cm = c_ref[0].astype(jnp.float32)                    # [q, N]
+    S = senter_ref[0, 0, 0]                              # [P, N] entering
+    dy = dy_ref[0, :, 0, :].astype(jnp.float32)          # [q, P]
+    M = ds_scr[hi]                                       # [P, N] dS_out
+
+    q = chunk
+    dAv = dt * a
+    cum = jnp.cumsum(dAv)
+    ct = cum[-1]
+    e = jnp.exp(cum)                                     # [q]
+    decay_out = jnp.exp(ct - cum)                        # [q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    g = jnp.where(jj <= ii, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)
+    w = cb * g * dt[None, :]
+
+    # --- intra-chunk path: y = W·x -------------------------------------------
+    dw = jnp.dot(dy, x.T, preferred_element_type=jnp.float32)    # [q, q]
+    dx = jnp.dot(w.T, dy, preferred_element_type=jnp.float32)    # [q, P]
+    dcb = dw * g * dt[None, :]
+    dcm = jnp.dot(dcb, bm, preferred_element_type=jnp.float32)
+    dbm = jnp.dot(dcb.T, cm, preferred_element_type=jnp.float32)
+    ddt = (dw * cb * g).sum(0)                                   # [q]
+
+    # --- state-output path: S_out = e^ct·S + (x ∘ decay_out·dt)ᵀ·B ----------
+    xm = jnp.dot(x, M, preferred_element_type=jnp.float32)       # [q, N]
+    dx += (decay_out * dt)[:, None] * jnp.dot(
+        bm, M.T, preferred_element_type=jnp.float32)
+    dbm += (decay_out * dt)[:, None] * xm
+    di = (xm * bm).sum(-1)                       # [q] d(decay_in = e^{ct-c}dt)
+    ddt += di * decay_out
+
+    # --- inter-chunk y path: y += e ∘ (C·S_enterᵀ) ---------------------------
+    cs = jnp.dot(cm, S.T, preferred_element_type=jnp.float32)    # [q, P]
+    dcm += e[:, None] * jnp.dot(dy, S, preferred_element_type=jnp.float32)
+
+    # --- cum / ct cotangents -------------------------------------------------
+    gg = dw * cb * dt[None, :] * g               # dG ∘ G (i, j)
+    dcum = gg.sum(1) - gg.sum(0)                 # +row(i), −col(j)
+    dcum += (dy * cs).sum(-1) * e                # e_i = exp(cum_i)
+    dcum -= di * decay_out * dt                  # exp(ct − cum_j) direct
+    dct = (di * decay_out * dt).sum()
+    dct += jnp.exp(ct) * (M * S).sum()           # e^ct·S in S_out
+    last = jax.lax.broadcasted_iota(jnp.int32, (q,), 0) == q - 1
+    dcum += jnp.where(last, dct, 0.0)            # ct = cum[q-1]
+    # cum = cumsum(dA)  ⇒  ddA_j = Σ_{i≥j} dcum_i (reverse cumsum)
+    dda = dcum.sum() - jnp.cumsum(dcum) + dcum
+    ddt += dda * a
+    da = (dda * dt).sum()
+
+    # --- carry to the previous chunk ----------------------------------------
+    ds_scr[hi] = jnp.exp(ct) * M + jnp.dot(
+        (dy * e[:, None]).T, cm, preferred_element_type=jnp.float32)
+
+    dx_ref[0, :, 0, :] = dx
+    ddt_ref[0, :, 0] = ddt
+    da_ref[0, 0, 0] = da
+
+    @pl.when(hi == 0)
+    def _first_head():
+        db_ref[0] = dbm
+        dc_ref[0] = dcm
+
+    @pl.when(hi != 0)
+    def _other_heads():
+        db_ref[0] += dbm
+        dc_ref[0] += dcm
+
+
+def ssd_scan_bwd(x, dt, A, Bm, Cm, s_enter, dy, ds_final, *,
+                 chunk: int = 128, interpret: bool = False):
+    """Gradients (dx, ddt, dA, dBm, dCm) of ``ssd_scan``.
+
+    Inputs as the forward, plus ``s_enter`` [B,NC,H,P,N] from
+    ``ssd_scan(..., return_states=True)`` and the output cotangents
+    (dy [B,T,H,P], ds_final [B,H,P,N]). One reverse pallas sweep — no
+    forward recompute.
+    """
+    b, t, h, p = x.shape
+    n = Bm.shape[-1]
+    nc = t // chunk
+    rev = lambda ci: nc - 1 - ci     # noqa: E731 - reversed chunk order
+
+    grid = (b, nc, h)
+    dx, ddt, da_part, dbm, dcm = pl.pallas_call(
+        functools.partial(_ssd_bwd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda bi, ci, hi: (bi, rev(ci), hi, 0)),
+            pl.BlockSpec((1, chunk, 1),
+                         lambda bi, ci, hi: (bi, rev(ci), hi)),
+            pl.BlockSpec((1,), lambda bi, ci, hi: (hi,)),
+            pl.BlockSpec((1, chunk, n),
+                         lambda bi, ci, hi: (bi, rev(ci), 0)),
+            pl.BlockSpec((1, chunk, n),
+                         lambda bi, ci, hi: (bi, rev(ci), 0)),
+            pl.BlockSpec((1, 1, 1, p, n),
+                         lambda bi, ci, hi: (bi, rev(ci), hi, 0, 0)),
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda bi, ci, hi: (bi, rev(ci), hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, ci, hi: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda bi, ci, hi: (bi, rev(ci), hi, 0)),
+            pl.BlockSpec((1, chunk, 1),
+                         lambda bi, ci, hi: (bi, rev(ci), hi)),
+            pl.BlockSpec((1, 1, 1), lambda bi, ci, hi: (bi, rev(ci), hi)),
+            pl.BlockSpec((1, chunk, n),
+                         lambda bi, ci, hi: (bi, rev(ci), 0)),
+            pl.BlockSpec((1, chunk, n),
+                         lambda bi, ci, hi: (bi, rev(ci), 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, t, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, t, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, t, n), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, Cm, s_enter,
+      dy.astype(jnp.float32), ds_final.astype(jnp.float32))
+    # per-(b, chunk, head) dA partials fold to [H] outside the kernel
+    da = da_part.sum(axis=(0, 1))
+    return (dx.astype(x.dtype), ddt.astype(dt.dtype), da.astype(A.dtype),
+            dbm.astype(Bm.dtype), dcm.astype(Cm.dtype))

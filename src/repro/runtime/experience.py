@@ -245,6 +245,7 @@ class MixedExperienceSource:
                                       self._pending[n:])
                 if _tel is not None:
                     _trace_pop(out, "mixed")
+                    self._blend_trace(out)
                 return out
             taken_real += self._mix_round(need, want_real, taken_real)
             if len(self._pending) >= n:
@@ -269,6 +270,7 @@ class MixedExperienceSource:
                                       self._pending[max_items:])
                 if _tel is not None:
                     _trace_pop(out, "mixed")
+                    self._blend_trace(out)
                 return out
             self._mix_round(max_items, want_real, 0)
             if self._pending:
@@ -276,6 +278,20 @@ class MixedExperienceSource:
             if deadline is not None and time.monotonic() >= deadline:
                 return None
             time.sleep(poll_s)
+
+    def _blend_trace(self, out: List[Any]) -> None:
+        """One ``mixed.blend`` instant per served drain, on the batch's
+        trace id (first traced item): the real/imagined diet actually
+        served shows up next to wm.imagine on the Perfetto timeline."""
+        first = out[0]
+        trace = first.get("_trace") if isinstance(first, dict) else None
+        _tel.instant("mixed.blend", cat="experience",
+                     trace=int(trace) if trace is not None else None,
+                     args={"count": len(out),
+                           "real_consumed": self.real_consumed,
+                           "imagined_consumed": self.imagined_consumed,
+                           "real_fraction": self.real_fraction},
+                     flow="step")
 
     def __len__(self) -> int:
         return len(self.real) + len(self.imagined)

@@ -96,7 +96,8 @@ class AcceRLSystem:
             self.transport_server = self.registry.register(TransportServer(
                 host=host, port=port,
                 shm_threshold=tcfg.shm_threshold_bytes, token=tcfg.token,
-                journal=self.journal))
+                journal=self.journal,
+                weight_lane_bytes=tcfg.weight_lane_bytes))
             self.transport_server.add_channel("experience", self.experience)
             if self.frame_channel is not None:
                 self.transport_server.add_channel("frames",
@@ -181,6 +182,8 @@ class AcceRLSystem:
                     use_ring=(tcfg.kind == "ring"),
                     ring_bytes=tcfg.ring_bytes,
                     put_window=tcfg.put_window,
+                    adaptive_window=tcfg.adaptive_put_window,
+                    use_weight_lane=(tcfg.weight_lane_bytes > 0),
                     shm_threshold=tcfg.shm_threshold_bytes,
                     connect_timeout_s=tcfg.connect_timeout_s,
                     latency_mean_ms=remote_latency_ms,

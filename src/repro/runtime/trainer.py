@@ -100,7 +100,11 @@ class TrainerWorker(Service):
         self.prefetcher = Prefetcher(
             source, batch_episodes,
             functools.partial(collate_segments, metrics=self.metrics),
-            depth=rt.prefetch_depth)
+            depth=rt.prefetch_depth,
+            drain_timeout_s=rt.prefetch_drain_timeout_s,
+            idle_timeout_max_s=rt.prefetch_idle_timeout_s,
+            stage_batches=rt.prefetch_staging,
+            to_device=rt.prefetch_to_device)
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_interval = checkpoint_interval
         self.metrics_log: List[Dict] = []

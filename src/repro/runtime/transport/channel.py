@@ -53,7 +53,7 @@ from repro.runtime.experience import ExperienceChannel
 from repro.runtime.transport.codec import (decode_pytree, encode_pytree,
                                            frame_bytes, plan_pytree,
                                            recv_frame, send_frame)
-from repro.runtime.transport.ring import RingError, ShmRing
+from repro.runtime.transport.ring import RingError, RingView, ShmRing
 
 try:
     from multiprocessing import shared_memory
@@ -86,7 +86,42 @@ def _jittered(delay: float) -> float:
 
 __all__ = ["TransportError", "ChannelClosed", "WireClient", "long_poll",
            "PutStream", "SocketChannel", "ShmChannel", "ShmRingChannel",
-           "shm_read", "shm_write", "parse_address"]
+           "RingLease", "release_lease", "shm_read", "shm_write",
+           "parse_address"]
+
+
+class RingLease:
+    """Refcounted handle over one leased pop-reply ring record.
+
+    A zero-copy pop decodes N items whose array leaves all view the SAME
+    :class:`~repro.runtime.transport.ring.RingView`; each item carries
+    this lease under ``"_lease"`` and the underlying view is released
+    only when every item has been consumed (copied into a staging
+    buffer) and released. Idempotent per item; thread-safe."""
+
+    __slots__ = ("_view", "_refs", "_lock")
+
+    def __init__(self, view: RingView, refs: int):
+        self._view = view
+        self._refs = max(int(refs), 1)
+        self._lock = threading.Lock()
+
+    def release(self) -> None:
+        with self._lock:
+            self._refs -= 1
+            done = self._refs == 0
+        if done:
+            self._view.release()
+
+
+def release_lease(item: Any) -> None:
+    """Release ``item``'s ring lease, if it carries one (consumer-side
+    helper: call AFTER the item's arrays have been copied out — the views
+    die with the lease)."""
+    if isinstance(item, dict):
+        lease = item.pop("_lease", None)
+        if lease is not None:
+            lease.release()
 
 
 def parse_address(address: str) -> Tuple[str, int]:
@@ -388,6 +423,7 @@ class PutStream:
     def __init__(self, address: Tuple[str, int], chan: str, *,
                  window: int = 32, ring_bytes: int = 0,
                  ack_every: int = 0,
+                 adaptive: bool = False,
                  connect_timeout: float = 20.0,
                  reconnect_attempts: int = 0,
                  reconnect_backoff_s: float = 0.1,
@@ -403,6 +439,19 @@ class PutStream:
         if ack_every <= 0:
             ack_every = max(self.window // 4, 1)
         self.ack_every = max(1, min(ack_every, max(self.window // 2, 1)))
+        # adaptive streaming: tune the EFFECTIVE window/ack cadence online
+        # from observed cumulative-ack RTT. The configured values are hard
+        # BOUNDS — the effective window starts at the upper bound (steady
+        # RTT therefore never throttles below static behavior), halves on
+        # verdict pressure or an RTT spike vs the EWMA, and recovers
+        # multiplicatively on low occupancy / settled RTT.
+        self.adaptive = bool(adaptive)
+        self._win_min = max(1, self.window // 8)
+        self.window_effective = self.window
+        self.ack_every_effective = self.ack_every
+        self._ack_every_sent = self.ack_every   # what the server applies
+        self._rtt_ewma = 0.0
+        self.window_backoffs = 0
         self.stream_id = stream_id or binascii.hexlify(os.urandom(8)).decode()
         self._ring_bytes = int(ring_bytes)
         self._connect_timeout = connect_timeout
@@ -455,7 +504,8 @@ class PutStream:
             ring = ShmRing.create(self._ring_bytes)
         header = {"m": "stream.open", "chan": self.chan,
                   "stream": self.stream_id, "window": self.window,
-                  "ack_every": self.ack_every}
+                  "ack_every": self.ack_every_effective}
+        self._ack_every_sent = self.ack_every_effective
         if ring is not None:
             header["ring"] = ring.name
         try:
@@ -592,8 +642,8 @@ class PutStream:
                 f"flush smaller batches")
         with self._cv:
             waited = 0.0
-            while (len(self._pending) >= self.window and not self.closed
-                   and self.failed is None):
+            while (len(self._pending) >= self.window_effective
+                   and not self.closed and self.failed is None):
                 try:                       # acks can't arrive for frames
                     self._flush_sendbuf()  # still sitting in the buffer
                 except OSError:
@@ -608,7 +658,8 @@ class PutStream:
             ctx = _tel.wire_ctx() if _tel is not None else None
             seq = self._next_seq
             self._next_seq += 1
-            self._pending[seq] = (payload, len(items), ctx)
+            self._pending[seq] = (payload, len(items), ctx,
+                                  time.monotonic())
             self.items_enqueued += len(items)
             try:
                 self._send_frame(seq, payload, len(items), ctx)
@@ -685,18 +736,58 @@ class PutStream:
             if not acks:
                 continue                   # stream.open reply / empty drain
             with self._cv:
+                now = time.monotonic()
+                rtt = None
+                rejected = 0
                 for key, verdicts in acks.items():
                     entry = self._pending.pop(int(key), None)
                     if entry is None:
                         continue
                     count = entry[1]
+                    rtt = now - entry[3]   # newest ack wins: one sample
                     verdicts = [bool(v) for v in verdicts]
                     verdicts += [False] * (count - len(verdicts))
                     accepted = sum(verdicts[:count])
                     self.items_acked += count
                     self.items_accepted += accepted
                     self.items_rejected += count - accepted
+                    rejected += count - accepted
+                if self.adaptive and rtt is not None:
+                    self._tune(rtt, rejected)
                 self._cv.notify_all()
+
+    def _tune(self, rtt: float, rejected: int) -> None:
+        """One adaptive-window step (caller holds the lock; one call per
+        cumulative-ack batch). Backoff halves the effective window on
+        verdict pressure (the server channel is shedding load — pushing a
+        deeper pipeline at it only grows the replay window) or an RTT
+        spike past 2x the EWMA (the server stopped keeping up); recovery
+        is multiplicative, on low window occupancy or on RTT back at/below
+        the EWMA. The server's ack cadence follows via ``stream.tune`` so
+        a shrunken window still gets acks in time to free itself."""
+        ewma = self._rtt_ewma
+        self._rtt_ewma = rtt if ewma <= 0.0 else 0.8 * ewma + 0.2 * rtt
+        eff = self.window_effective
+        if rejected or (ewma > 0.0 and rtt > 2.0 * ewma):
+            eff = max(self._win_min, eff // 2)
+            if eff < self.window_effective:
+                self.window_backoffs += 1
+        elif (len(self._pending) * 2 <= eff or rtt <= self._rtt_ewma):
+            eff = min(self.window, max(eff + 1, (eff * 3) // 2))
+        self.window_effective = eff
+        self.ack_every_effective = max(
+            1, min(self.ack_every, max(eff // 2, 1)))
+        if self.ack_every_effective != self._ack_every_sent:
+            self._ack_every_sent = self.ack_every_effective
+            try:
+                self._sendbuf += frame_bytes(
+                    {"m": "stream.tune", "chan": self.chan,
+                     "stream": self.stream_id,
+                     "ack_every": self.ack_every_effective})
+                self._sendbuf_frames += 1
+                self._flush_sendbuf()
+            except (OSError, ValueError):
+                pass                       # the recv loop owns the redial
 
     def _reconnect(self) -> bool:
         """Redial with backoff, re-open the stream, replay the unacked
@@ -731,7 +822,12 @@ class PutStream:
                 self._sendbuf_frames = 0
                 try:
                     self._open()
-                    for seq, (payload, count, ctx) in self._pending.items():
+                    now = time.monotonic()
+                    for seq, entry in list(self._pending.items()):
+                        payload, count, ctx = entry[0], entry[1], entry[2]
+                        # refresh t_sent: a replayed frame's RTT clock
+                        # starts at the replay, not the original send
+                        self._pending[seq] = (payload, count, ctx, now)
                         self._send_frame(seq, payload, count, ctx)
                         self.replayed_frames += 1
                     self._flush_sendbuf()
@@ -759,6 +855,10 @@ class PutStream:
                 "replayed_frames": float(self.replayed_frames),
                 "reconnects": float(self.reconnects),
                 "window": float(self.window),
+                "window_effective": float(self.window_effective),
+                "ack_every_effective": float(self.ack_every_effective),
+                "window_backoffs": float(self.window_backoffs),
+                "rtt_ewma_s": float(self._rtt_ewma),
             }
         return out
 
@@ -806,7 +906,8 @@ class SocketChannel(ExperienceChannel):
                  reconnect_attempts: int = 0,
                  reconnect_backoff_s: float = 0.1,
                  put_window: int = 0,
-                 ring_bytes: int = 0):
+                 ring_bytes: int = 0,
+                 adaptive_window: bool = False):
         self.name = name
         self.address = tuple(address)
         self._connect_timeout = connect_timeout
@@ -814,6 +915,7 @@ class SocketChannel(ExperienceChannel):
         self._reconnect_backoff_s = reconnect_backoff_s
         self._put_window = int(put_window)
         self._ring_bytes = int(ring_bytes)
+        self._adaptive_window = bool(adaptive_window)
         self._stream: Optional[PutStream] = None
         self._stream_failed_at = 0.0
         self._stream_lock = threading.Lock()
@@ -833,6 +935,11 @@ class SocketChannel(ExperienceChannel):
     def _pop_payload(self, resp: Dict, body: bytes) -> bytes:
         return body
 
+    def _decode_pop(self, resp: Dict, body: bytes) -> List[Any]:
+        """Decode one pop reply (hook: the ring subclass decodes straight
+        out of a leased ring view when zero-copy pops are enabled)."""
+        return decode_pytree(self._pop_payload(resp, body))
+
     # -- streaming put path ---------------------------------------------------
     def _put_stream(self) -> PutStream:
         with self._stream_lock:
@@ -849,6 +956,7 @@ class SocketChannel(ExperienceChannel):
                     self._stream = PutStream(
                         self.address, self.name, window=self._put_window,
                         ring_bytes=self._ring_bytes,
+                        adaptive=self._adaptive_window,
                         connect_timeout=self._connect_timeout,
                         reconnect_attempts=self._reconnect_attempts,
                         reconnect_backoff_s=self._reconnect_backoff_s)
@@ -919,7 +1027,7 @@ class SocketChannel(ExperienceChannel):
             timeout)
         if got is None:
             return None
-        return decode_pytree(self._pop_payload(*got))
+        return self._decode_pop(*got)
 
     def pop_many(self, max_items: int, timeout: Optional[float] = None
                  ) -> Optional[List[Any]]:
@@ -934,7 +1042,7 @@ class SocketChannel(ExperienceChannel):
             timeout)
         if got is None:
             return None
-        return decode_pytree(self._pop_payload(*got))
+        return self._decode_pop(*got)
 
     def __len__(self) -> int:
         try:
@@ -983,7 +1091,8 @@ class ShmChannel(SocketChannel):
                  shm_threshold: int = 1 << 16,
                  reconnect_attempts: int = 0,
                  reconnect_backoff_s: float = 0.1,
-                 put_window: int = 0):
+                 put_window: int = 0,
+                 adaptive_window: bool = False):
         if shared_memory is None:
             raise TransportError(
                 "ShmChannel needs multiprocessing.shared_memory")
@@ -991,7 +1100,8 @@ class ShmChannel(SocketChannel):
                          shm_threshold=shm_threshold,
                          reconnect_attempts=reconnect_attempts,
                          reconnect_backoff_s=reconnect_backoff_s,
-                         put_window=put_window)
+                         put_window=put_window,
+                         adaptive_window=adaptive_window)
 
 
 class ShmRingChannel(SocketChannel):
@@ -1025,17 +1135,26 @@ class ShmRingChannel(SocketChannel):
                  reconnect_attempts: int = 0,
                  reconnect_backoff_s: float = 0.1,
                  put_window: int = 32,
-                 ring_bytes: int = 8 << 20):
+                 ring_bytes: int = 8 << 20,
+                 adaptive_window: bool = False,
+                 zero_copy_pop: bool = False):
         if shared_memory is None:
             raise TransportError(
                 "ShmRingChannel needs multiprocessing.shared_memory")
         self._s2c: Optional[ShmRing] = None
+        # opt-in zero-copy pops: decoded items view the ring in place and
+        # carry a RingLease the CONSUMER must release after copying the
+        # arrays out (the Prefetcher does, after collate). Off by
+        # default: a consumer that drops items on the floor would pin the
+        # ring and stall subsequent pop replies.
+        self.zero_copy_pop = bool(zero_copy_pop)
         super().__init__(address, name, connect_timeout=connect_timeout,
                          shm_threshold=shm_threshold,
                          reconnect_attempts=reconnect_attempts,
                          reconnect_backoff_s=reconnect_backoff_s,
                          put_window=max(int(put_window), 1),
-                         ring_bytes=int(ring_bytes))
+                         ring_bytes=int(ring_bytes),
+                         adaptive_window=adaptive_window)
         self._open_pop_ring(self._client.request)
 
     def _open_pop_ring(self, request) -> None:
@@ -1070,6 +1189,33 @@ class ShmRingChannel(SocketChannel):
             raise TransportError(
                 f"pop reply ring record missing/short (want {nbytes})")
         return got
+
+    def _decode_pop(self, resp: Dict, body: bytes) -> List[Any]:
+        """Zero-copy decode path: lease the pop-reply ring record in
+        place, decode over the live view, and stamp each item with the
+        shared :class:`RingLease`. Wraparound-split records come back
+        already copied (the lease is a no-op); non-dict items cannot
+        carry a lease and fall back to an owned copy."""
+        nbytes = resp.get("ring_nbytes")
+        if not self.zero_copy_pop or nbytes is None:
+            return super()._decode_pop(resp, body)
+        view = self._s2c.pop_view(timeout=5.0)
+        if view is None or view.nbytes != nbytes:
+            if view is not None:
+                view.release()
+            raise TransportError(
+                f"pop reply ring record missing/short (want {nbytes})")
+        if view.copied:               # split fallback: owned bytes already
+            return decode_pytree(view.data)
+        items = decode_pytree(view.data)
+        if not items or not all(isinstance(it, dict) for it in items):
+            out = decode_pytree(bytes(view.data))
+            view.release()
+            return out
+        lease = RingLease(view, len(items))
+        for item in items:
+            item["_lease"] = lease
+        return items
 
     def ring_stats(self) -> Dict[str, float]:
         return {} if self._s2c is None else self._s2c.stats()

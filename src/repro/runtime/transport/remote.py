@@ -80,6 +80,13 @@ class RemoteWorkerSpec:
     use_ring: bool = False
     ring_bytes: int = 8 << 20
     put_window: int = 0
+    # adaptive streaming: the PutStream tunes its effective window / ack
+    # cadence online from observed ack RTT; put_window stays the upper bound
+    adaptive_window: bool = False
+    # weight broadcast lane: the parent advertises blob positions in its
+    # persistent lane ring and this worker reads them positionally
+    # (same-host fan-out without per-acquire SHM segments)
+    use_weight_lane: bool = False
     shm_threshold: int = 1 << 16
     connect_timeout_s: float = 20.0
     latency_mean_ms: Optional[float] = None
@@ -251,10 +258,12 @@ def worker_main(spec: RemoteWorkerSpec) -> int:
     if spec.use_ring:
         Channel = ShmRingChannel
         chan_kw = dict(wire_kw, ring_bytes=spec.ring_bytes,
-                       put_window=(spec.put_window or 32))
+                       put_window=(spec.put_window or 32),
+                       adaptive_window=spec.adaptive_window)
     else:
         Channel = ShmChannel if spec.use_shm else SocketChannel
-        chan_kw = dict(wire_kw, put_window=spec.put_window)
+        chan_kw = dict(wire_kw, put_window=spec.put_window,
+                       adaptive_window=spec.adaptive_window)
     experience = Channel(spec.address, spec.channel, **chan_kw)
     frames = (Channel(spec.address, spec.frame_channel, **chan_kw)
               if spec.frame_channel else None)
@@ -279,16 +288,17 @@ def worker_main(spec: RemoteWorkerSpec) -> int:
             use_ring=spec.use_ring)
         services: List[Service] = []
     else:
-        # the weight wire keeps the per-message SHM path even in ring
-        # mode: acquires are rare (one per published version) and the
-        # blob cache already amortizes encoding, so there is no churn
-        # worth a ring
+        # the weight wire either rides the per-message SHM path or (with
+        # use_weight_lane) reads blobs positionally out of the parent's
+        # persistent broadcast lane ring — one publish serves N same-host
+        # readers with zero per-acquire segment churn
         store = WeightStoreTransport(
             spec.address, use_shm=spec.use_shm or spec.use_ring,
             shm_threshold=spec.shm_threshold,
             connect_timeout=spec.connect_timeout_s,
             reconnect_attempts=spec.reconnect_attempts,
-            reconnect_backoff_s=spec.reconnect_backoff_s)
+            reconnect_backoff_s=spec.reconnect_backoff_s,
+            use_lane=spec.use_weight_lane)
         inference = InferenceService(spec.cfg, store, spec.rt,
                                      temperature=spec.temperature,
                                      seed=spec.seed)

@@ -21,12 +21,26 @@ Layout (one 64-byte header cacheline, then ``capacity`` data bytes)::
     48  u64 items_read
     56  u64 torn_discards          (recover() bumps it per discarded tail)
 
-Records are contiguous — ``[u64 seq | u32 nbytes | u32 flags | payload]``
-padded to 8 bytes. A record that would straddle the end of the data area
-is preceded by a WRAP marker (``nbytes = 0xFFFFFFFF``) and restarts at
-offset 0; a tail shorter than a record header is skipped implicitly by
-both sides. Offsets are monotone (never wrapped), so ``free = capacity -
-(write - read)`` with no ambiguity between full and empty.
+Records are ``[u64 seq | u32 nbytes | u32 flags | payload]`` padded to 8
+bytes. A :meth:`reserve`-based record that would straddle the end of the
+data area is preceded by a WRAP marker (``nbytes = 0xFFFFFFFF``) and
+restarts at offset 0 (writers get one contiguous view); a :meth:`push`
+record instead *splits* — header contiguous, payload tail wrapping to
+offset 0, flagged ``FLAG_SPLIT`` — so the tail bytes are not wasted. A
+tail shorter than a record header is skipped implicitly by both sides.
+Offsets are monotone (never wrapped), so ``free = capacity - (write -
+read)`` with no ambiguity between full and empty.
+
+Consumers have two pop flavors. :meth:`pop` is the classic copying pop.
+:meth:`pop_view` is the zero-copy ingest path: it returns a
+:class:`RingView` over the committed region WITHOUT advancing the read
+offset — the producer cannot reclaim the bytes under a live view (a full
+ring simply refuses the push) until the consumer calls
+:meth:`RingView.release`. Releases are ordered: the read offset advances
+over the released *prefix* only, so out-of-order releases are safe.
+Split records cannot be viewed contiguously and fall back to a two-piece
+copy (``RingView.copied`` is True); the per-ring ``bytes_copied`` /
+``views_served`` counters make the copy-elimination observable.
 
 Torn-write protection is the two-offset header: the producer publishes
 ``write`` (reserve) before the memcpy and ``commit`` only after it, so a
@@ -45,8 +59,9 @@ from __future__ import annotations
 
 import os
 import struct
+import threading
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 try:
     from multiprocessing import shared_memory
@@ -57,6 +72,7 @@ MAGIC = b"ACRLRNG1"
 HEADER_SIZE = 64
 RECORD_HEADER = struct.Struct("<QII")          # seq, nbytes, flags
 WRAP = 0xFFFFFFFF                              # nbytes sentinel: skip to 0
+FLAG_SPLIT = 0x1                               # payload wraps to offset 0
 
 _U64 = struct.Struct("<Q")
 _OFF_CAPACITY = 8
@@ -71,7 +87,8 @@ _OFF_TORN = 56
 #: path, so the sleep is short; close()/deadlines bound every wait
 POLL_S = 0.0005
 
-__all__ = ["RingError", "ShmRing", "MAGIC", "HEADER_SIZE", "WRAP"]
+__all__ = ["RingError", "RingView", "ShmRing", "MAGIC", "HEADER_SIZE",
+           "WRAP", "FLAG_SPLIT"]
 
 
 class RingError(RuntimeError):
@@ -92,6 +109,60 @@ def _pad8(n: int) -> int:
     return (n + 7) & ~7
 
 
+class RingView:
+    """A popped-but-not-yet-released record (zero-copy ingest lease).
+
+    ``data`` is a read-only memoryview straight into the committed ring
+    region (``copied`` False) or reassembled bytes when the record was
+    wraparound-split (``copied`` True). The ring's read offset does NOT
+    advance until :meth:`release` — while the lease is live the producer
+    sees the bytes as occupied and a full ring refuses to overwrite them.
+    Releases may arrive out of order; the ring advances over the released
+    prefix only. Usable as a context manager; release is idempotent.
+    """
+
+    __slots__ = ("data", "seq", "nbytes", "copied", "_ring", "_end",
+                 "_released")
+
+    def __init__(self, ring: "ShmRing", data, seq: int, end: int, *,
+                 copied: bool):
+        self.data = data
+        self.seq = seq
+        self.nbytes = len(data)
+        self.copied = copied
+        self._ring = ring
+        self._end = end
+        self._released = False
+
+    def release(self) -> None:
+        """Return the leased region to the producer (idempotent)."""
+        if self._released:
+            return
+        self._released = True
+        if not self.copied:
+            data, self.data = self.data, bytes()
+            try:
+                data.release()               # drop the SHM buffer pin
+            except BufferError:
+                # numpy views decoded over the lease still export the
+                # buffer; by the lease contract their CONTENTS are dead
+                # now (the consumer copied what it needed) — the mapping
+                # pin itself dies with the arrays via refcounting
+                pass
+            except AttributeError:  # pragma: no cover - bytes fallback
+                pass
+        self._ring._advance_released()
+
+    def __len__(self) -> int:
+        return self.nbytes
+
+    def __enter__(self) -> "RingView":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
 class ShmRing:
     """Single-producer single-consumer byte ring over one SHM segment."""
 
@@ -105,6 +176,13 @@ class ShmRing:
         self.capacity = _U64.unpack_from(buf, _OFF_CAPACITY)[0]
         if HEADER_SIZE + self.capacity > len(buf):
             raise RingError(f"ring segment {shm.name!r} truncated")
+        # consumer-side zero-copy state (per attachment, not in the SHM
+        # header: leases are a property of THIS consumer's mapping)
+        self._view_lock = threading.Lock()
+        self._pending_views: List[RingView] = []
+        self.views_served = 0        # zero-copy pops (no payload memcpy)
+        self.bytes_copied = 0        # payload bytes memcpy'd on the pop path
+        self.split_fallbacks = 0     # pop_view forced to copy (FLAG_SPLIT)
 
     # -- construction ---------------------------------------------------------
     @classmethod
@@ -216,18 +294,98 @@ class ShmRing:
         self._set(_OFF_COMMIT, self._reserved_end)
 
     def push(self, payload, timeout: Optional[float] = None) -> bool:
-        """Reserve + copy + commit one record; False on timeout (full)."""
+        """Copy + commit one record; False on timeout (full).
+
+        Unlike :meth:`reserve` (which must hand back ONE contiguous
+        writable view and therefore wastes the tail behind a WRAP
+        marker), push owns the memcpy and can *split* a record that
+        would straddle the end of the data area: header contiguous at
+        the tail, payload remainder wrapping to offset 0, flagged
+        ``FLAG_SPLIT``. Consumers reassemble split records by copy —
+        :meth:`pop_view` falls back to a two-piece copy for them.
+        """
         data = memoryview(payload)
-        view = self.reserve(len(data), timeout=timeout)
-        if view is None:
-            return False
-        view[:] = data
+        nbytes = len(data)
+        if nbytes > self.max_record():
+            raise RingError(f"record of {nbytes} bytes exceeds ring "
+                            f"max {self.max_record()} (capacity "
+                            f"{self.capacity})")
+        need = RECORD_HEADER.size + _pad8(nbytes)
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        buf = self._shm.buf
+        while True:
+            if self.closed:
+                return False
+            write = self._get(_OFF_WRITE)
+            pos = write % self.capacity
+            rem = self.capacity - pos
+            if rem < RECORD_HEADER.size:
+                skip, split = rem, False           # implicit tail skip
+            elif rem < need:
+                skip, split = 0, True              # wraparound-split record
+            else:
+                skip, split = 0, False
+            free = self.capacity - (write - self._get(_OFF_READ))
+            if free >= skip + need:
+                break
+            if self.closed or (deadline is not None
+                               and time.monotonic() >= deadline):
+                return False                       # full — e.g. live views
+            time.sleep(POLL_S)
+        start = (write + skip) % self.capacity
+        RECORD_HEADER.pack_into(buf, HEADER_SIZE + start,
+                                self._get(_OFF_ITEMS_COMMITTED), nbytes,
+                                FLAG_SPLIT if split else 0)
+        self._reserved_end = write + skip + need
+        self._set(_OFF_WRITE, self._reserved_end)  # reserve BEFORE payload
+        data0 = HEADER_SIZE + start + RECORD_HEADER.size
+        if split:
+            head = (self.capacity - start) - RECORD_HEADER.size
+            buf[data0:data0 + head] = data[:head]
+            buf[HEADER_SIZE:HEADER_SIZE + nbytes - head] = data[head:]
+        else:
+            buf[data0:data0 + nbytes] = data
         self.commit()
         return True
 
     # -- consumer -------------------------------------------------------------
-    def pop(self, timeout: Optional[float] = None) -> Optional[bytes]:
-        """Pop the oldest committed record (None on timeout). Only
+    def _skip(self, read: int, by: int) -> None:
+        """Advance the consumer cursor over a WRAP marker / implicit tail.
+        With live views pending, the read offset must not move (the
+        producer would reclaim leased bytes) — fold the skip into the
+        newest lease's extent so its release covers it."""
+        with self._view_lock:
+            if self._pending_views:
+                self._pending_views[-1]._end = read + by
+            else:
+                self._set(_OFF_READ, read + by)
+
+    def _cursor(self) -> int:
+        """Next unconsumed offset: past the newest lease when any are
+        live, the shared read offset otherwise."""
+        with self._view_lock:
+            if self._pending_views:
+                return self._pending_views[-1]._end
+        return self._get(_OFF_READ)
+
+    def _advance_released(self) -> None:
+        """Publish the released prefix of the lease queue: the shared
+        read offset (and items_read) jump over every leading lease whose
+        consumer is done with it."""
+        with self._view_lock:
+            while self._pending_views and self._pending_views[0]._released:
+                view = self._pending_views.pop(0)
+                self._set(_OFF_ITEMS_READ,
+                          self._get(_OFF_ITEMS_READ) + 1)
+                self._set(_OFF_READ, view._end)
+
+    def _pop_record(self,
+                    timeout: Optional[float] = None) -> Optional[RingView]:
+        """Shared pop core: locate + lease the oldest committed record.
+        Contiguous records come back as an unreleased zero-copy lease;
+        wraparound-split records are reassembled by copy and their lease
+        auto-released (the ordered prefix rule still holds). Only
         committed records are ever visible — a torn (reserved, never
         committed) tail is invisible by construction."""
         deadline = (None if timeout is None
@@ -236,40 +394,80 @@ class ShmRing:
         while True:
             if self.closed:
                 return None
-            read = self._get(_OFF_READ)
+            read = self._cursor()
             if read < self._get(_OFF_COMMIT):
                 pos = read % self.capacity
                 rem = self.capacity - pos
                 if rem < RECORD_HEADER.size:       # implicit tail skip
-                    self._set(_OFF_READ, read + rem)
+                    self._skip(read, rem)
                     continue
-                seq, nbytes, _ = RECORD_HEADER.unpack_from(
+                seq, nbytes, flags = RECORD_HEADER.unpack_from(
                     buf, HEADER_SIZE + pos)
                 if nbytes == WRAP:
-                    self._set(_OFF_READ, read + rem)
+                    self._skip(read, rem)
                     continue
-                # bound by what reserve() can legally have written AND by
-                # the mapping — a corrupt length must raise, never yield
-                # a silently clamped short read
+                # bound by what a producer can legally have written AND
+                # by the mapping — a corrupt length must raise, never
+                # yield a silently clamped short read
                 if (nbytes > self.max_record()
-                        or pos + RECORD_HEADER.size + nbytes
-                        > self.capacity):
+                        or (not flags & FLAG_SPLIT
+                            and pos + RECORD_HEADER.size + nbytes
+                            > self.capacity)):
                     raise RingError(f"corrupt ring record: {nbytes} bytes "
                                     f"claimed at offset {read}")
-                expect = self._get(_OFF_ITEMS_READ)
+                with self._view_lock:
+                    expect = (self._get(_OFF_ITEMS_READ)
+                              + len(self._pending_views))
                 if seq != expect:
                     raise RingError(f"corrupt ring: record seq {seq} != "
                                     f"expected {expect}")
+                end = read + RECORD_HEADER.size + _pad8(nbytes)
                 data0 = HEADER_SIZE + pos + RECORD_HEADER.size
-                out = bytes(buf[data0:data0 + nbytes])
-                self._set(_OFF_ITEMS_READ, expect + 1)
-                self._set(_OFF_READ,
-                          read + RECORD_HEADER.size + _pad8(nbytes))
-                return out
+                if flags & FLAG_SPLIT:
+                    head = rem - RECORD_HEADER.size
+                    data = (bytes(buf[data0:data0 + head])
+                            + bytes(buf[HEADER_SIZE:
+                                        HEADER_SIZE + nbytes - head]))
+                    self.bytes_copied += nbytes
+                    self.split_fallbacks += 1
+                    view = RingView(self, data, seq, end, copied=True)
+                else:
+                    mv = buf[data0:data0 + nbytes].toreadonly()
+                    view = RingView(self, mv, seq, end, copied=False)
+                with self._view_lock:
+                    self._pending_views.append(view)
+                if view.copied:
+                    # nothing pins the ring for a copied record; ordered
+                    # advance still waits for earlier live leases
+                    view.release()
+                return view
             if self.closed or (deadline is not None
                                and time.monotonic() >= deadline):
                 return None
             time.sleep(POLL_S)
+
+    def pop(self, timeout: Optional[float] = None) -> Optional[bytes]:
+        """Pop the oldest committed record as owned bytes (None on
+        timeout) — the classic copying pop."""
+        view = self._pop_record(timeout=timeout)
+        if view is None:
+            return None
+        if view.copied:
+            return view.data                       # already owned bytes
+        out = bytes(view.data)
+        self.bytes_copied += len(out)
+        view.release()
+        return out
+
+    def pop_view(self, timeout: Optional[float] = None) -> Optional[RingView]:
+        """Zero-copy pop: lease the oldest committed record in place (see
+        :class:`RingView`). The caller MUST release the view — the
+        producer blocks on the leased bytes until then. Split records
+        fall back to an (auto-released) copy."""
+        view = self._pop_record(timeout=timeout)
+        if view is not None and not view.copied:
+            self.views_served += 1
+        return view
 
     # -- recovery -------------------------------------------------------------
     def recover(self) -> bool:
@@ -283,6 +481,54 @@ class ShmRing:
         self._set(_OFF_WRITE, commit)
         self._set(_OFF_TORN, self._get(_OFF_TORN) + 1)
         return True
+
+    # -- broadcast lane (single writer, many positional readers) --------------
+    def publish_blob(self, payload) -> Tuple[int, int]:
+        """Broadcast-lane write: one record per published version, located
+        by absolute position instead of popped. Readers never advance the
+        ring's read offset, so the writer reclaims EVERYTHING unread
+        before each write (a reader mid-copy of an old version detects
+        the overwrite via :meth:`read_at`'s header re-check and falls
+        back). Returns ``(header_pos, seq)`` for the acquire reply."""
+        data = memoryview(payload)
+        nbytes = len(data)
+        self._set(_OFF_ITEMS_READ, self._get(_OFF_ITEMS_COMMITTED))
+        self._set(_OFF_READ, self._get(_OFF_COMMIT))
+        seq = self._get(_OFF_ITEMS_COMMITTED)
+        view = self.reserve(nbytes, timeout=0)
+        if view is None:  # reclaim guarantees room up to max_record
+            raise RingError(f"weight-lane reserve of {nbytes} bytes "
+                            f"failed (max {self.max_record()})")
+        need = RECORD_HEADER.size + _pad8(nbytes)
+        pos = (self._reserved_end - need) % self.capacity
+        view[:] = data
+        try:
+            view.release()
+        except AttributeError:  # pragma: no cover
+            pass
+        self.commit()
+        return pos, seq
+
+    def read_at(self, pos: int, seq: int, nbytes: int) -> Optional[bytes]:
+        """Positional broadcast-lane read with torn-read detection: the
+        record header at ``pos`` is validated before AND after the copy.
+        The writer reclaiming the lane for a newer version mid-copy
+        changes the header (seqs are monotone, never reused), so a torn
+        copy comes back as None and the caller falls back to the socket
+        body."""
+        hdr = RECORD_HEADER.size
+        if pos < 0 or pos + hdr + nbytes > self.capacity:
+            return None
+        buf = self._shm.buf
+        rseq, rnbytes, _ = RECORD_HEADER.unpack_from(buf, HEADER_SIZE + pos)
+        if rseq != seq or rnbytes != nbytes:
+            return None
+        out = bytes(buf[HEADER_SIZE + pos + hdr:
+                        HEADER_SIZE + pos + hdr + nbytes])
+        rseq, rnbytes, _ = RECORD_HEADER.unpack_from(buf, HEADER_SIZE + pos)
+        if rseq != seq or rnbytes != nbytes:
+            return None
+        return out
 
     # -- introspection --------------------------------------------------------
     def __len__(self) -> int:
@@ -299,6 +545,10 @@ class ShmRing:
             "items_popped": float(self._get(_OFF_ITEMS_READ)),
             "depth_items": float(len(self)),
             "torn_discards": float(self._get(_OFF_TORN)),
+            "views_served": float(self.views_served),
+            "bytes_copied": float(self.bytes_copied),
+            "split_fallbacks": float(self.split_fallbacks),
+            "views_live": float(len(self._pending_views)),
         }
 
     # -- lifecycle ------------------------------------------------------------
@@ -311,6 +561,8 @@ class ShmRing:
         # give any same-process waiter a chance to observe `closed` before
         # the mapping disappears under it
         time.sleep(POLL_S)
+        for view in list(self._pending_views):
+            view.release()       # drop SHM pins so the unmap can proceed
         try:
             self._shm.close()
         except (OSError, BufferError):

@@ -166,7 +166,8 @@ class TransportServer(Service):
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
                  shm_threshold: int = 1 << 16, name: str = "transport",
-                 token: str = "", journal: Optional[TransportJournal] = None):
+                 token: str = "", journal: Optional[TransportJournal] = None,
+                 weight_lane_bytes: int = 0):
         super().__init__(name, role="transport")
         self._channels: Dict[str, Any] = {}
         self._store = None
@@ -199,6 +200,14 @@ class TransportServer(Service):
         # to every remote consumer (the LlamaRL-style broadcast amortized)
         self._weights_cache: Tuple[int, Optional[bytes]] = (-1, None)
         self._cache_lock = threading.Lock()
+        # broadcast weight lane: one persistent ShmRing holding the newest
+        # version's encoded blob; same-host readers attach by NAME and
+        # copy by absolute POSITION from the acquire reply — no
+        # per-acquire segment churn, no per-reader ring state
+        self._lane_bytes = int(weight_lane_bytes)
+        self._lane: Optional[ShmRing] = None
+        self._lane_info: Tuple[int, Optional[Dict]] = (-1, None)
+        self._lane_lock = threading.Lock()
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._listener.bind((host, port))         # bound at construction so
@@ -275,6 +284,11 @@ class TransportServer(Service):
             except OSError:
                 pass
         self._sweep_orphan_shm()
+        with self._lane_lock:
+            lane, self._lane = self._lane, None
+        if lane is not None:
+            lane.close()
+            lane.unlink()
         if self._journal is not None:
             # final snapshot so a later --resume-journal replays one
             # compact file instead of the whole log
@@ -469,6 +483,21 @@ class TransportServer(Service):
                 st = self._stream_state(h["chan"], h["stream"])
                 with st.lock:
                     return {"ok": True, "acks": st.drain_acks()}, b""
+            if m == "stream.tune":
+                # adaptive streaming: the client retunes the server's ack
+                # cadence online (bounded by the handshake window, like
+                # stream.open); pending acks drain immediately so a
+                # shrunken window frees itself without waiting out the
+                # OLD cadence
+                st = self._stream_state(h["chan"], h["stream"])
+                with st.lock:
+                    st.ack_every = max(1, min(int(h.get("ack_every", 1)),
+                                              max(st.window // 2, 1)))
+                    acks = st.drain_acks() if st.pending_acks else None
+                self.metrics.inc("stream_tunes")
+                if acks:
+                    return {"ok": True, "acks": acks}, b""
+                return None, b""
             if m == "chan.put_stream":
                 # ring payloads are consumed UNCONDITIONALLY (records and
                 # frames must stay aligned), dedup decides application
@@ -482,6 +511,11 @@ class TransportServer(Service):
                                        "truncated"}, b""
                     self.metrics.inc("ring_records_in")
                     self.metrics.inc("ring_bytes_in", float(len(body)))
+                    # the ingest pop is a genuine copy (decoded items are
+                    # stored long-lived in the hosted channel, so they
+                    # must not view the reclaimable ring) — counted so
+                    # the zero-copy claim is auditable end to end
+                    self.metrics.inc("bytes_copied", float(len(body)))
                 st = self._stream_state(h["chan"], h["stream"])
                 seq = int(h["seq"])
                 with st.lock:
@@ -571,8 +605,18 @@ class TransportServer(Service):
                 if raw is None:
                     return {"ok": False}, b""
                 payload, version = raw
-                return ({"ok": True, "version": version},
-                        self._weights_blob(payload, version))
+                blob = self._weights_blob(payload, version)
+                if h.get("want_lane"):
+                    # broadcast lane: the reply carries only the blob's
+                    # POSITION in the persistent lane ring — the reader
+                    # copies it out positionally (torn reads detected
+                    # client-side fall back to a no_lane re-acquire)
+                    info = self._lane_publish(version, blob)
+                    if info is not None:
+                        self.metrics.inc("weight_lane_serves")
+                        return {"ok": True, "version": version,
+                                **info}, b""
+                return {"ok": True, "version": version}, blob
             if m == "store.state":
                 return {"version": self._store.version(),
                         "draining": self._store.draining}, b""
@@ -745,3 +789,28 @@ class TransportServer(Service):
         with self._cache_lock:
             self._weights_cache = (version, blob)
         return blob
+
+    def _lane_publish(self, version: int, blob: bytes) -> Optional[Dict]:
+        """Place ``blob`` in the broadcast lane (once per version) and
+        return the positional descriptor for acquire replies — or None
+        when the lane is disabled, unavailable, or too small for this
+        blob (callers fall back to the socket/SHM body)."""
+        if self._lane_bytes <= 0 or shared_memory is None:
+            return None
+        with self._lane_lock:
+            if self._lane_info[0] == version:
+                return self._lane_info[1]
+            try:
+                if self._lane is None:
+                    self._lane = ShmRing.create(self._lane_bytes)
+                if len(blob) > self._lane.max_record():
+                    return None
+                pos, seq = self._lane.publish_blob(blob)
+            except (RingError, OSError):
+                return None
+            info = {"lane": self._lane.name, "lane_pos": int(pos),
+                    "lane_seq": int(seq), "lane_nbytes": len(blob)}
+            self._lane_info = (version, info)
+        self.metrics.inc("weight_lane_publishes")
+        self.metrics.inc("weight_lane_bytes", float(len(blob)))
+        return info

@@ -16,6 +16,8 @@ imagination worker generates a full τ̂ batch per device dispatch —
 """
 from __future__ import annotations
 
+import contextlib
+import os
 import time
 from typing import Dict
 
@@ -24,6 +26,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, WMConfig
+
+# Import-gated tracing (see transport.faults for the idiom).
+if os.environ.get("REPRO_TRACE"):
+    from repro.runtime import telemetry as _tel
+else:  # pragma: no cover - default path
+    _tel = None
+
+_NULL_CTX = contextlib.nullcontext()
 from repro.models.policy import sample_action_sequence
 from repro.models.transformer import FRONTEND_DIM
 from repro.runtime.service import Service
@@ -150,11 +160,19 @@ class ImaginationWorker(Service):
             frames = np.stack([s["frame"] for s in seeds]).astype(np.float32)
             steps = np.array([s["step"] for s in seeds], np.int32)
             self._key, sub = jax.random.split(self._key)
-            with self.metrics.timer("busy_s"):
-                out = self._fn(params, self.wm_params_ref["obs"],
-                               self.wm_params_ref["reward"], sub, tokens,
-                               frames, steps)
-                out = {k: np.asarray(v) for k, v in out.items()}
+            # the imagined batch's trace id: the policy version it was
+            # dreamed under, so wm.imagine lines up with the
+            # weights.publish flow on the Perfetto timeline
+            with (_tel.span("wm.imagine", cat="wm", trace=int(version),
+                            args={"batch": self.batch,
+                                  "horizon": self.wm.imagine_horizon,
+                                  "version": int(version)}, flow="step")
+                  if _tel is not None else _NULL_CTX):
+                with self.metrics.timer("busy_s"):
+                    out = self._fn(params, self.wm_params_ref["obs"],
+                                   self.wm_params_ref["reward"], sub, tokens,
+                                   frames, steps)
+                    out = {k: np.asarray(v) for k, v in out.items()}
             for i in range(self.batch):
                 self.img_channel.put({
                     "obs_tokens": out["obs_tokens"][i],

@@ -190,6 +190,78 @@ def test_attention_dispatch_parity(b, t, s, h, kv, d, window):
 
 
 # ---------------------------------------------------------------------------
+# real Pallas backward kernels (ISSUE 9): exact grad parity vs the jnp
+# twins at head_dim 64 AND 128 (interpret mode; the dq and dk/dv kernels
+# replay the saved LSE — any drift in the backward math shows up here)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [64, 128])
+@pytest.mark.parametrize("window", [None, 32])
+def test_flash_backward_kernel_grad_parity(d, window):
+    b, t, s, h, kv = 1, 128, 128, 4, 2
+    q = jnp.asarray(RNG.standard_normal((b, t, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, kv, d)), jnp.float32)
+
+    def loss(mode):
+        def f(q_, k_, v_):
+            with dispatch.forced(mode):
+                out = dispatch.attention(q_, k_, v_, window=window,
+                                         block=64)
+            return jnp.sum(out * out)
+        return f
+
+    g_p = jax.grad(loss("pallas"), argnums=(0, 1, 2))(q, k, v)
+    g_j = jax.grad(loss("jnp"), argnums=(0, 1, 2))(q, k, v)
+    for got, exp in zip(g_p, g_j):
+        _close(got, exp, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("d", [64, 128])
+def test_flash_backward_ragged_rows_grad_parity(d):
+    """Padded q rows (T % block != 0) must contribute exactly zero grad:
+    the backward kernels pad the LSE with a sentinel so exp(s - LSE)
+    vanishes on dead rows."""
+    b, t, s, h, kv = 1, 50, 50, 4, 4
+    q = jnp.asarray(RNG.standard_normal((b, t, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, kv, d)), jnp.float32)
+
+    def loss(mode):
+        def f(q_, k_, v_):
+            with dispatch.forced(mode):
+                out = dispatch.attention(q_, k_, v_, block=64)
+            return jnp.sum(out * out)
+        return f
+
+    g_p = jax.grad(loss("pallas"), argnums=(0, 1, 2))(q, k, v)
+    g_j = jax.grad(loss("jnp"), argnums=(0, 1, 2))(q, k, v)
+    for got, exp in zip(g_p, g_j):
+        _close(got, exp, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("p", [64, 128])
+def test_ssd_backward_kernel_grad_parity(p):
+    """The reverse-chunk SSD kernel: grads for every input (x, dt, A, B,
+    C) through BOTH outputs — a nonzero final-state cotangent seeds the
+    reverse state sweep."""
+    x, dt, a, bm, cm = _ssd_data(b=1, t=64, h=2, p=p, n=4, seed=9)
+
+    def loss(mode):
+        def f(x_, dt_, a_, b_, c_):
+            with dispatch.forced(mode):
+                y_, s_ = dispatch.ssd_scan(x_, dt_, a_, b_, c_, chunk=32)
+            return jnp.sum(y_ * y_) + jnp.sum(jnp.sin(s_))
+        return f
+
+    g_p = jax.grad(loss("pallas"), argnums=(0, 1, 2, 3, 4))(x, dt, a, bm,
+                                                            cm)
+    g_j = jax.grad(loss("jnp"), argnums=(0, 1, 2, 3, 4))(x, dt, a, bm, cm)
+    for got, exp in zip(g_p, g_j):
+        _close(got, exp, rtol=2e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
 # decode-path routing: single-token decode + the dense small-T fallback
 # ---------------------------------------------------------------------------
 

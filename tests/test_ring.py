@@ -166,6 +166,122 @@ def test_close_unblocks_waiters(ring):
     assert not t.is_alive() and out == [None]
 
 
+# ---------------------------------------------------------------------------
+# Zero-copy pops (ISSUE 9): leases, split-record fallback, overwrite refusal
+# ---------------------------------------------------------------------------
+
+
+def test_pop_view_zero_copy_roundtrip(ring):
+    payloads = [bytes([i]) * 100 for i in range(5)]
+    for p in payloads:
+        assert ring.push(p, timeout=1.0)
+    for p in payloads:
+        view = ring.pop_view(timeout=1.0)
+        assert view is not None and not view.copied
+        assert bytes(view.data) == p
+        assert view.data.readonly          # consumers cannot scribble back
+        view.release()
+    s = ring.stats()
+    assert s["views_served"] == 5
+    assert s["bytes_copied"] == 0          # nothing was memcpy'd out
+    assert s["views_live"] == 0
+
+
+def test_split_record_served_as_copy():
+    """A record wrapping the end of the buffer is stored SPLIT (no tail
+    skip) and served through the copy fallback — byte-exact, flagged."""
+    r = ShmRing.create(256)
+    try:
+        served_split = 0
+        for i in range(200):
+            payload = bytes([i % 251]) * (40 + i % 50)
+            assert r.push(payload, timeout=1.0)
+            view = r.pop_view(timeout=1.0)
+            assert bytes(view.data) == payload, f"iteration {i}"
+            served_split += int(view.copied)
+            view.release()
+        s = r.stats()
+        assert served_split > 0            # the wrap case actually happened
+        assert s["split_fallbacks"] == served_split
+        assert s["bytes_copied"] > 0       # only the split records copied
+    finally:
+        r.close()
+        r.unlink()
+
+
+def test_live_view_blocks_producer_overwrite():
+    """Leased bytes count as occupied: a producer that would overwrite a
+    live view gets the full-ring verdict instead, and space frees the
+    moment the lease is released."""
+    r = ShmRing.create(128)
+    try:
+        assert r.push(b"a" * 40, timeout=0.1)
+        view = r.pop_view(timeout=0.1)
+        assert bytes(view.data) == b"a" * 40
+        # read offset has NOT advanced: two more pushes fill the ring and
+        # the third is refused while the lease pins the region
+        assert r.push(b"b" * 40, timeout=0.1)
+        assert not r.push(b"c" * 40, timeout=0.05)
+        view.release()
+        assert r.push(b"c" * 40, timeout=0.5)      # lease gone, space back
+        assert r.pop(timeout=0.1) == b"b" * 40
+        assert r.pop(timeout=0.1) == b"c" * 40
+    finally:
+        r.close()
+        r.unlink()
+
+
+def test_out_of_order_release_advances_in_order():
+    """Releases free space only as an ordered prefix: releasing a LATER
+    view first reclaims nothing until the earlier one goes too."""
+    r = ShmRing.create(256)
+    try:
+        assert r.push(b"x" * 60, timeout=0.1)
+        assert r.push(b"y" * 60, timeout=0.1)
+        v1 = r.pop_view(timeout=0.1)
+        v2 = r.pop_view(timeout=0.1)
+        v2.release()                               # out of order
+        assert r.stats()["views_live"] == 2        # v2 parked behind v1
+        assert not r.push(b"z" * 90, timeout=0.05)  # v1 still pins the head
+        v1.release()
+        assert r.stats()["views_live"] == 0
+        assert r.push(b"z" * 90, timeout=0.5)
+    finally:
+        r.close()
+        r.unlink()
+
+
+def test_pop_view_corrupt_seq_raises(ring):
+    assert ring.push(b"x" * 24, timeout=0.1)
+    RECORD_HEADER.pack_into(ring._shm.buf, HEADER_SIZE, 999, 24, 0)
+    with pytest.raises(RingError):
+        ring.pop_view(timeout=0.1)
+
+
+def test_publish_blob_and_read_at():
+    """The weight-lane primitive: one blob per version, positional reads,
+    stale seq detected instead of serving torn bytes."""
+    r = ShmRing.create(1 << 10)
+    try:
+        reader = ShmRing.attach(r.name)
+        pos1, seq1 = r.publish_blob(b"v1" * 100)
+        assert reader.read_at(pos1, seq1, 200) == b"v1" * 100
+        pos2, seq2 = r.publish_blob(b"v2" * 120)
+        assert seq2 > seq1
+        assert reader.read_at(pos2, seq2, 240) == b"v2" * 120
+        # lap the ring so v1's record is actually overwritten: the stale
+        # (pos, seq) now fails header validation instead of serving
+        # someone else's bytes
+        for i in range(8):
+            pos2, seq2 = r.publish_blob(bytes([i]) * 300)
+        assert reader.read_at(pos1, seq1, 200) is None
+        assert reader.read_at(pos2, seq2, 300) == bytes([7]) * 300
+        reader.close()
+    finally:
+        r.close()
+        r.unlink()
+
+
 def _child_producer(name, count):
     r = ShmRing.attach(name)
     for i in range(count):

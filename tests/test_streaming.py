@@ -15,9 +15,11 @@ from repro.data.replay import FIFOReplayBuffer
 from repro.runtime.experience import (FifoChannel, MixedExperienceSource,
                                       RingChannel)
 from repro.runtime.transport import (PutStream, ShmChannel, ShmRingChannel,
-                                     SocketChannel, TransportServer)
-from repro.runtime.transport.channel import shared_memory
+                                     SocketChannel, TransportServer,
+                                     WeightStoreTransport)
+from repro.runtime.transport.channel import release_lease, shared_memory
 from repro.runtime.transport.ring import RingError
+from repro.runtime.weight_store import VersionedWeightStore
 
 
 @pytest.fixture()
@@ -342,6 +344,273 @@ def test_mixed_source_pop_many_partial_and_pins():
     got = src2.pop_many(4, timeout=1.0)
     assert 1 <= len(got) <= 4
     assert src2.real_consumed + src2.imagined_consumed == len(got)
+
+
+# ---------------------------------------------------------------------------
+# adaptive streaming (ISSUE 9): RTT-tuned effective window / ack cadence
+# ---------------------------------------------------------------------------
+
+def test_adaptive_tune_controller(server):
+    """The adaptive controller, stepped deterministically: steady RTT
+    never shrinks the effective window below the configured bound,
+    verdict pressure halves it (bounded below), the server's ack cadence
+    follows via stream.tune, and recovery restores the full window."""
+    name, _ = _host(server)
+    s = PutStream(server.address, name, window=8, adaptive=True)
+    try:
+        with s._lock:
+            s._tune(0.01, 0)                     # primes the EWMA
+            assert s.window_effective == 8 and s.window_backoffs == 0
+            for _ in range(6):                   # sustained rejections
+                s._tune(0.01, 3)
+            assert s.window_effective == s._win_min == 1
+            assert s.window_backoffs == 3        # 8 -> 4 -> 2 -> 1
+            assert s.ack_every_effective == 1    # cadence tracked the window
+            assert s._rtt_ewma > 0.0
+        # the retune really reached the server (async accept loop)
+        deadline = time.monotonic() + 5.0
+        while (server.metrics.counter("stream_tunes") < 1
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+        assert server.metrics.counter("stream_tunes") >= 1
+        with s._lock:
+            for _ in range(8):                   # settled RTT: recovery
+                s._tune(0.01, 0)
+            assert s.window_effective == 8       # back at the static bound
+            assert s.ack_every_effective == s.ack_every
+    finally:
+        s.close()
+
+
+def test_adaptive_stream_backs_off_under_pressure(server):
+    """End to end: a shedding channel (tiny, drop_newest) produces reject
+    verdicts; the adaptive stream halves its effective window at least
+    once, still acks every frame, and reports the RTT EWMA."""
+    name, local = _host(server, capacity=4, policy="drop_newest")
+    s = PutStream(server.address, name, window=16, adaptive=True)
+    for base in range(0, 100, 4):
+        s.put_many([_item(base + j) for j in range(4)])
+    assert s.flush(10.0), s.stats()
+    st = s.stats()
+    s.close()
+    assert st["items_acked"] == 100
+    assert st["items_accepted"] == 4 and st["items_rejected"] == 96
+    assert st["window_backoffs"] >= 1
+    assert st["window_effective"] >= 2            # bounded below (16 // 8)
+    assert st["rtt_ewma_s"] > 0.0
+    assert len(local) == 4
+
+
+def test_adaptive_stream_steady_delivery(server):
+    """A healthy channel under an adaptive stream: every item delivered,
+    effective window still within the configured bounds."""
+    name, local = _host(server, capacity=100_000)
+    s = PutStream(server.address, name, window=8, adaptive=True)
+    for base in range(0, 120, 4):
+        s.put_many([_item(base + j) for j in range(4)])
+    assert s.flush(10.0), s.stats()
+    st = s.stats()
+    s.close()
+    assert st["items_acked"] == 120 and st["items_accepted"] == 120
+    assert s._win_min <= st["window_effective"] <= st["window"]
+    assert len(local) == 120
+
+
+# ---------------------------------------------------------------------------
+# weight broadcast lane (ISSUE 9): positional reads, torn-read fallback
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def lane_server():
+    srv = TransportServer(weight_lane_bytes=1 << 20)
+    store = VersionedWeightStore()
+    srv.set_store(store)
+    srv.start()
+    srv.local_store = store
+    yield srv
+    srv.stop()
+    srv.join()
+
+
+@pytest.mark.skipif(shared_memory is None,
+                    reason="multiprocessing.shared_memory unavailable")
+def test_weight_lane_acquires_positionally(lane_server):
+    params = {"w": np.arange(512, dtype=np.float32), "b": np.float32(2.0)}
+    lane_server.local_store.publish(params, 1)
+    remote = WeightStoreTransport(lane_server.address, use_lane=True,
+                                  state_ttl=0.0)
+    try:
+        got, version = remote.acquire(newer_than=0, timeout=5.0)
+        assert version == 1
+        np.testing.assert_array_equal(got["w"], params["w"])
+        assert remote.lane_hits == 1 and remote.lane_fallbacks == 0
+        lane_server.local_store.publish(
+            {"w": params["w"] * 2, "b": np.float32(3.0)}, 2)
+        got2, v2 = remote.acquire(newer_than=1, timeout=5.0)
+        assert v2 == 2
+        np.testing.assert_array_equal(got2["w"], params["w"] * 2)
+        assert remote.lane_hits == 2
+        counters = lane_server.metrics.snapshot()["counters"]
+        assert counters["weight_lane_publishes"] == 2
+        assert counters["weight_lane_serves"] == 2
+    finally:
+        remote.close()
+
+
+@pytest.mark.skipif(shared_memory is None,
+                    reason="multiprocessing.shared_memory unavailable")
+def test_weight_lane_torn_read_falls_back_in_band(lane_server):
+    """A failed positional read (stale attachment / torn under a newer
+    publish) degrades to ONE in-band re-acquire — same params, counted."""
+    lane_server.local_store.publish({"w": np.full(64, 7.0, np.float32)}, 3)
+    remote = WeightStoreTransport(lane_server.address, use_lane=True,
+                                  state_ttl=0.0)
+    try:
+        remote._lane_read = lambda resp: None    # every lane read "torn"
+        got, version = remote.acquire(newer_than=-1, timeout=5.0)
+        assert version == 3
+        np.testing.assert_array_equal(got["w"], np.full(64, 7.0, np.float32))
+        assert remote.lane_fallbacks == 1 and remote.lane_hits == 0
+    finally:
+        remote.close()
+
+
+# ---------------------------------------------------------------------------
+# zero-copy pops through the ring channel (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(shared_memory is None,
+                    reason="multiprocessing.shared_memory unavailable")
+def test_ring_channel_zero_copy_pop_leases(server):
+    """zero_copy_pop=True: decoded items view the pop-reply ring in place
+    and carry one shared lease; releasing every item frees the ring."""
+    name, local = _host(server)
+    chan = ShmRingChannel(server.address, name, ring_bytes=1 << 22,
+                          zero_copy_pop=True)
+    local.put_many([_item(i, n=20_000) for i in range(6)])
+    got = chan.pop_many(6, timeout=5.0)
+    assert got is not None and len(got) == 6
+    assert all(g.get("_lease") is not None for g in got)
+    # the data is readable (and correct) while the lease is live
+    np.testing.assert_array_equal(got[2]["x"],
+                                  np.full(20_000, 2.0, np.float32))
+    rs = chan.ring_stats()
+    assert rs["views_served"] >= 1 and rs["views_live"] >= 1
+    assert rs["bytes_copied"] == 0               # nothing memcpy'd out yet
+    for g in got:
+        release_lease(g)
+    assert all("_lease" not in g for g in got)   # release_lease strips it
+    assert chan.ring_stats()["views_live"] == 0
+    # the ring keeps serving after the lease cycle
+    local.put_many([_item(9, n=20_000)])
+    more = chan.pop_many(2, timeout=5.0)
+    assert more is not None and len(more) == 1
+    np.testing.assert_array_equal(more[0]["x"],
+                                  np.full(20_000, 9.0, np.float32))
+    for g in more:
+        release_lease(g)
+    chan.close()
+
+
+# ---------------------------------------------------------------------------
+# prefetcher (ISSUE 9): idle backoff, lease release, staging pool
+# ---------------------------------------------------------------------------
+
+def test_prefetcher_idle_backoff_grows_and_resets():
+    """An empty source sees exponentially longer drain timeouts (capped),
+    and the first successful drain resets the cadence."""
+    class RecordingSource:
+        def __init__(self):
+            self.timeouts = []
+            self.feed = []
+            self.fed_at = None       # index of the drain that got items
+
+        def pop_many(self, n, timeout=None):
+            self.timeouts.append(timeout)
+            if self.feed:
+                out, self.feed = self.feed, []
+                self.fed_at = len(self.timeouts) - 1
+                return out
+            time.sleep(0.002)
+            return None
+
+    src = RecordingSource()
+    p = Prefetcher(src, 4, collate=lambda segs: list(segs), depth=1,
+                   drain_timeout_s=0.01, idle_timeout_max_s=0.08)
+    p.start()
+    try:
+        deadline = time.monotonic() + 5.0
+        while len(src.timeouts) < 8 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert src.timeouts[0] == pytest.approx(0.01)
+        assert max(src.timeouts[:8]) <= 0.08 + 1e-9     # capped
+        assert any(t > 0.01 for t in src.timeouts[:8])  # it actually grew
+        # a successful drain resets the timeout to the configured floor
+        src.feed = [{"i": i} for i in range(4)]
+        assert p.get(timeout=5.0) is not None
+        deadline = time.monotonic() + 5.0
+        while (src.fed_at is None
+               or len(src.timeouts) <= src.fed_at + 1) \
+                and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert src.timeouts[src.fed_at + 1] == pytest.approx(0.01)
+        assert p.metrics()["idle_backoffs"] >= 1
+    finally:
+        p.stop()
+
+
+def test_prefetcher_releases_ring_leases():
+    class FakeLease:
+        def __init__(self):
+            self.released = 0
+
+        def release(self):
+            self.released += 1
+
+    chan = FifoChannel(64)
+    leases = [FakeLease() for _ in range(8)]
+    chan.put_many([{"i": np.int32(i), "_lease": leases[i]}
+                   for i in range(8)])
+    p = Prefetcher(chan, 8, collate=lambda segs: list(segs), depth=1)
+    p.start()
+    try:
+        batch = p.get(timeout=5.0)
+        assert batch is not None and len(batch) == 8
+        assert all(l.released == 1 for l in leases)      # exactly once
+        assert all("_lease" not in b for b in batch)     # stripped
+        assert p.metrics()["views_served"] == 8
+    finally:
+        p.stop()
+
+
+def test_prefetcher_staging_pool_reuses_slabs():
+    """Shape-stable dict batches are carved into pooled page-aligned
+    slabs: after warmup every batch reuses a slab (zero batch-sized
+    allocations in steady state), and the copied bytes are counted."""
+    chan = FifoChannel(256)
+    collate = lambda segs: {"x": np.stack([s["x"] for s in segs]),
+                            "i": np.stack([s["i"] for s in segs])}
+    p = Prefetcher(chan, 4, collate=collate, depth=1, stage_batches=True,
+                   staging_slabs=2)
+    p.start()
+    try:
+        batches = 0
+        for round_ in range(4):
+            chan.put_many([_item(4 * round_ + j, n=64) for j in range(4)])
+            batch = p.get(timeout=5.0)
+            assert batch is not None
+            np.testing.assert_array_equal(
+                batch["x"][1], np.full(64, 4.0 * round_ + 1, np.float32))
+            # staged leaves are aligned views into the slab, not copies
+            assert batch["x"].ctypes.data % 64 == 0
+            batches += 1
+        m = p.metrics()
+        assert m["batches_built"] >= batches
+        assert m["bytes_copied"] > 0
+        assert m["staging_reuse"] >= 1           # the pool actually recycled
+        assert m["staging_slabs"] <= 2           # bounded allocations
+    finally:
+        p.stop()
 
 
 def test_prefetcher_accumulates_partial_drains():
