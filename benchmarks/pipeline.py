@@ -1,0 +1,170 @@
+"""Pipelined two-stage training vs the sequential same-device baseline.
+
+The claim (ISSUE 10 / ROADMAP "pipelined multi-device training runtime"):
+running the policy trainer and the world-model trainer as pipeline stages
+on DISJOINT submeshes (runtime/pipeline_exec.py static schedules) is at
+least as fast per round as running the two stages back-to-back on one
+device — and reports how much of each stream's round is bubble.
+
+Forces a 2-CPU-device XLA backend so the submeshes are real. On hosts
+with >= 2 physical cores the speedup assertion is enforced (same gating
+pattern as benchmarks/backpressure.py); on 1-core hosts the numbers are
+still recorded, the assertion is skipped.
+
+    REPRO_BENCH_OUT=/tmp/bench PYTHONPATH=src python -m benchmarks.pipeline
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import time
+
+# must land before the first jax import (device count is fixed at backend
+# init) — append, never clobber, any caller-provided XLA_FLAGS
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=2").strip()
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save, tiny_cfg
+from repro.configs.base import RLConfig, WMConfig
+from repro.core.train_step import init_train_state
+from repro.data.trajectory import dummy_batch
+from repro.envs.toy_manipulation import FRAME_DIM
+from repro.optim import adamw
+from repro.runtime.pipeline_exec import PipelineExecutor, SubmeshLayout
+from repro.runtime.step_program import build_train_step_program
+from repro.wm import denoiser as dn
+
+ROUNDS = 4
+K = 2                               # policy micro-batches per round
+WM_MICRO = 2                        # WM cycles per round
+
+
+def _wm_stage(wm: WMConfig, cfg):
+    """A real M_obs denoiser train step with its own carried state —
+    the second pipeline stage."""
+    key = jax.random.PRNGKey(7)
+    params = dn.denoiser_init(key, FRAME_DIM, cfg.action_dim,
+                              cfg.action_vocab_size, wm)
+    opt = adamw.init(params)
+    step = dn.make_denoiser_train_step(wm)
+    holder = {"params": params, "opt": opt, "key": key}
+
+    def run(batch):
+        f1, hist, ac = batch
+        holder["key"], sub = jax.random.split(holder["key"])
+        holder["params"], holder["opt"], loss = step(
+            holder["params"], holder["opt"], sub, f1, hist, ac)
+        jax.block_until_ready(loss)
+        return {"loss": float(loss)}
+
+    return run
+
+
+def _wm_batches(wm: WMConfig, cfg, n, *, batch=16, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        f1 = rng.standard_normal((batch, FRAME_DIM)).astype(np.float32)
+        hist = rng.standard_normal(
+            (batch, wm.history_frames, FRAME_DIM)).astype(np.float32)
+        ac = rng.integers(0, cfg.action_vocab_size,
+                          (batch, cfg.action_dim)).astype(np.int32)
+        out.append((f1, hist, ac))
+    return out
+
+
+def main() -> None:
+    cfg = tiny_cfg(layers=2, d_model=64)
+    rl = RLConfig(grad_accum=K, fused_loss=True, lr_policy=1e-4,
+                  lr_value=1e-3)
+    wm = WMConfig(history_frames=2, denoiser_layers=2, denoiser_d_model=64,
+                  diffusion_steps=4)
+    prog = build_train_step_program(cfg, rl)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    batch = dummy_batch(4, 4, 12, cfg.action_dim, cfg.vocab_size,
+                        cfg.action_vocab_size, num_prefix=1, seed=3)
+
+    # -- sequential baseline: both stages back-to-back on device 0 ----------
+    fused = prog.fused(donate=False)
+    seq_wm = _wm_stage(wm, cfg)
+    dev0 = jax.devices()[0]
+    with jax.default_device(dev0):
+        # warmup (compile both stages)
+        jax.block_until_ready(fused(state, batch))
+        for b in _wm_batches(wm, cfg, WM_MICRO, seed=99):
+            seq_wm(b)
+        seq_times = []
+        s = state
+        for r in range(ROUNDS):
+            wmb = _wm_batches(wm, cfg, WM_MICRO, seed=r)
+            t0 = time.perf_counter()
+            s, m = fused(s, batch)
+            jax.block_until_ready(m["loss"])
+            for b in wmb:
+                seq_wm(b)
+            seq_times.append(time.perf_counter() - t0)
+    t_seq = float(np.median(seq_times))
+
+    # -- pipelined: policy on device 0, WM on device 1 ----------------------
+    layout = SubmeshLayout.split(jax.devices())
+    assert layout.disjoint, "forced 2-device backend did not split"
+    pipe_wm = _wm_stage(wm, cfg)
+    feeds: list = []
+    ex = PipelineExecutor(prog, layout)
+    ex.set_wm_stage(pipe_wm, lambda: feeds.pop() if feeds else None,
+                    wm_micro=WM_MICRO)
+    # warmup (compile on the pipeline's devices)
+    feeds.extend(_wm_batches(wm, cfg, WM_MICRO, seed=99))
+    ex.run_round(state, batch)
+    pipe_times, bubbles = [], []
+    s = state
+    for r in range(ROUNDS):
+        feeds.extend(_wm_batches(wm, cfg, WM_MICRO, seed=r))
+        t0 = time.perf_counter()
+        s, m, _ = ex.run_round(s, batch)
+        pipe_times.append(time.perf_counter() - t0)
+        bubbles.append(dict(ex.last_bubble))
+    peak_grad = ex.peak_grad_bytes
+    ex.close()
+    t_pipe = float(np.median(pipe_times))
+
+    speedup = t_seq / max(t_pipe, 1e-9)
+    cores = multiprocessing.cpu_count() or 1
+    result = {
+        "rounds": ROUNDS,
+        "policy_microbatches": K,
+        "wm_microbatches": WM_MICRO,
+        "cpu_count": cores,
+        "t_seq_round_ms": t_seq * 1e3,
+        "t_pipe_round_ms": t_pipe * 1e3,
+        "speedup_x": speedup,
+        "bubble_frac_policy": float(np.mean(
+            [b.get("policy", 0.0) for b in bubbles])),
+        "bubble_frac_wm": float(np.mean(
+            [b.get("wm", 0.0) for b in bubbles])),
+        # 1F1B bound: live grads never exceed ONE micro-batch's tree
+        "peak_live_grads_bytes": int(peak_grad),
+    }
+    print(f"sequential {t_seq * 1e3:.1f} ms/round | pipelined "
+          f"{t_pipe * 1e3:.1f} ms/round | speedup {speedup:.2f}x | "
+          f"bubbles policy={result['bubble_frac_policy']:.2f} "
+          f"wm={result['bubble_frac_wm']:.2f} | cores={cores}")
+    grad_tree = sum(l.nbytes for l in jax.tree.leaves(state.params))
+    assert peak_grad == grad_tree, (peak_grad, grad_tree)
+    if cores >= 2:
+        # two real cores: overlapping the stages must not be slower than
+        # running them back-to-back
+        assert speedup >= 1.0, (
+            f"pipelined round slower than sequential on a {cores}-core "
+            f"host: {t_pipe * 1e3:.1f} ms vs {t_seq * 1e3:.1f} ms")
+    save("BENCH_pipeline", result)
+
+
+if __name__ == "__main__":
+    main()

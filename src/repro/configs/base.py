@@ -382,6 +382,18 @@ class RuntimeConfig:
     prefetch_to_device: bool = False  # jax.device_put from the prefetch
                                       # thread (H2D overlaps next collate)
     batch_buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)  # TPU-friendly pads
+    # -- pipelined training runtime (runtime/pipeline_exec.py) ---------------
+    # pipeline=True routes TrainerWorker.train_on_batch through the static
+    # per-submesh instruction schedule (RUN/SEND/RECV/FREE): the policy
+    # trainer and the world-model trainer run as pipeline stages on
+    # disjoint submeshes of the local device set, with microbatched
+    # gradient accumulation and FREE instructions bounding live grads to
+    # one micro-batch. On a 1-device host both submeshes share the device
+    # (schedule semantics identical, overlap nil).
+    pipeline: bool = False
+    pipeline_microbatches: int = 0   # micro-batches per round (0 = grad_accum)
+    pipeline_wm_devices: int = 0     # WM-submesh device count (0 = half the
+                                     # local devices when >= 2, else shared)
     # -- experience channels (runtime/experience.py) -------------------------
     # Backpressure when the segment channel is full: "drop_oldest" is the
     # paper's fully-asynchronous mode (producers never block); "drop_newest"

@@ -44,10 +44,33 @@ class TrainState(NamedTuple):
     version: jnp.ndarray            # i32 — published-policy version counter
 
 
-def init_train_state(cfg: ModelConfig, key) -> TrainState:
+def init_train_state(cfg: ModelConfig, key, *, mesh=None) -> TrainState:
+    """Build the live trainer state.
+
+    With ``mesh`` (any mesh carrying a ``data`` axis), the f32 Adam
+    moments are materialized under ``optim.zero.shard_moments_spec`` —
+    ZeRO-2: parameters stay replicated over ``data`` while each moment
+    tensor's largest divisible axis is sharded over it (paper §3.1,
+    "partition optimizer states ... supporting larger micro-batch
+    sizes"). On a single-device mesh this is a no-op, so the wiring is
+    unconditional in :class:`~repro.runtime.trainer.TrainerWorker`.
+    """
     from repro.models.policy import init_policy_params
     params = init_policy_params(cfg, key)
-    return TrainState(params=params, opt=adamw.init(params),
+    opt = adamw.init(params)
+    if mesh is not None and getattr(mesh, "devices", None) is not None \
+            and mesh.devices.size > 1:
+        from repro.sharding import rules
+        shapes = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+        pspec = rules.param_specs(cfg, shapes, mesh)
+        from jax.sharding import NamedSharding
+        params = jax.device_put(
+            params, jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                                 is_leaf=lambda x: not isinstance(x, dict)))
+        from repro.optim import zero
+        opt = zero.shard_opt_state(opt, mesh, param_specs=pspec)
+    return TrainState(params=params, opt=opt,
                       adv_norm=advnorm.init_adv_state(),
                       version=jnp.zeros((), jnp.int32))
 
@@ -196,32 +219,42 @@ def _microbatches(batch: TrajectoryBatch, n_micro: int):
     return slice_i, mb
 
 
-def train_step(state: TrainState, batch: TrajectoryBatch, *,
-               cfg: ModelConfig, rl: RLConfig,
-               remat: bool = False) -> Tuple[TrainState, Dict]:
-    """One optimizer step = ``rl.grad_accum`` micro-batch passes."""
-    n_micro = rl.grad_accum
-    slice_i, _ = _microbatches(batch, n_micro)
+# --------------------------------------------------------------------------
+# Stage functions. These ARE the training step: ``train_step`` composes
+# them under one jit (the fused path), and runtime/pipeline_exec.py jits
+# each one separately as a RUN instruction body — both paths execute the
+# same math, so parity is structural rather than asserted-after-the-fact.
+# --------------------------------------------------------------------------
+
+def zero_grads_like(params):
+    """Fresh f32 accumulator matching ``params`` (one per accumulation
+    window — the pipeline FREEs it after the optimizer update)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def microbatch_grads(params, micro: TrajectoryBatch,
+                     adv_state: AdvNormState, *, cfg: ModelConfig,
+                     rl: RLConfig, remat: bool = False):
+    """fwd_bwd stage: grads + (metrics, packed adv stats) for one
+    micro-batch against frozen params (eq. 7)."""
     grad_fn = jax.grad(
         functools.partial(loss_fn, cfg=cfg, rl=rl, remat=remat),
         has_aux=True)
+    return grad_fn(params, micro, adv_state)
 
-    def body(carry, i):
-        grads_acc, stats_acc = carry
-        micro = slice_i(i)
-        grads, (metrics, stats) = grad_fn(state.params, micro, state.adv_norm)
-        grads_acc = jax.tree.map(
-            lambda a, g: a + g.astype(jnp.float32) / n_micro,
-            grads_acc, grads)
-        return (grads_acc, stats_acc + stats), metrics
 
-    zero_grads = jax.tree.map(
-        lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
-    (grads, stats), metrics = jax.lax.scan(
-        body, (zero_grads, jnp.zeros((3,))), jnp.arange(n_micro))
-    metrics = jax.tree.map(lambda m: m[-1], metrics)
+def accumulate_grads(acc, grads, stats_acc, stats, n_micro: int):
+    """grad_reduce stage: fold one micro-batch's grads into the f32
+    accumulator (mean over the window) and sum the packed stats."""
+    acc = jax.tree.map(
+        lambda a, g: a + g.astype(jnp.float32) / n_micro, acc, grads)
+    return acc, stats_acc + stats
 
-    # --- optimizer update (params frozen until here — eq. 7) ----------------
+
+def apply_update(state: TrainState, grads, stats, metrics, *,
+                 rl: RLConfig) -> Tuple[TrainState, Dict]:
+    """optim_update stage: AdamW with the per-head lr tree, then fold the
+    deferred advantage stats (end-of-backprop aggregation, App. C.1)."""
     lr_p = adamw.warmup_schedule(rl.lr_policy, rl.warmup_steps)(state.opt.step)
     lr_v = adamw.warmup_schedule(rl.lr_value, rl.warmup_steps)(state.opt.step)
     lr_tree = _lr_tree(state.params, lr_p, lr_v)
@@ -229,13 +262,36 @@ def train_step(state: TrainState, batch: TrajectoryBatch, *,
         grads, state.opt, state.params, lr_tree,
         max_grad_norm=rl.max_grad_norm)
 
-    # --- deferred stats aggregation (end of backprop, App. C.1) -------------
     new_adv = advnorm.welford_update(state.adv_norm, stats)
+    metrics = dict(metrics)
     metrics["grad_norm"] = gnorm
     metrics["adv_count"] = new_adv.count
     new_state = TrainState(params=new_params, opt=new_opt, adv_norm=new_adv,
                            version=state.version + 1)
     return new_state, metrics
+
+
+def train_step(state: TrainState, batch: TrajectoryBatch, *,
+               cfg: ModelConfig, rl: RLConfig,
+               remat: bool = False) -> Tuple[TrainState, Dict]:
+    """One optimizer step = ``rl.grad_accum`` micro-batch passes."""
+    n_micro = rl.grad_accum
+    slice_i, _ = _microbatches(batch, n_micro)
+
+    def body(carry, i):
+        grads_acc, stats_acc = carry
+        micro = slice_i(i)
+        grads, (metrics, stats) = microbatch_grads(
+            state.params, micro, state.adv_norm, cfg=cfg, rl=rl, remat=remat)
+        grads_acc, stats_acc = accumulate_grads(grads_acc, grads, stats_acc,
+                                                stats, n_micro)
+        return (grads_acc, stats_acc), metrics
+
+    (grads, stats), metrics = jax.lax.scan(
+        body, (zero_grads_like(state.params), jnp.zeros((3,))),
+        jnp.arange(n_micro))
+    metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return apply_update(state, grads, stats, metrics, rl=rl)
 
 
 def _lr_tree(params, lr_policy, lr_value):

@@ -122,6 +122,13 @@ def main() -> None:
                          "transport, 'spawn' runs a supervised shared "
                          "inference tier process; default: each worker "
                          "keeps a colocated pool")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="run the pipelined training-runtime demo: policy "
+                         "trainer + world-model trainer as pipeline stages "
+                         "on submeshes of the local device set, driven by "
+                         "the static RUN/SEND/RECV/FREE schedules "
+                         "(runtime/pipeline_exec.py); reduced config, "
+                         "ignores --shape")
     ap.add_argument("--trace-out", default="", metavar="PATH",
                     help="write a Chrome-trace-event JSON (open in "
                          "Perfetto / chrome://tracing) covering every "
@@ -131,6 +138,9 @@ def main() -> None:
     if args.resume_journal and not args.journal_dir:
         ap.error("--resume-journal needs --journal-dir")
 
+    if args.pipeline:
+        _run_pipeline(args)
+        return
     if args.remote_rollout or args.serve_workers:
         _run_remote_rollout(args)
         return
@@ -191,6 +201,46 @@ def main() -> None:
             print(f"step {i}: loss {float(metrics['loss']):.4f} "
                   f"gnorm {float(metrics['grad_norm']):.2f} "
                   f"({time.perf_counter() - t0:.2f}s)")
+
+
+def _run_pipeline(args) -> None:
+    """Pipelined training-runtime demo (reduced config): the world-model
+    system with ``rt.pipeline`` on — the policy trainer's optimizer step
+    and the WM trainer run as pipeline stages on submeshes of the local
+    device list, one static instruction schedule per submesh."""
+    from repro.configs.base import RuntimeConfig, TelemetryConfig, WMConfig
+    from repro.wm.wm_system import AcceRLWMSystem
+
+    cfg = reduced(get_config(args.arch), layers=2, d_model=64)
+    rl = RLConfig(grad_accum=2, lr_policy=1e-4, lr_value=1e-3,
+                  fused_loss=args.fused_loss,
+                  kernel_dispatch=args.kernel_dispatch)
+    rt = RuntimeConfig(num_rollout_workers=2, inference_batch=4,
+                       pipeline=True,
+                       telemetry=TelemetryConfig(sink=bool(args.trace_out),
+                                                 trace_out=args.trace_out))
+    wm = WMConfig(imagine_horizon=2, history_frames=2, diffusion_steps=4,
+                  obs_train_interval=2, reward_train_interval=5)
+    system = AcceRLWMSystem(cfg, rl, rt, wm, suite="spatial",
+                            segment_horizon=4, max_episode_steps=8,
+                            imagination_batch=4)
+    layout = system.trainer._layout
+    print(f"pipeline: policy submesh {[str(d) for d in layout.policy.devices]}"
+          f" | wm submesh {[str(d) for d in layout.wm.devices]}"
+          f" | disjoint={layout.disjoint} | K={rl.grad_accum}")
+    t0 = time.time()
+    m = system.run_wm(train_steps=args.steps, wall_timeout_s=300.0)
+    pipe = system.trainer.pipeline
+    print(f"trained {m['train_steps']} policy steps "
+          f"({pipe.rounds} pipeline rounds) in {time.time() - t0:.1f}s | "
+          f"imagined {m['imagined_steps']} steps | "
+          f"wm updates {m['wm_updates']}")
+    print(f"bubble frac {pipe.last_bubble} | "
+          f"peak live grad bytes {pipe.peak_grad_bytes}")
+    if args.trace_out:
+        from repro.runtime import telemetry
+        n = telemetry.dump(args.trace_out, process_name="train-pipeline")
+        print(f"trace: {n} events -> {args.trace_out}")
 
 
 def _run_remote_rollout(args) -> None:

@@ -54,3 +54,52 @@ def moments_bytes_per_device(param_count: int, data_size: int,
     """Analytic check of the ZeRO-2 memory claim (2 × f32 moments)."""
     total = 2 * 4 * param_count
     return total / (data_size if zero else 1)
+
+
+# --------------------------------------------------------------------------
+# live-state wiring: turn the spec trees into actual device placements
+# --------------------------------------------------------------------------
+
+def moment_shardings(params, mesh, *, param_specs=None,
+                     data_axis: str = "data"):
+    """NamedSharding tree for the f32 moments of ``params`` on ``mesh``.
+
+    ``param_specs`` defaults to fully-replicated (pure ZeRO, no tensor
+    parallelism) — pass the tree from ``sharding.rules.param_specs`` to
+    compose ZeRO with the TP/FSDP layout.
+    """
+    from jax.sharding import NamedSharding
+
+    data_size = mesh.shape.get(data_axis, 1)
+    shapes = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+    if param_specs is None:
+        param_specs = jax.tree.map(lambda s: P(), shapes)
+    mspecs = shard_moments_spec(shapes, param_specs, data_axis=data_axis,
+                                data_size=data_size)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), mspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shard_opt_state(opt, mesh, *, param_specs=None, data_axis: str = "data"):
+    """Re-place an ``adamw.AdamWState`` so mu/nu live under the ZeRO specs."""
+    shardings = moment_shardings(opt.mu, mesh, param_specs=param_specs,
+                                 data_axis=data_axis)
+    return opt._replace(mu=jax.device_put(opt.mu, shardings),
+                        nu=jax.device_put(opt.nu, shardings))
+
+
+def realized_moments_bytes_per_device(opt):
+    """Measured per-device footprint of the moments, via addressable shards.
+
+    Returns the max over devices — on an even ZeRO layout every device
+    holds the same number of bytes, so this equals the analytic
+    ``moments_bytes_per_device`` when every tensor found a divisible axis.
+    """
+    per_device: dict = {}
+    for tree in (opt.mu, opt.nu):
+        for leaf in jax.tree.leaves(tree):
+            for shard in leaf.addressable_shards:
+                did = shard.device.id
+                per_device[did] = per_device.get(did, 0) + shard.data.nbytes
+    return max(per_device.values()) if per_device else 0

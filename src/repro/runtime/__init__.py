@@ -43,7 +43,21 @@ from repro.runtime.scheduler import (  # noqa: F401
     Scheduler,
 )
 from repro.runtime.inference import InferenceService  # noqa: F401
+from repro.runtime.pipeline_exec import (  # noqa: F401
+    Instruction,
+    PipelineExecutor,
+    PipelineOp,
+    Submesh,
+    SubmeshLayout,
+    build_train_schedules,
+    validate_schedules,
+)
 from repro.runtime.rollout import RolloutWorker  # noqa: F401
+from repro.runtime.step_program import (  # noqa: F401
+    StageSpec,
+    StepProgram,
+    build_train_step_program,
+)
 from repro.runtime.trainer import TrainerWorker  # noqa: F401
 from repro.runtime.transport import (  # noqa: F401
     ChannelClosed,

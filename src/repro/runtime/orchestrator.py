@@ -404,6 +404,11 @@ class AcceRLSystem:
             "sync_latency_s": self.store.last_sync_latency_s,
             "services": self.registry.snapshot(),
         }
+        if getattr(self.trainer, "pipeline", None) is not None:
+            pipe = self.trainer.pipeline
+            m["pipeline_rounds"] = pipe.rounds
+            m["pipeline_bubble"] = dict(pipe.last_bubble)
+            m["pipeline_peak_grad_bytes"] = pipe.peak_grad_bytes
         for attachment in self.attachments:
             attachment.extend_metrics(m, self)
         return m

@@ -29,7 +29,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.configs.base import ModelConfig, RLConfig, RuntimeConfig
-from repro.core.train_step import TrainState, init_train_state, make_train_step
+from repro.core.train_step import TrainState, init_train_state
 from repro.data.prefetch import Prefetcher
 from repro.data.trajectory import TrajectoryBatch
 from repro.models.transformer import FRONTEND_DIM
@@ -94,9 +94,35 @@ class TrainerWorker(Service):
         self.cfg, self.rl, self.rt = cfg, rl, rt
         self.source = source
         self.store = store
-        self.state: TrainState = init_train_state(
-            cfg, jax.random.PRNGKey(seed))
-        self._step_fn = make_train_step(cfg, rl, donate=False)
+
+        # Both drive modes build the step through the same IR
+        # (runtime/step_program.py) and materialize optimizer moments
+        # under the ZeRO-2 shardings (no-op on one device).
+        from repro.runtime import step_program
+        n_micro = rt.pipeline_microbatches or rl.grad_accum
+        if rt.pipeline:
+            from repro.runtime import pipeline_exec
+            self._layout = pipeline_exec.SubmeshLayout.split(
+                jax.devices(), wm_devices=rt.pipeline_wm_devices)
+            self._mesh = self._layout.policy.mesh()
+            self.program = step_program.build_train_step_program(
+                cfg, rl, n_micro=n_micro, mesh=self._mesh)
+            self.state: TrainState = init_train_state(
+                cfg, jax.random.PRNGKey(seed), mesh=self._mesh)
+            self.pipeline = pipeline_exec.PipelineExecutor(
+                self.program, self._layout, n_micro=n_micro,
+                metrics=self.metrics)
+            self._step_fn = None
+        else:
+            from repro.launch.mesh import make_local_mesh
+            self._mesh = make_local_mesh()
+            self.program = step_program.build_train_step_program(
+                cfg, rl, n_micro=n_micro,
+                mesh=self._mesh if self._mesh.devices.size > 1 else None)
+            self.state = init_train_state(
+                cfg, jax.random.PRNGKey(seed), mesh=self._mesh)
+            self.pipeline = None
+            self._step_fn = self.program.fused(donate=False)
         self.prefetcher = Prefetcher(
             source, batch_episodes,
             functools.partial(collate_segments, metrics=self.metrics),
@@ -148,12 +174,21 @@ class TrainerWorker(Service):
         self.started_at = time.monotonic()
         self._publish(0)
 
+    def set_wm_stage(self, stage_fn, feed_fn, *, wm_micro: int = 1) -> None:
+        """Attach the world-model trainer as the second pipeline stage
+        (pipeline mode only — see WorldModelAttachment.bind)."""
+        if self.pipeline is None:
+            raise RuntimeError("set_wm_stage requires rt.pipeline")
+        self.pipeline.set_wm_stage(stage_fn, feed_fn, wm_micro=wm_micro)
+
     def stop(self) -> None:
         was_running = bool(self._threads)
         super().stop()
         if was_running:
             self.prefetcher.stop()
             self.join(timeout=10.0)
+        if self.pipeline is not None:
+            self.pipeline.close()
 
     # -- loop -------------------------------------------------------------------
     def _run(self) -> None:
@@ -169,7 +204,11 @@ class TrainerWorker(Service):
             lag = version - float(np.mean(batch.policy_version))
             self.metrics.record("policy_lag", lag)
             self.metrics.observe("policy_lag", lag)
-            self.state, metrics = self._step_fn(self.state, batch)
+            if self.pipeline is not None:
+                self.state, metrics, _ = self.pipeline.run_round(
+                    self.state, batch)
+            else:
+                self.state, metrics = self._step_fn(self.state, batch)
             steps = int(self.metrics.inc("steps"))
             self.metrics.inc("samples", float(np.asarray(batch.mask).sum()))
             if steps % self.rt.weight_sync_interval == 0:

@@ -106,7 +106,8 @@ class WorldModelTrainer(Service):
     imagination workers read the same dict)."""
 
     def __init__(self, wm: WMConfig, wm_params: Dict, opts: Dict,
-                 frame_channel, *, batch: int = 32, seed: int = 0):
+                 frame_channel, *, batch: int = 32, seed: int = 0,
+                 driven: bool = False):
         super().__init__("wm-trainer", role="wm")
         self.wm = wm
         self.wm_params = wm_params            # shared mutable reference
@@ -117,38 +118,57 @@ class WorldModelTrainer(Service):
         self.frame_channel = frame_channel
         self.batch = batch
         self._key = jax.random.PRNGKey(seed + 1234)
+        # driven=True: cycles come from an external driver (the pipeline
+        # executor's WM stage) instead of this service's own loop
+        self.driven = driven
+        self._cycle = 0
 
     @property
     def updates(self) -> Dict[str, int]:
         return {"obs": int(self.metrics.counter("obs_updates")),
                 "reward": int(self.metrics.counter("reward_updates"))}
 
+    def sample_batch(self):
+        """Next B_wm batch, or None when the channel is still empty —
+        the pipeline executor's WM feed function."""
+        return self.frame_channel.sample(self.batch)
+
+    def train_cycle(self, batch) -> Dict[str, int]:
+        """One decoupled M_obs / M_reward cycle on a sampled B_wm batch
+        (§4.2) — the body of the free-running loop, and the pipeline
+        executor's ``wm_update`` stage when driven."""
+        self._cycle += 1
+        cycle = self._cycle
+        f1 = np.stack([b["next_frame"] for b in batch]).astype(np.float32)
+        f0 = np.stack([b["frame"] for b in batch]).astype(np.float32)
+        ac = np.stack([b["actions"] for b in batch])
+        sc = np.array([b["success"] for b in batch], np.float32)
+        with self.metrics.timer("busy_s"):
+            if cycle % self.wm.obs_train_interval == 0:
+                hist = np.repeat(f0[:, None], self.wm.history_frames,
+                                 axis=1)
+                self._key, sub = jax.random.split(self._key)
+                self.wm_params["obs"], self._obs_opt, _ = self._dn_step(
+                    self.wm_params["obs"], self._obs_opt, sub, f1, hist,
+                    ac)
+                self.metrics.inc("obs_updates")
+            if cycle % self.wm.reward_train_interval == 0:
+                self.wm_params["reward"], self._rew_opt, _ = \
+                    self._rw_step(self.wm_params["reward"],
+                                  self._rew_opt, f1, sc)
+                self.metrics.inc("reward_updates")
+        return {"cycle": cycle}
+
     def _run(self) -> None:
-        cycle = 0
         while not self._stop.is_set():
-            batch = self.frame_channel.sample(self.batch)
+            if self.driven:                     # pipeline-executor drive
+                time.sleep(0.05)
+                continue
+            batch = self.sample_batch()
             if batch is None:
                 time.sleep(0.05)
                 continue
-            cycle += 1
-            f1 = np.stack([b["next_frame"] for b in batch]).astype(np.float32)
-            f0 = np.stack([b["frame"] for b in batch]).astype(np.float32)
-            ac = np.stack([b["actions"] for b in batch])
-            sc = np.array([b["success"] for b in batch], np.float32)
-            with self.metrics.timer("busy_s"):
-                if cycle % self.wm.obs_train_interval == 0:
-                    hist = np.repeat(f0[:, None], self.wm.history_frames,
-                                     axis=1)
-                    self._key, sub = jax.random.split(self._key)
-                    self.wm_params["obs"], self._obs_opt, _ = self._dn_step(
-                        self.wm_params["obs"], self._obs_opt, sub, f1, hist,
-                        ac)
-                    self.metrics.inc("obs_updates")
-                if cycle % self.wm.reward_train_interval == 0:
-                    self.wm_params["reward"], self._rew_opt, _ = \
-                        self._rw_step(self.wm_params["reward"],
-                                      self._rew_opt, f1, sc)
-                    self.metrics.inc("reward_updates")
+            self.train_cycle(batch)
             time.sleep(0.001)
 
 
@@ -219,9 +239,16 @@ class WorldModelAttachment:
         self.img_trainer = trainer
         system.img_trainer = trainer
 
+        # pipeline mode: the WM trainer becomes the second pipeline stage
+        # on its own submesh — the executor drives train_cycle between
+        # policy micro-batches instead of the service's own loop
+        driven = rt.pipeline and getattr(trainer, "pipeline", None) is not None
         self.wm_trainer = system.registry.register(WorldModelTrainer(
             self.wm, self.wm_params, opts, system.frame_channel,
-            seed=seed))
+            seed=seed, driven=driven))
+        if driven:
+            trainer.set_wm_stage(self.wm_trainer.train_cycle,
+                                 self.wm_trainer.sample_batch)
         self.imaginers = [
             system.registry.register(ImaginationWorker(
                 i, cfg, self.wm, system.store, self.wm_params,
